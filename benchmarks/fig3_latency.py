@@ -1,0 +1,61 @@
+"""Fig. 3 — prediction latency of each mechanism on all 20 benchmarks.
+
+Prints one CSV row per (benchmark × mechanism) with the simulated FPGA
+latency (µs @10 MHz), plus summary geomean speedups matching the paper's
+headline claims:
+
+    paper: Vivado NoOpt ≈ 14× over MCU; MAFIA ≈ 4.2× over Vivado Auto Opt;
+           MAFIA ≈ 2.5× over Vivado+MAFIA.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.mechanisms import CYCLE_SCALE, MECHANISMS, run_mechanism
+from repro.configs.classical import BENCHMARKS, build
+
+__all__ = ["run", "collect"]
+
+
+def collect(trained: bool = False) -> list[dict]:
+    rows = []
+    for bench in BENCHMARKS:
+        row = {"benchmark": bench.name, "mcu_us": bench.mcu_baseline_us}
+        for mech in MECHANISMS:
+            dfg_m, _, _ = build(bench, trained=trained)
+            prog = run_mechanism(mech, dfg_m)
+            row[f"{mech}_us"] = prog.latency_us * CYCLE_SCALE[mech]
+            row[f"{mech}_lut"] = prog.lut_true
+            row[f"{mech}_dsp"] = prog.dsp_true
+        rows.append(row)
+    return rows
+
+
+def _geomean(xs) -> float:
+    xs = np.asarray(list(xs), float)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))
+
+
+def run() -> list[str]:
+    rows = collect()
+    out = ["fig3.benchmark,mcu_us,vivado_noopt_us,vivado_auto_us,"
+           "vivado_mafia_us,mafia_us"]
+    for r in rows:
+        out.append(
+            f"fig3.{r['benchmark']},{r['mcu_us']:.0f},"
+            f"{r['vivado_noopt_us']:.1f},{r['vivado_auto_us']:.1f},"
+            f"{r['vivado_mafia_us']:.1f},{r['mafia_us']:.1f}")
+    sp_mcu = _geomean(r["mcu_us"] / r["vivado_noopt_us"] for r in rows)
+    sp_auto = _geomean(r["vivado_auto_us"] / r["mafia_us"] for r in rows)
+    sp_hint = _geomean(r["vivado_mafia_us"] / r["mafia_us"] for r in rows)
+    sp_noopt = _geomean(r["vivado_noopt_us"] / r["vivado_auto_us"] for r in rows)
+    out.append(f"fig3.summary,noopt_over_mcu,{sp_mcu:.2f},paper,14")
+    out.append(f"fig3.summary,auto_over_noopt,{sp_noopt:.2f},paper,7")
+    out.append(f"fig3.summary,mafia_over_auto,{sp_auto:.2f},paper,4.2")
+    out.append(f"fig3.summary,mafia_over_vivado_mafia,{sp_hint:.2f},paper,2.5")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

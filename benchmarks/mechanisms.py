@@ -1,0 +1,132 @@
+"""The paper's five comparison mechanisms (§V-B), reconstructed from the
+compiler's ablation knobs.
+
+mechanism            order       PFs                                pipelining
+-------------------  ----------  ---------------------------------  ----------
+mcu                  (Table I measured latencies, Arduino Uno)
+vivado_noopt         sequential  PF=1 everywhere                    no
+vivado_auto          sequential  SpMV=10 fixed + small auto-unroll  no
+vivado_mafia         sequential  MAFIA PFs + fill-to-budget         no
+mafia                dataflow    greedy best-PF (Δlatency/ΔLUT)     yes
+
+Rationale:
+* Vivado executes one node at a time (no dataflow controller) → sequential.
+* SEEDOT's FPGA backend hard-codes SpMV PF=10 and adds conservative unroll
+  hints for the rest (paper §V-B) → a flat small unroll factor, clipped to
+  the template limit and the LUT budget.
+* "Vivado + MAFIA" imposes the MAFIA-optimizer PFs, then (because under
+  sequential execution even non-critical nodes matter) keeps raising every
+  node's PF until the resource budget is exhausted — exactly the manual
+  process §V-B describes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import node_types
+from repro.core.compiler import CompiledProgram, MafiaCompiler
+from repro.core.constraints import PFGroups
+from repro.core.cost_model import default_bank
+from repro.core.dfg import DFG
+from repro.core.fpga_model import ARTY_A7
+from repro.core.optimizer import CostContext, greedy_best_pf
+from repro.core.profiler import profile_pf1
+
+__all__ = ["MECHANISMS", "run_mechanism"]
+
+_AUTO_UNROLL = 8       # SEEDOT's conservative auto-hint unroll factor
+_SPMV_FIXED = 10       # SEEDOT's hand-optimized SpMV parallelism
+
+# C-HLS-generated RTL is less efficient per op than the hand-optimized
+# Verilog templates (§VI-A-3: "the hand-optimized implementation of each
+# matrix operation template allows MAFIA to more efficiently perform the
+# underlying arithmetic").  One calibration constant models that gap for
+# every Vivado-family mechanism; its value is set so Vivado-NoOpt lands at
+# the paper's measured 14× over the microcontroller (§VI-A), then all other
+# ratios are *predictions* checked against the paper in benchmarks/fig3.
+HLS_CYCLE_OVERHEAD = 1.75
+CYCLE_SCALE = {
+    "vivado_noopt": HLS_CYCLE_OVERHEAD,
+    "vivado_auto": HLS_CYCLE_OVERHEAD,
+    "vivado_mafia": HLS_CYCLE_OVERHEAD,
+    "mafia": 1.0,
+}
+
+
+def _fits(dfg: DFG, assignment: dict[str, int], bank) -> bool:
+    lut = sum(bank.lut(n.op, n.lut1, assignment[n.id]) for n in dfg.nodes.values())
+    dsp = sum(bank.dsp(n.op, assignment[n.id]) for n in dfg.nodes.values())
+    return lut <= ARTY_A7.luts and dsp <= ARTY_A7.dsps
+
+
+def _clip_to_budget(dfg: DFG, assignment: dict[str, int], bank) -> dict[str, int]:
+    """Lower PFs (largest first) until the design fits the board."""
+    asn = dict(assignment)
+    while not _fits(dfg, asn, bank):
+        nid = max(asn, key=lambda k: asn[k])
+        if asn[nid] == 1:
+            break
+        asn[nid] -= 1
+    return asn
+
+
+def _vivado_noopt(dfg: DFG) -> dict[str, int]:
+    return {nid: 1 for nid in dfg.nodes}
+
+
+def _vivado_auto(dfg: DFG) -> dict[str, int]:
+    bank = default_bank()
+    asn = {}
+    for nid, node in dfg.nodes.items():
+        spec = node_types.get(node.op)
+        if node.op == "spmv":
+            asn[nid] = min(_SPMV_FIXED, spec.max_pf(node.dims))
+        else:
+            asn[nid] = min(_AUTO_UNROLL, spec.max_pf(node.dims))
+    return _clip_to_budget(dfg, asn, bank)
+
+
+def _vivado_mafia(dfg: DFG) -> dict[str, int]:
+    """MAFIA PFs imposed on the sequential C-HLS program, then every node
+    raised until the budget is gone (manual hints, §V-B)."""
+    bank = default_bank()
+    groups = PFGroups.build(dfg)
+    ctx = CostContext(dfg, groups, ARTY_A7, backend="fpga", bank=bank)
+    res = greedy_best_pf(ctx, metric="latency_per_lut")
+    asn = dict(res.assignment)
+    # fill to budget: raise PFs round-robin while the design still fits
+    changed = True
+    while changed:
+        changed = False
+        for nid, node in dfg.nodes.items():
+            spec = node_types.get(node.op)
+            if asn[nid] >= spec.max_pf(node.dims):
+                continue
+            asn[nid] += 1
+            if _fits(dfg, asn, bank):
+                changed = True
+            else:
+                asn[nid] -= 1
+    return asn
+
+
+def run_mechanism(name: str, dfg: DFG) -> CompiledProgram:
+    profile_pf1(dfg, backend="fpga")
+    if name == "vivado_noopt":
+        comp = MafiaCompiler(order="sequential", pipelining=False)
+        return comp.compile(dfg, assignment=_vivado_noopt(dfg))
+    if name == "vivado_auto":
+        comp = MafiaCompiler(order="sequential", pipelining=False)
+        return comp.compile(dfg, assignment=_vivado_auto(dfg))
+    if name == "vivado_mafia":
+        comp = MafiaCompiler(order="sequential", pipelining=False)
+        return comp.compile(dfg, assignment=_vivado_mafia(dfg))
+    if name == "mafia":
+        comp = MafiaCompiler(order="dataflow", pipelining=True,
+                             strategy="greedy", metric="latency_per_lut")
+        return comp.compile(dfg)
+    raise ValueError(f"unknown mechanism {name!r}")
+
+
+MECHANISMS = ["vivado_noopt", "vivado_auto", "vivado_mafia", "mafia"]

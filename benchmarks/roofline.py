@@ -1,0 +1,61 @@
+"""§Roofline — render the dry-run roofline table from cached cell records.
+
+Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``)
+and prints one CSV row per (arch × shape × mesh) with the three terms, the
+dominant bottleneck, and the MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+__all__ = ["run", "load_records"]
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DEFAULT_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_opt")
+
+
+def _render(records: list[dict], label: str) -> list[str]:
+    out = [f"roofline[{label}].arch,shape,mesh,status,compute_s,memory_s,"
+           "collective_s,dominant,useful_flops_ratio,bytes_per_device_GB"]
+    for r in records:
+        tag = f"roofline[{label}].{r['arch']},{r['shape']},{r['mesh']}"
+        if r["status"] != "ok":
+            out.append(f"{tag},{r['status']},,,,,,")
+            continue
+        rf = r["roofline"]
+        mem_gb = r.get("arg_bytes_per_device", 0) / 1e9
+        out.append(
+            f"{tag},ok,{rf['compute_s']:.5f},{rf['memory_s']:.5f},"
+            f"{rf['collective_s']:.5f},{rf['dominant']},"
+            f"{rf['useful_flops_ratio']:.3f},{mem_gb:.2f}")
+    return out
+
+
+def run(dryrun_dir: str = DEFAULT_DIR) -> list[str]:
+    out = _render(load_records(dryrun_dir), "baseline")
+    if len(out) == 1:
+        out.append("roofline.note,no dry-run records found — run "
+                   "`python -m repro.launch.dryrun` first")
+        return out
+    opt = load_records(OPT_DIR)
+    if opt:
+        out += _render(opt, "optimized")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

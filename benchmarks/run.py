@@ -1,0 +1,60 @@
+"""Benchmark driver: one section per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+_SECTIONS = ["fig3", "fig4", "estimation", "greedy_vs_blackbox", "ablations",
+             "roofline", "throughput"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {_SECTIONS}")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else _SECTIONS
+
+    runners = {}
+    if "fig3" in wanted:
+        from benchmarks import fig3_latency
+        runners["fig3"] = fig3_latency.run
+    if "fig4" in wanted:
+        from benchmarks import fig4_resources
+        runners["fig4"] = fig4_resources.run
+    if "estimation" in wanted:
+        from benchmarks import estimation_error
+        runners["estimation"] = estimation_error.run
+    if "greedy_vs_blackbox" in wanted:
+        from benchmarks import greedy_vs_blackbox
+        runners["greedy_vs_blackbox"] = greedy_vs_blackbox.run
+    if "ablations" in wanted:
+        from benchmarks import ablations
+        runners["ablations"] = ablations.run
+    if "roofline" in wanted:
+        from benchmarks import roofline
+        runners["roofline"] = roofline.run
+    if "throughput" in wanted:
+        from benchmarks import throughput
+        runners["throughput"] = throughput.run
+
+    failed = 0
+    for name, fn in runners.items():
+        t0 = time.perf_counter()
+        try:
+            lines = fn()
+            print("\n".join(lines))
+            print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the suite running
+            failed += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

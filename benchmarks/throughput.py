@@ -1,0 +1,50 @@
+"""Beyond-paper: wall-clock inference throughput of the MAFIA-compiled
+classical models on this host (batched), compiled vs un-jitted reference —
+the TPU-adaptation counterpart of the paper's latency table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.classical import build
+from repro.core.executor import build_callable
+from repro.data.datasets import make_dataset
+
+__all__ = ["run"]
+
+_BENCHES = ["bonsai/usps-b", "protonn/usps-b", "bonsai/letter-m",
+            "protonn/mnist-m"]
+
+
+def _time(fn, *args, reps=20) -> float:
+    fn(*args)                       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    out = ["tput.benchmark,batch,us_per_sample_jit,us_per_sample_nojit"]
+    for name in _BENCHES:
+        dfg, params, cfg = build(name)
+        ds = name.split("/")[1]
+        _, _, Xte, _ = make_dataset(ds, n_train=64, n_test=256)
+        fn = build_callable(dfg, jit=True)
+        fn_ref = build_callable(dfg, jit=False)
+        xb = jnp.asarray(Xte[0])
+
+        us_jit = _time(lambda x: fn(x=x), xb) * 1e6
+        us_ref = _time(lambda x: fn_ref(x=x), xb, reps=3) * 1e6
+        out.append(f"tput.{name},1,{us_jit:.1f},{us_ref:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

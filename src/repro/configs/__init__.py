@@ -1,0 +1,15 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own classical-ML benchmark configs (:mod:`repro.configs.classical`)."""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    ArchSpec,
+    ShapeCell,
+    all_archs,
+    cells_for,
+    get_arch,
+)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchSpec", "ShapeCell", "all_archs",
+           "cells_for", "get_arch"]

@@ -1,0 +1,26 @@
+"""MAFIA core: matrix-DFG compiler with criticality-driven PF assignment.
+
+The paper's primary contribution (Fig. 1 pipeline) lives here:
+DFG IR → PF-1 profiler → latency/resource estimation models → Best-PF
+estimator (greedy / black-box) → dataflow scheduler (+ §IV-G pipelining) →
+executable program + simulated latency/resource report.
+"""
+
+from repro.core.compiler import CompiledProgram, MafiaCompiler
+from repro.core.constraints import PFGroups
+from repro.core.cost_model import EstimatorBank, default_bank, train_estimators
+from repro.core.dfg import DFG, GraphInput, Node
+from repro.core.executor import build_callable, execute
+from repro.core.fpga_model import ARTY_A7, FpgaBudget
+from repro.core.optimizer import CostContext, blackbox_best_pf, greedy_best_pf
+from repro.core.profiler import profile_pf1
+from repro.core.scheduler import Schedule, simulate
+from repro.core.tpu_model import TPU_V5E, TpuBudget, roofline_terms
+
+__all__ = [
+    "DFG", "Node", "GraphInput", "MafiaCompiler", "CompiledProgram",
+    "PFGroups", "EstimatorBank", "default_bank", "train_estimators",
+    "build_callable", "execute", "ARTY_A7", "FpgaBudget", "CostContext",
+    "greedy_best_pf", "blackbox_best_pf", "profile_pf1", "Schedule",
+    "simulate", "TPU_V5E", "TpuBudget", "roofline_terms",
+]

@@ -1,0 +1,149 @@
+"""MafiaCompiler — the end-to-end flow of Fig. 1.
+
+input DFG → PF-1 profiler → Best-PF estimator → scheduler generator →
+"Verilog" (JAX callable) + simulated latency/resource report.
+
+The compiler also exposes the ablation knobs needed to reconstruct the
+paper's comparison mechanisms (§V-B): execution order (dataflow vs the
+sequential C-HLS model), pipelining on/off, externally-imposed PF
+assignments (for the `Vivado Auto Opt` / `Vivado + MAFIA` baselines), and
+the optimizer strategy/benefit metric (§VI-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core import node_types
+from repro.core.constraints import PFGroups
+from repro.core.cost_model import EstimatorBank, default_bank
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable
+from repro.core.fpga_model import ARTY_A7, FpgaBudget
+from repro.core.optimizer import (
+    CostContext,
+    PFResult,
+    blackbox_best_pf,
+    greedy_best_pf,
+)
+from repro.core.profiler import profile_pf1
+from repro.core.scheduler import Schedule, pipeline_clusters, simulate
+from repro.core.tpu_model import TpuBudget
+
+__all__ = ["MafiaCompiler", "CompiledProgram"]
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    dfg: DFG
+    fn: Callable[..., dict[str, Any]]
+    assignment: dict[str, int]
+    pf_result: PFResult | None
+    schedule: Schedule
+    lut_true: float
+    dsp_true: float
+    backend: str
+    budget: Any
+
+    @property
+    def latency_cycles(self) -> float:
+        return self.schedule.total_cycles
+
+    @property
+    def latency_us(self) -> float:
+        return self.budget.cycles_to_us(self.schedule.total_cycles)
+
+    def __call__(self, **inputs: Any) -> dict[str, Any]:
+        return self.fn(**inputs)
+
+
+class MafiaCompiler:
+    def __init__(
+        self,
+        *,
+        backend: str = "fpga",
+        budget: FpgaBudget | TpuBudget | None = None,
+        strategy: str = "greedy",
+        metric: str = "latency_per_lut",
+        order: str = "dataflow",
+        pipelining: bool = True,
+        use_pallas: bool = False,
+        bank: EstimatorBank | None = None,
+    ) -> None:
+        if backend not in ("fpga", "tpu"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())
+        self.strategy = strategy
+        self.metric = metric
+        self.order = order
+        self.pipelining = pipelining
+        self.use_pallas = use_pallas
+        self.bank = bank or default_bank()
+
+    # ----------------------------------------------------------------- stages
+    def optimize(self, dfg: DFG) -> tuple[PFResult, PFGroups]:
+        profile_pf1(dfg, backend=self.backend)
+        groups = PFGroups.build(dfg)
+        ctx = CostContext(dfg, groups, self.budget, backend=self.backend, bank=self.bank)
+        if self.strategy == "greedy":
+            res = greedy_best_pf(ctx, metric=self.metric)  # type: ignore[arg-type]
+        elif self.strategy == "blackbox":
+            res = blackbox_best_pf(ctx)
+        elif self.strategy == "none":
+            pfs = [1] * len(groups.members)
+            res = PFResult(pfs, groups.assignment(pfs), ctx.critical(pfs)[1],
+                           ctx.lut_total(pfs), ctx.dsp_total(pfs), 0.0, 0)
+        else:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        groups.apply(res.group_pfs)
+        return res, groups
+
+    def compile(self, dfg: DFG, assignment: dict[str, int] | None = None) -> CompiledProgram:
+        """Full flow; pass ``assignment`` to impose external PFs (baselines).
+
+        ``pipelining`` may be True (paper §IV-G: always fuse linear-time
+        clusters), False, or ``"auto"`` (beyond-paper: fuse only when the
+        simulated schedule improves — a cluster's all-inputs-ready start
+        condition can *delay* branchy DFGs, see benchmarks/ablations.py).
+        """
+        pf_result: PFResult | None = None
+        if assignment is None:
+            pf_result, groups = self.optimize(dfg)
+            assignment = pf_result.assignment
+        else:
+            profile_pf1(dfg, backend=self.backend)
+            groups = PFGroups.build(dfg)
+            for nid, pf in assignment.items():
+                dfg.nodes[nid].pf = pf
+        if self.pipelining == "auto":
+            sched_p = simulate(dfg, assignment, order=self.order,
+                               pipelining=True, groups=groups)
+            sched_n = simulate(dfg, assignment, order=self.order,
+                               pipelining=False, groups=groups)
+            use_pipe = sched_p.total_cycles <= sched_n.total_cycles
+            sched = sched_p if use_pipe else sched_n
+        else:
+            use_pipe = bool(self.pipelining)
+            sched = simulate(dfg, assignment, order=self.order,
+                             pipelining=use_pipe, groups=groups)
+        fused = pipeline_clusters(dfg, groups, assignment) if use_pipe else []
+        fn = build_callable(dfg, fused_clusters=fused, use_pallas=self.use_pallas)
+        lut_true = sum(
+            node_types.get(n.op).lut(n.dims, assignment[n.id]) for n in dfg.nodes.values()
+        )
+        dsp_true = sum(
+            node_types.get(n.op).dsp(assignment[n.id]) for n in dfg.nodes.values()
+        )
+        return CompiledProgram(
+            dfg=dfg,
+            fn=fn,
+            assignment=assignment,
+            pf_result=pf_result,
+            schedule=sched,
+            lut_true=lut_true,
+            dsp_true=dsp_true,
+            backend=self.backend,
+            budget=self.budget,
+        )

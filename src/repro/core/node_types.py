@@ -1,0 +1,537 @@
+"""Operation registry — MAFIA's Parameterized Matrix Template Library (paper §IV-A).
+
+One :class:`OpSpec` per matrix-operation type.  Each spec bundles everything
+every compiler stage needs to know about the op:
+
+  * semantics        — a pure-jnp implementation (``jax_fn``) used by the
+                       executor and as the oracle for the Pallas kernels,
+  * shape rules      — ``infer_dims`` / ``out_shape`` / ``validate``,
+  * taxonomy         — ``linear_time`` (paper §IV-A: linear-time nodes must keep
+                       input PF == execution PF == output PF; non-linear-time
+                       nodes get data-shuffle logic around the execution unit),
+  * FPGA templates   — ``cycles(dims, pf)`` / ``lut(dims, pf)`` / ``dsp(pf)``:
+                       the ground-truth cost of the hand-written Verilog
+                       template at parallelism factor ``pf`` (these play the
+                       role of synthesize+simulate in the paper's PF-1
+                       profiler and model-training flow),
+  * TPU roofline     — ``flops(dims)`` / ``mem_bytes(dims)`` feeding the
+                       TPU cost model in :mod:`repro.core.tpu_model`,
+  * ``max_pf(dims)`` — beyond which the template cannot be parallelized.
+
+The FPGA cycle/LUT models are deliberately *not* of the exact functional form
+the paper's regression models assume (they contain ``log2`` reduction-tree and
+crossbar terms the regression cannot express) — so fitting the paper's models
+against them produces realistic, imperfect-but-rank-correct estimators, just
+as the paper reports in §VI-B.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.dfg import DFG, Node
+
+__all__ = ["OpSpec", "get", "all_ops", "register", "LINEAR_TIME_OPS", "NONLINEAR_TIME_OPS"]
+
+# Fixed-point width assumed by the templates (SeeDot-style 16-bit quantization).
+_BITS = 16
+_BYTES = _BITS // 8
+
+# Template micro-costs (LUTs), calibrated to small Artix-7 primitives.
+_LUT_MAC = 48        # one 16-bit multiply-accumulate PE mapped to fabric+DSP
+_LUT_ADD = 22        # one 16-bit adder PE
+_LUT_CMP = 18        # one 16-bit comparator PE
+_LUT_NONLIN = 210    # one table-based exp/sigmoid/tanh PE
+_LUT_ROUTE = 6       # crossbar routing cost multiplier (× pf·log2(pf))
+_FILL = 6            # pipeline fill cycles of every execution unit
+_ARB = 0.30          # per-PE arbitration overhead cycles multiplier (the βL·PF truth term)
+
+
+def _log2c(x: float) -> int:
+    return max(0, math.ceil(math.log2(max(1.0, x))))
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    name: str
+    linear_time: bool
+    dsp_per_pe: int
+    infer_dims: Callable[["DFG", "Node"], dict[str, int]] | None
+    out_shape: Callable[["DFG", "Node"], tuple[int, ...]]
+    jax_fn: Callable[[list[Any], dict[str, Any], dict[str, int]], Any]
+    flops: Callable[[dict[str, int]], float]
+    mem_bytes: Callable[[dict[str, int]], float]
+    cycles: Callable[[dict[str, int], int], float]
+    lut: Callable[[dict[str, int], int], float]
+    max_pf: Callable[[dict[str, int]], int]
+    has_reduction: bool = False  # parallel exec followed by partial-sum reduction
+
+    def dsp(self, pf: int) -> float:
+        """DSP[PF] = alpha_DSP * PF (paper §IV-B) — exact by construction."""
+        return float(self.dsp_per_pe * pf)
+
+    def validate(self, dfg: "DFG", node: "Node") -> None:
+        self.out_shape(dfg, node)  # raises on inconsistency
+
+
+_REGISTRY: dict[str, OpSpec] = {}
+
+
+def register(spec: OpSpec) -> OpSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate op {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> OpSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown op {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def all_ops() -> dict[str, OpSpec]:
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------- helpers
+def _numel(shape: tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _jnp():
+    import jax.numpy as jnp
+
+    return jnp
+
+
+# ----------------------------------------------------------------- elementwise family
+def _make_elementwise(
+    name: str,
+    fn_builder: Callable[[], Callable],
+    *,
+    binary: bool,
+    cycles_per_elem: float = 1.0,
+    lut_per_pe: int = _LUT_ADD,
+    dsp_per_pe: int = 0,
+    flops_per_elem: float = 1.0,
+) -> OpSpec:
+    def infer_dims(dfg: "DFG", node: "Node") -> dict[str, int]:
+        shapes = dfg.in_shapes(node.id)
+        if binary and "vec" not in node.params and len(shapes) != 2:
+            raise ValueError(f"{name} expects 2 inputs, got {len(shapes)}")
+        return {"n": _numel(shapes[0]), **node.dims}
+
+    def out_shape(dfg: "DFG", node: "Node") -> tuple[int, ...]:
+        shapes = dfg.in_shapes(node.id)
+        if binary:
+            other = node.params["vec"].shape if "vec" in node.params else shapes[1]
+            if tuple(other) != tuple(shapes[0]):
+                raise ValueError(f"{name}: shape mismatch {shapes[0]} vs {tuple(other)}")
+        return shapes[0]
+
+    def jax_fn(inputs: list[Any], params: dict[str, Any], dims: dict[str, int]) -> Any:
+        fn = fn_builder()
+        if binary:
+            b = params["vec"] if "vec" in params else inputs[1]
+            return fn(inputs[0], b)
+        return fn(inputs[0])
+
+    def cycles(dims: dict[str, int], pf: int) -> float:
+        # one element per PE per cycle, perfectly data-parallel (linear-time node)
+        return math.ceil(dims["n"] * cycles_per_elem / pf) + _FILL
+
+    def lut(dims: dict[str, int], pf: int) -> float:
+        return 90 + lut_per_pe * pf  # control FSM + PEs; no shuffler (linear-time)
+
+    return register(
+        OpSpec(
+            name=name,
+            linear_time=True,
+            dsp_per_pe=dsp_per_pe,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: flops_per_elem * d["n"],
+            mem_bytes=lambda d: ((3 if binary else 2) * d["n"]) * _BYTES,
+            cycles=cycles,
+            lut=lut,
+            max_pf=lambda d: max(1, d["n"]),
+        )
+    )
+
+
+_make_elementwise("add", lambda: (lambda a, b: _jnp().add(a, b)), binary=True)
+_make_elementwise("sub", lambda: (lambda a, b: _jnp().subtract(a, b)), binary=True)
+_make_elementwise(
+    "hadamard",
+    lambda: (lambda a, b: _jnp().multiply(a, b)),
+    binary=True,
+    lut_per_pe=_LUT_MAC,
+    dsp_per_pe=1,
+)
+_make_elementwise("relu", lambda: (lambda a: _jnp().maximum(a, 0.0)), binary=False, lut_per_pe=_LUT_CMP)
+_make_elementwise(
+    "exp", lambda: (lambda a: _jnp().exp(a)), binary=False,
+    cycles_per_elem=4.0, lut_per_pe=_LUT_NONLIN, flops_per_elem=8.0,
+)
+_make_elementwise(
+    "sigmoid",
+    lambda: (lambda a: 1.0 / (1.0 + _jnp().exp(-a))),
+    binary=False,
+    cycles_per_elem=4.0, lut_per_pe=_LUT_NONLIN, flops_per_elem=10.0,
+)
+_make_elementwise(
+    "tanh", lambda: (lambda a: _jnp().tanh(a)), binary=False,
+    cycles_per_elem=4.0, lut_per_pe=_LUT_NONLIN, flops_per_elem=10.0,
+)
+
+
+def _scalar_mul_spec() -> OpSpec:
+    def jax_fn(inputs, params, dims):
+        return inputs[0] * params["scalar"]
+
+    return register(
+        OpSpec(
+            name="scalar_mul",
+            linear_time=True,
+            dsp_per_pe=1,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=lambda dfg, node: dfg.in_shapes(node.id)[0],
+            jax_fn=jax_fn,
+            flops=lambda d: float(d["n"]),
+            mem_bytes=lambda d: 2.0 * d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + _FILL,
+            lut=lambda d, pf: 90 + _LUT_MAC * pf,
+            max_pf=lambda d: max(1, d["n"]),
+        )
+    )
+
+
+_scalar_mul_spec()
+
+
+# ----------------------------------------------------------- reduction-flavoured ops
+def _dot_spec() -> OpSpec:
+    """Vector dot product — linear-time, but parallel execution is followed by a
+    reduction of partial sums (the paper's own example motivating the γL/PF
+    latency term, §IV-B)."""
+
+    def out_shape(dfg, node):
+        a, b = dfg.in_shapes(node.id)
+        if a != b:
+            raise ValueError(f"dot: {a} vs {b}")
+        return (1,)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        return jnp.dot(inputs[0].ravel(), inputs[1].ravel())[None]
+
+    def cycles(d, pf):
+        return math.ceil(d["n"] / pf) + 2 * _log2c(pf) + _FILL
+
+    return register(
+        OpSpec(
+            name="dot",
+            linear_time=True,
+            has_reduction=True,
+            dsp_per_pe=1,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 2.0 * d["n"],
+            mem_bytes=lambda d: 2.0 * d["n"] * _BYTES,
+            cycles=cycles,
+            lut=lambda d, pf: 100 + (_LUT_MAC + _LUT_ADD) * pf,
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_dot_spec()
+
+
+def _reduce_sum_spec() -> OpSpec:
+    def out_shape(dfg, node):
+        s = dfg.in_shapes(node.id)[0]
+        return s[:-1] if len(s) > 1 else (1,)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        x = inputs[0]
+        r = jnp.sum(x, axis=-1)
+        return r[None] if r.ndim == 0 else r
+
+    return register(
+        OpSpec(
+            name="reduce_sum",
+            linear_time=True,
+            has_reduction=True,
+            dsp_per_pe=0,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: float(d["n"]),
+            mem_bytes=lambda d: d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + 2 * _log2c(pf) + _FILL,
+            lut=lambda d, pf: 90 + _LUT_ADD * pf,
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_reduce_sum_spec()
+
+
+def _argmax_spec() -> OpSpec:
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        return jnp.argmax(inputs[0].ravel())[None].astype("int32")
+
+    return register(
+        OpSpec(
+            name="argmax",
+            linear_time=True,
+            has_reduction=True,
+            dsp_per_pe=0,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=lambda dfg, node: (1,),
+            jax_fn=jax_fn,
+            flops=lambda d: float(d["n"]),
+            mem_bytes=lambda d: d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + 2 * _log2c(pf) + _FILL,
+            lut=lambda d, pf: 110 + _LUT_CMP * pf,
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_argmax_spec()
+
+
+# ------------------------------------------------------------ matmul family (non-linear)
+def _shuffle_lut(pf: int) -> float:
+    """Data-interface shuffler around a non-linear-time execution unit
+    (paper §IV-A / Fig. 2): crossbar grows ~ pf·log2(pf)."""
+    return _LUT_ROUTE * pf * _log2c(pf + 1)
+
+
+def _gemv_spec() -> OpSpec:
+    """Dense matrix(m,n) × vector(n) with the matrix as a static parameter."""
+
+    def infer_dims(dfg, node):
+        w = node.params["matrix"]
+        return {"m": int(w.shape[0]), "n": int(w.shape[1])}
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        w = node.params["matrix"]
+        if _numel(xs) != w.shape[1]:
+            raise ValueError(f"gemv: matrix {w.shape} vs input {xs}")
+        return (int(w.shape[0]),)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        return jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+
+    def cycles(d, pf):
+        # element-parallel MAC array over the m·n products, partial sums reduced
+        # per output row; arbitration grows with pf (the truth behind βL·PF).
+        work = d["m"] * d["n"]
+        return math.ceil(work / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
+
+    def lut(d, pf):
+        return 140 + _LUT_MAC * pf + _shuffle_lut(pf)
+
+    return register(
+        OpSpec(
+            name="gemv",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 2.0 * d["m"] * d["n"],
+            mem_bytes=lambda d: (d["m"] * d["n"] + d["m"] + d["n"]) * _BYTES,
+            cycles=cycles,
+            lut=lut,
+            max_pf=lambda d: max(1, (d["m"] * d["n"]) // 4),
+        )
+    )
+
+
+_gemv_spec()
+
+
+def _spmv_spec() -> OpSpec:
+    """Sparse matrix(m,n) × vector(n) — the dominant kernel of the paper's
+    benchmarks.  ``params['matrix']`` is dense-with-zeros; nnz is derived."""
+
+    def infer_dims(dfg, node):
+        w = np.asarray(node.params["matrix"])
+        nnz = int(np.count_nonzero(w))
+        return {"m": int(w.shape[0]), "n": int(w.shape[1]), "nnz": max(1, nnz)}
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        w = node.params["matrix"]
+        if _numel(xs) != w.shape[1]:
+            raise ValueError(f"spmv: matrix {w.shape} vs input {xs}")
+        return (int(w.shape[0]),)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        return jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+
+    def cycles(d, pf):
+        return math.ceil(d["nnz"] / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL + 8
+
+    def lut(d, pf):
+        # index-walking logic per PE is pricier than a dense MAC
+        return 200 + (_LUT_MAC + 24) * pf + _shuffle_lut(pf)
+
+    return register(
+        OpSpec(
+            name="spmv",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 2.0 * d["nnz"],
+            mem_bytes=lambda d: (2 * d["nnz"] + d["m"] + d["n"]) * _BYTES,
+            cycles=cycles,
+            lut=lut,
+            max_pf=lambda d: max(1, d["nnz"] // 4),
+        )
+    )
+
+
+_spmv_spec()
+
+
+def _matmul_spec() -> OpSpec:
+    def infer_dims(dfg, node):
+        a, b = dfg.in_shapes(node.id)
+        return {"m": a[0], "k": a[1], "n": b[1]}
+
+    def out_shape(dfg, node):
+        a, b = dfg.in_shapes(node.id)
+        if len(a) != 2 or len(b) != 2 or a[1] != b[0]:
+            raise ValueError(f"matmul: {a} @ {b}")
+        return (a[0], b[1])
+
+    def jax_fn(inputs, params, dims):
+        return inputs[0] @ inputs[1]
+
+    def cycles(d, pf):
+        work = d["m"] * d["k"] * d["n"]
+        return math.ceil(work / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
+
+    return register(
+        OpSpec(
+            name="matmul",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 2.0 * d["m"] * d["k"] * d["n"],
+            mem_bytes=lambda d: (d["m"] * d["k"] + d["k"] * d["n"] + d["m"] * d["n"]) * _BYTES,
+            cycles=cycles,
+            lut=lambda d, pf: 160 + _LUT_MAC * pf + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, (d["m"] * d["n"])),
+        )
+    )
+
+
+_matmul_spec()
+
+
+def _outer_spec() -> OpSpec:
+    def out_shape(dfg, node):
+        a, b = dfg.in_shapes(node.id)
+        return (_numel(a), _numel(b))
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        return jnp.outer(inputs[0].ravel(), inputs[1].ravel())
+
+    return register(
+        OpSpec(
+            name="outer",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=lambda dfg, node: {
+                "m": _numel(dfg.in_shapes(node.id)[0]),
+                "n": _numel(dfg.in_shapes(node.id)[1]),
+            },
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: float(d["m"] * d["n"]),
+            mem_bytes=lambda d: (d["m"] + d["n"] + d["m"] * d["n"]) * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["m"] * d["n"] / pf) + _ARB * pf + _FILL,
+            lut=lambda d, pf: 120 + _LUT_MAC * pf + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, d["m"] * d["n"] // 2),
+        )
+    )
+
+
+_outer_spec()
+
+
+def _sq_l2_spec() -> OpSpec:
+    """Squared L2 distance of input vector(d) to each column of params['points']
+    (d, m) → (m,).  The distance kernel of ProtoNN's RBF similarity."""
+
+    def infer_dims(dfg, node):
+        b = node.params["points"]
+        return {"d": int(b.shape[0]), "m": int(b.shape[1])}
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        b = node.params["points"]
+        if _numel(xs) != b.shape[0]:
+            raise ValueError(f"sq_l2: points {b.shape} vs input {xs}")
+        return (int(b.shape[1]),)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        diff = jnp.asarray(params["points"]) - inputs[0].ravel()[:, None]
+        return jnp.sum(diff * diff, axis=0)
+
+    def cycles(d, pf):
+        work = 2 * d["d"] * d["m"]  # sub + mac per element
+        return math.ceil(work / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
+
+    return register(
+        OpSpec(
+            name="sq_l2",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 3.0 * d["d"] * d["m"],
+            mem_bytes=lambda d: (d["d"] * d["m"] + d["d"] + d["m"]) * _BYTES,
+            cycles=cycles,
+            lut=lambda d, pf: 150 + (_LUT_MAC + _LUT_ADD) * pf + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, (d["d"] * d["m"]) // 4),
+        )
+    )
+
+
+_sq_l2_spec()
+
+
+LINEAR_TIME_OPS = frozenset(n for n, s in _REGISTRY.items() if s.linear_time)
+NONLINEAR_TIME_OPS = frozenset(n for n, s in _REGISTRY.items() if not s.linear_time)

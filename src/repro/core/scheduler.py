@@ -1,0 +1,195 @@
+"""Scheduler generator + discrete-event simulator (paper §IV-F, §IV-G).
+
+MAFIA executes the DFG in *data-flow order*: every node carries start/done
+signalling and fires as soon as all its producers are done, so data-independent
+nodes run concurrently — the inter-node parallelism C-HLS cannot express.
+
+``simulate`` is the cycle-level discrete-event model of that controller, using
+the *ground-truth* template cycle costs (the role synthesis+simulation plays in
+the paper's evaluation).  It supports:
+
+  * ``order='dataflow'``   — MAFIA's controller (ASAP firing),
+  * ``order='sequential'`` — the C-HLS execution model (one node at a time, in
+    topological order), used by the Vivado-family baselines in Fig. 3,
+  * ``pipelining=True``    — §IV-G: connected equal-PF linear-time clusters
+    execute as a super-node pipeline (elements stream through the stages, no
+    intermediate buffers): latency = bottleneck-stage cycles + sum of stage
+    fill overheads, instead of the sum of full stage latencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from repro.core import node_types
+from repro.core.constraints import PFGroups
+from repro.core.dfg import DFG
+
+__all__ = ["Schedule", "simulate", "pipeline_clusters"]
+
+_FILL = 6  # must match node_types._FILL (stage fill cycles)
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Result of simulating one execution of the DFG."""
+
+    total_cycles: float
+    start: dict[str, float]
+    end: dict[str, float]
+    order: str
+    pipelined_clusters: list[list[str]]
+
+    def as_intervals(self) -> list[tuple[str, float, float]]:
+        return sorted(
+            ((nid, self.start[nid], self.end[nid]) for nid in self.start),
+            key=lambda t: t[1],
+        )
+
+
+def pipeline_clusters(dfg: DFG, groups: PFGroups, assignment: dict[str, int]) -> list[list[str]]:
+    """Clusters eligible for §IV-G pipelining: connected linear-time nodes.
+    The PF constraints already force one PF per cluster; assert it."""
+    clusters = []
+    topo_idx = {nid: i for i, nid in enumerate(dfg.topo_order())}
+    for mem in groups.linear_clusters():
+        if len(mem) < 2:
+            continue
+        pfs = {assignment[nid] for nid in mem}
+        assert len(pfs) == 1, f"linear cluster {mem} has mixed PFs {pfs}"
+        if _reentrant(dfg, set(mem)):
+            # a path leaves the cluster and re-enters it: collapsing it to a
+            # super-node would create a cycle (the pipeline could never
+            # satisfy its own start condition) — skip pipelining it.
+            continue
+        clusters.append(sorted(mem, key=topo_idx.__getitem__))
+    return clusters
+
+
+def _reentrant(dfg: DFG, mem: set[str]) -> bool:
+    """True if some path exits ``mem`` through a non-member and returns."""
+    frontier = [
+        s for nid in mem for s in dfg.successors(nid) if s not in mem
+    ]
+    seen: set[str] = set()
+    while frontier:
+        nid = frontier.pop()
+        if nid in seen:
+            continue
+        seen.add(nid)
+        for s in dfg.successors(nid):
+            if s in mem:
+                return True
+            if s not in seen:
+                frontier.append(s)
+    return False
+
+
+def _node_cycles(dfg: DFG, nid: str, assignment: dict[str, int]) -> float:
+    node = dfg.nodes[nid]
+    return node_types.get(node.op).cycles(node.dims, assignment[nid])
+
+
+def _pipelined_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int]) -> float:
+    """Super-node latency: elements stream through all stages concurrently —
+    bottleneck stage's streaming time + per-stage fill."""
+    stage = [_node_cycles(dfg, nid, assignment) - _FILL for nid in cluster]
+    return max(stage) + _FILL * len(cluster)
+
+
+def simulate(
+    dfg: DFG,
+    assignment: dict[str, int],
+    *,
+    order: str = "dataflow",
+    pipelining: bool = True,
+    groups: PFGroups | None = None,
+) -> Schedule:
+    groups = groups or PFGroups.build(dfg)
+    clusters = pipeline_clusters(dfg, groups, assignment) if pipelining else []
+    cluster_of: dict[str, int] = {}
+    for ci, mem in enumerate(clusters):
+        for nid in mem:
+            cluster_of[nid] = ci
+
+    # Build the atom graph: pipelined clusters collapse to a single atom.
+    atoms: list[tuple[str, list[str]]] = []  # (atom id, member node ids)
+    atom_of: dict[str, int] = {}
+    for nid in dfg.topo_order():
+        if nid in cluster_of:
+            ci = cluster_of[nid]
+            aid = f"cluster{ci}"
+            found = next((i for i, (a, _) in enumerate(atoms) if a == aid), None)
+            if found is None:
+                atoms.append((aid, [nid]))
+                atom_of[nid] = len(atoms) - 1
+            else:
+                atoms[found][1].append(nid)
+                atom_of[nid] = found
+        else:
+            atoms.append((nid, [nid]))
+            atom_of[nid] = len(atoms) - 1
+
+    def atom_cycles(ai: int) -> float:
+        aid, mem = atoms[ai]
+        if len(mem) > 1:
+            return _pipelined_cycles(dfg, mem, assignment)
+        return _node_cycles(dfg, mem[0], assignment)
+
+    def atom_preds(ai: int) -> set[int]:
+        _, mem = atoms[ai]
+        preds = set()
+        for nid in mem:
+            for src in dfg.predecessors(nid):
+                pa = atom_of[src]
+                if pa != ai:
+                    preds.add(pa)
+        return preds
+
+    n_atoms = len(atoms)
+    preds = [atom_preds(i) for i in range(n_atoms)]
+    start: dict[int, float] = {}
+    end: dict[int, float] = {}
+
+    if order == "dataflow":
+        # ASAP event-driven firing (§IV-F): a pipeline starts only when ALL
+        # nodes supplying its inputs are done (§IV-G) — preds is exactly that.
+        remaining = {i: len(preds[i]) for i in range(n_atoms)}
+        ready = [(0.0, i) for i in range(n_atoms) if remaining[i] == 0]
+        heapq.heapify(ready)
+        earliest = {i: 0.0 for i in range(n_atoms)}
+        succs: dict[int, list[int]] = {i: [] for i in range(n_atoms)}
+        for i in range(n_atoms):
+            for p in preds[i]:
+                succs[p].append(i)
+        while ready:
+            t, ai = heapq.heappop(ready)
+            start[ai] = t
+            end[ai] = t + atom_cycles(ai)
+            for s in succs[ai]:
+                earliest[s] = max(earliest[s], end[ai])
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    heapq.heappush(ready, (earliest[s], s))
+        total = max(end.values()) if end else 0.0
+    elif order == "sequential":
+        # C-HLS model: one node at a time in topological order.
+        t = 0.0
+        for ai in range(n_atoms):
+            start[ai] = t
+            t += atom_cycles(ai)
+            end[ai] = t
+        total = t
+    else:
+        raise ValueError(f"unknown order {order!r}")
+
+    node_start = {nid: start[atom_of[nid]] for nid in dfg.nodes}
+    node_end = {nid: end[atom_of[nid]] for nid in dfg.nodes}
+    return Schedule(
+        total_cycles=total,
+        start=node_start,
+        end=node_end,
+        order=order,
+        pipelined_clusters=clusters,
+    )

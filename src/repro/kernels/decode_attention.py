@@ -1,0 +1,116 @@
+"""GQA decode attention — Pallas TPU kernel.
+
+One new token per sequence against a (B, S, KV, dh) cache: the decode cells'
+entire roofline is KV-cache bandwidth, so the kernel's job is to read each
+cache block exactly once and keep everything else (scores, softmax stats,
+partial outputs) in VMEM.
+
+Grid = (B·KV, kv_blocks); the trailing kv axis is sequential, carrying
+running (m, l, acc) in VMEM scratch — flash-decoding without the cross-
+device split (the planner already shards the batch/head dims; sequence-
+sharded caches reduce via GSPMD in the jnp path).
+
+Per-sequence valid lengths arrive via scalar prefetch and mask the tail
+block.  Oracle: :func:`repro.kernels.ref.decode_attention_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+DEFAULT_BK = 256
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk: int, g: int, kv: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // kv
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # (g, dh) fp32-scaled
+    k = k_ref[0]                                    # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                               # (g, bk)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    s = jnp.where(kpos < len_ref[b], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, H, dh) — one new token per sequence
+    k_cache: jax.Array,      # (B, S, KV, dh)
+    v_cache: jax.Array,      # (B, S, KV, dh)
+    cache_len: jax.Array,    # (B,) int32 — valid prefix per sequence
+    *,
+    bk: int = DEFAULT_BK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash-decoding step → (B, H, dh)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+
+    qg = (q.reshape(B, KV, G, dh).reshape(B * KV, G, dh)
+          .astype(jnp.float32) * scale)
+    kh = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    vh = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    bk_eff = min(bk, S)
+    pad = (-S) % bk_eff
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0)))
+    nk = (S + pad) // bk_eff
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk_eff, g=G, kv=KV),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * KV, nk),
+            in_specs=[
+                pl.BlockSpec((1, G, dh), lambda bh, ki, lens: (bh, 0, 0)),
+                pl.BlockSpec((1, bk_eff, dh), lambda bh, ki, lens: (bh, ki, 0)),
+                pl.BlockSpec((1, bk_eff, dh), lambda bh, ki, lens: (bh, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, G, dh), lambda bh, ki, lens: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, kh, vh)
+    return out.reshape(B, KV, G, dh).reshape(B, H, dh)

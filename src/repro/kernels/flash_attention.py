@@ -1,0 +1,140 @@
+"""Fused flash attention (forward) — Pallas TPU kernel.
+
+Why this kernel exists (EXPERIMENTS.md §Perf): the pure-jnp streaming
+attention in :mod:`repro.models.attention` never materializes the (Sq × Sk)
+score matrix *logically*, but at the HLO level each (Sq × kv_chunk) fp32
+probability block still makes an HBM round trip per elementwise op — the
+measured memory term of attention-heavy cells is dominated by exactly that
+traffic (casting p to bf16 made it *worse*: one more convert kernel).  The
+fix is fusion: scores, softmax statistics and probabilities live entirely
+in VMEM/VREGs; HBM sees only Q/K/V reads and one output write.
+
+Schedule: grid = (batch·kv_head, q_blocks, kv_blocks); the trailing kv axis
+is sequential on TPU, so the running (m, l, acc) survive in VMEM scratch
+across kv steps and the output tile is written on the last step.  Blocks
+are MXU-aligned (128 × head_dim).  GQA is handled by processing one KV head
+per grid row with its G query heads folded into the q-block rows.
+
+Validated against :func:`repro.models.attention.plain_attention` in
+interpret mode (tests/test_kernels.py); the pure-jnp path remains the
+oracle and the GSPMD/dry-run path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fused"]
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, g: int, sk: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq·g, dh)
+    k = k_ref[0]                                   # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                                      # (bq·g, bk)
+
+    # causal + tail masking on *token* positions (q rows are g-interleaved)
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq * g, bk), 0) // g
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq * g, bk), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= kpos <= qpos
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # stays in VMEM — the point
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fused(
+    q: jax.Array,            # (B, Sq, H, dh)
+    k: jax.Array,            # (B, Sk, KV, dh)
+    v: jax.Array,            # (B, Sk, KV, dh)
+    *,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused attention; one pallas_call, O(1) HBM traffic for the scores."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+
+    # layout: one grid row per (batch, kv head); its G query heads are
+    # interleaved into the q-row axis so one MXU matmul covers all of them
+    qg = (q.reshape(B, Sq, KV, G, dh)
+           .transpose(0, 2, 1, 3, 4)
+           .reshape(B * KV, Sq * G, dh))
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, dh)
+
+    bq_eff = min(bq, Sq)
+    bk_eff = min(bk, Sk)
+    pad_q = (-Sq) % bq_eff
+    pad_k = (-Sk) % bk_eff
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, pad_q * G), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    nq = (Sq + pad_q) // bq_eff
+    nk = (Sk + pad_k) // bk_eff
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq_eff, bk=bk_eff, g=G, sk=Sk, causal=causal,
+            scale=scale,
+        ),
+        grid=(B * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_eff * G, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk_eff, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk_eff, dh), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_eff * G, dh), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qg.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_eff * G, 1), jnp.float32),
+            pltpu.VMEM((bq_eff * G, 1), jnp.float32),
+            pltpu.VMEM((bq_eff * G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kh, vh)
+
+    out = out[:, : Sq * G, :].reshape(B, KV, Sq, G, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sq, H, dh)

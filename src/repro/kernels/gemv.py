@@ -1,0 +1,100 @@
+"""Dense tiled GEMV / matmul — Pallas TPU kernels.
+
+The dense counterparts of :mod:`repro.kernels.spmv`: batched matrix–vector
+(``y = x @ W.T``, the gemv DFG template) and a generic tiled matmul.  Both use
+the standard TPU schedule — grid over (output tiles × contraction tiles) with
+the trailing contraction dimension sequential, fp32 accumulation in a VMEM
+scratch tile, output written on the last contraction step.  MXU-aligned
+(128 × 128) tiles by default.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gemv", "matmul"]
+
+DEFAULT_T = 128
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, transpose_b: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if transpose_b:
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "transpose_b", "interpret")
+)
+def _matmul_call(a, b, *, bm, bn, bk, transpose_b, interpret):
+    M, K = a.shape
+    N = b.shape[0] if transpose_b else b.shape[1]
+    b_spec = (
+        pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))
+        if transpose_b
+        else pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    )
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, transpose_b=transpose_b),
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)), b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _pad2(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    return jnp.pad(x, ((0, (-x.shape[0]) % m0), (0, (-x.shape[1]) % m1)))
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    transpose_b: bool = False,
+    tile: int = DEFAULT_T,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Tiled ``a @ b`` (or ``a @ b.T``) with fp32 accumulation."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    M, K = a.shape
+    N = b.shape[0] if transpose_b else b.shape[1]
+    bm = min(tile, max(8, 1 << (M - 1).bit_length()))
+    bn = min(tile, max(8, 1 << (N - 1).bit_length()))
+    bk = min(tile, max(8, 1 << (K - 1).bit_length()))
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bn, bk) if transpose_b else _pad2(b, bk, bn)
+    out = _matmul_call(ap, bp, bm=bm, bn=bn, bk=bk, transpose_b=transpose_b,
+                       interpret=interpret)
+    return out[:M, :N]
+
+
+def gemv(w: jax.Array, x: jax.Array, *, tile: int = DEFAULT_T,
+         interpret: bool | None = None) -> jax.Array:
+    """Batched GEMV: ``w`` (m, n), ``x`` (B, n) → (B, m) = x @ w.T."""
+    return matmul(x, w, transpose_b=True, tile=tile, interpret=interpret)

@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the numerical ground truth the kernels are verified against
+(interpret mode on CPU, shape/dtype sweeps in tests/test_kernels.py).
+
+Note on the TPU adaptation (DESIGN.md §2): MAFIA's benchmarks are KB-sized
+models processed one sample at a time on a 10 MHz FPGA.  A TPU serving the
+same models is throughput-oriented, so every classical-ML kernel here is
+*batched* — PF reappears intra-chip as the Pallas grid parallelism over
+(batch × row) tiles, and inter-chip as the mesh sharding degree.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "spmv_ref", "gemv_ref", "matmul_ref", "linear_chain_ref",
+    "decode_attention_ref", "mamba2_ssd_ref",
+]
+
+
+def spmv_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched SpMV oracle: ``w`` dense-with-zeros (m, n), ``x`` (B, n) → (B, m)."""
+    return x @ w.T
+
+
+def gemv_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched GEMV oracle: ``w`` (m, n), ``x`` (B, n) → (B, m)."""
+    return x @ w.T
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a @ b
+
+
+# ------------------------------------------------------------- linear pipeline
+# A fused linear-time cluster is a chain of stages applied to a streaming
+# value.  Stage forms (op, operand):
+#   ("scalar_mul", c)      x * c
+#   ("add_vec", v)         x + v          (v broadcast over batch)
+#   ("sub_vec", v)         x - v
+#   ("hadamard_vec", v)    x * v
+#   ("tanh"|"sigmoid"|"relu"|"exp", None)
+#   ("add_arr"|"sub_arr"|"hadamard_arr", i)  — second operand is extras[i],
+#                                              same shape as the stream.
+Stage = tuple[str, object]
+
+
+def apply_stage(x: jax.Array, stage: Stage, extras: Sequence[jax.Array]) -> jax.Array:
+    op, operand = stage
+    if op == "scalar_mul":
+        return x * operand
+    if op == "add_vec":
+        return x + operand
+    if op == "sub_vec":
+        return x - operand
+    if op == "hadamard_vec":
+        return x * operand
+    if op == "tanh":
+        return jnp.tanh(x)
+    if op == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if op == "relu":
+        return jnp.maximum(x, jnp.zeros((), x.dtype))
+    if op == "exp":
+        return jnp.exp(x)
+    if op == "add_arr":
+        return x + extras[operand]
+    if op == "sub_arr":
+        return x - extras[operand]
+    if op == "hadamard_arr":
+        return x * extras[operand]
+    raise ValueError(f"unknown stage op {op!r}")
+
+
+def linear_chain_ref(
+    x: jax.Array, stages: Sequence[Stage], extras: Sequence[jax.Array] = ()
+) -> jax.Array:
+    for stage in stages:
+        x = apply_stage(x, stage, extras)
+    return x
+
+
+# ------------------------------------------------------------ decode attention
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, D) — one new token per sequence
+    k: jax.Array,          # (B, S, KV, D) — KV cache
+    v: jax.Array,          # (B, S, KV, D)
+    cache_len: jax.Array,  # (B,) int32 — valid prefix length per sequence
+) -> jax.Array:
+    """GQA decode attention oracle → (B, H, D).  fp32 softmax accumulation."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    # scores: (B, KV, G, S)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kf) * scale
+    mask = jnp.arange(S)[None, :] < cache_len[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- mamba2 SSD
+def mamba2_ssd_ref(
+    x: jax.Array,      # (B, S, H, P)  — dt-scaled inputs
+    a_log: jax.Array,  # (B, S, H)     — per-step decay logits (<= 0)
+    b: jax.Array,      # (B, S, N)     — input projection (shared across heads)
+    c: jax.Array,      # (B, S, N)     — output projection
+) -> jax.Array:
+    """Sequential state-space recurrence oracle → (B, S, H, P).
+
+        h_t = exp(a_t) * h_{t-1} + b_t ⊗ x_t        h ∈ (N, P) per head
+        y_t = c_t @ h_t
+    """
+    Bsz, S, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = a_log.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct = inp           # (B,H,P), (B,H), (B,N), (B,N)
+        h = jnp.exp(at)[:, :, None, None] * h + jnp.einsum("bn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,156 @@
+"""Block-sparse matrix–vector/batch product (SpMV) — Pallas TPU kernel.
+
+The paper's dominant kernel (§V-B: SEEDOT hand-optimizes SpMV; §IV-E: MAFIA's
+optimizer gives the SpMV node PFs from 3 to 71).  A CUDA/FPGA SpMV walks
+per-element index lists; that access pattern starves the MXU.  The TPU-native
+adaptation (DESIGN.md §2) is **block-CSR**: the weight matrix is cut into
+(bm × bk) tiles aligned to the MXU, all-zero tiles are dropped at pack time,
+and the kernel streams only the surviving tiles.  Tile coordinates arrive via
+scalar prefetch, so the column index of each tile drives the BlockSpec
+index_map of the activation operand — the canonical TPU sparse pattern.
+
+Grid: (batch_blocks, row_blocks, J) where J = max surviving tiles per row
+block; the trailing grid dimension is sequential on TPU, so the output block
+is accumulated in place across J steps.  PF maps to how many (batch × row)
+tiles execute concurrently (intra-chip) and to the mesh sharding of the row
+dimension (inter-chip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pack_bcsr", "PackedSpmv", "spmv", "DEFAULT_BM", "DEFAULT_BK"]
+
+DEFAULT_BM = 128  # row-tile (MXU output dim)
+DEFAULT_BK = 128  # contraction tile (MXU lane dim)
+DEFAULT_BB = 128  # batch tile
+
+
+def _pad_to(x: np.ndarray, axis: int, mult: int) -> np.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedSpmv:
+    """Host-side packed block-CSR weight: drop all-zero (bm × bk) tiles."""
+
+    data: jax.Array       # (row_blocks, J, bm, bk) surviving tiles (zero-padded)
+    col_idx: jax.Array    # (row_blocks, J) int32 — column-block of each tile
+    valid: jax.Array      # (row_blocks, J) int32 — 1 for real tiles, 0 padding
+    m: int                # true output rows
+    n: int                # true input cols
+    bm: int
+    bk: int
+
+    @property
+    def row_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def j_max(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def density(self) -> float:
+        """Fraction of tiles kept — the bandwidth saving vs a dense GEMV."""
+        total = self.row_blocks * ((self.n + self.bk - 1) // self.bk)
+        return float(np.asarray(self.valid).sum()) / max(1, total)
+
+
+def pack_bcsr(w: np.ndarray, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK) -> PackedSpmv:
+    w = np.asarray(w)
+    m, n = w.shape
+    wp = _pad_to(_pad_to(w, 0, bm), 1, bk)
+    rb, kb = wp.shape[0] // bm, wp.shape[1] // bk
+    tiles = wp.reshape(rb, bm, kb, bk).swapaxes(1, 2)       # (rb, kb, bm, bk)
+    keep = np.abs(tiles).sum(axis=(2, 3)) != 0               # (rb, kb)
+    j_max = max(1, int(keep.sum(axis=1).max()))
+    data = np.zeros((rb, j_max, bm, bk), wp.dtype)
+    col_idx = np.zeros((rb, j_max), np.int32)
+    valid = np.zeros((rb, j_max), np.int32)
+    for r in range(rb):
+        cols = np.nonzero(keep[r])[0]
+        data[r, : len(cols)] = tiles[r, cols]
+        col_idx[r, : len(cols)] = cols
+        valid[r, : len(cols)] = 1
+    return PackedSpmv(
+        data=jnp.asarray(data), col_idx=jnp.asarray(col_idx),
+        valid=jnp.asarray(valid), m=m, n=n, bm=bm, bk=bk,
+    )
+
+
+def _spmv_kernel(col_idx_ref, valid_ref, x_ref, data_ref, out_ref):
+    """One grid step: out[ib, im] += x[ib, col_idx[im, j]] @ data[im, j].T."""
+    _, im, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(valid_ref[im, j] == 1)
+    def _accum():
+        tile = data_ref[0, 0]                     # (bm, bk)
+        x = x_ref[...]                            # (bb, bk)
+        out_ref[...] += jax.lax.dot_general(
+            x, tile, (((1,), (1,)), ((), ())),    # x @ tile.T
+            preferred_element_type=out_ref.dtype,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def _spmv_call(packed_data, col_idx, valid, x_pad, *, bb: int, interpret: bool):
+    rb, j_max, bm, bk = packed_data.shape
+    bpad = x_pad.shape[0]
+    grid = (bpad // bb, rb, j_max)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # activation block chosen by the *prefetched* tile column
+                pl.BlockSpec((bb, bk), lambda ib, im, j, ci, va: (ib, ci[im, j])),
+                pl.BlockSpec((1, 1, bm, bk), lambda ib, im, j, ci, va: (im, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bb, bm), lambda ib, im, j, ci, va: (ib, im)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bpad, rb * bm), jnp.float32),
+        interpret=interpret,
+    )(col_idx, valid, x_pad, packed_data)
+
+
+def spmv(
+    packed: PackedSpmv,
+    x: jax.Array,
+    *,
+    bb: int = DEFAULT_BB,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched block-sparse product: ``x`` (B, n) → (B, m) = x @ W.T."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, n = x.shape
+    if n != packed.n:
+        raise ValueError(f"x cols {n} != packed n {packed.n}")
+    bb = min(bb, max(8, 1 << (B - 1).bit_length()))
+    x_pad = jnp.pad(
+        x.astype(jnp.float32), ((0, (-B) % bb), (0, (-n) % packed.bk))
+    )
+    out = _spmv_call(
+        packed.data.astype(jnp.float32), packed.col_idx, packed.valid, x_pad,
+        bb=bb, interpret=interpret,
+    )
+    return out[:B, : packed.m]

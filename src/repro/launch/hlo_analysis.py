@@ -1,0 +1,426 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once** — a
+scanned-layer model under-reports FLOPs by ~n_layers× (verified on XLA CPU:
+a 10-iteration ``lax.scan`` of a matmul reports exactly 1/10 the unrolled
+FLOPs).  It also has no collective term.  This module re-derives all three
+roofline inputs from the optimized per-device HLO module, multiplying
+``while`` bodies by their trip count (XLA's ``known_trip_count`` backend
+config, else the loop condition's ``compare(iv, constant)`` bound):
+
+* **flops**       — 2 · numel(result) · contracted-size for every ``dot``
+                    (recursing into fusion/while/call computations),
+* **bytes**       — Σ (operands + result) per *top-level* instruction of each
+                    computation; fusions count at the fusion boundary (one
+                    kernel = one HBM round trip), matching the roofline model,
+* **collectives** — operand bytes of all-gather / all-reduce / reduce-scatter
+                    / all-to-all / collective-permute, by kind.
+
+All values are per-device (the HLO module is the SPMD per-device program);
+multiply by chip count for global numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HloCost", "analyze_hlo", "parse_hlo_collectives", "collective_bytes"]
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+# instructions that move no data of their own
+_FREE_OPS = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "rng-get-and-update-state",
+    "opt-barrier",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r"known_trip_count\D*?(\d+)")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)="
+    r"(\{[^}]*\}|%?[\w.\-]+)"
+)
+
+
+def _shape_elems(dt: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dt, dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[int] | None:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_text: str
+    opcode: str
+    operands: list[str]
+    rhs: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    unknown_trip_loops: int = 0
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += mult * other.coll_bytes[k]
+            self.coll_counts[k] += int(mult * other.coll_counts[k])
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one"}
+
+
+def _parse_instr(line: str) -> _Instr | None:
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    m = re.match(r"^%?([\w.\-]+)\s*=\s*(.*)$", s)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # result shape: tuple '(...)' or single 'dtype[dims]{layout}'
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape_text = rhs[: i + 1]
+        rest = rhs[i + 1:]
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape_text = rhs[:sp]
+        rest = rhs[sp:]
+    om = re.match(r"\s*([a-z][\w\-]*)\s*\(", rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    # operand list: contents of the first paren group
+    start = rest.find("(", om.start())
+    depth = 0
+    end = start
+    for i in range(start, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operand_text = rest[start + 1:end]
+    operands = re.findall(r"%([\w.\-]+)", operand_text)
+    return _Instr(name, shape_text, opcode, operands, rhs, is_root)
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    # ------------------------------------------------ split into computations
+    comps: dict[str, list[_Instr]] = {}
+    shapes: dict[tuple[str, str], str] = {}
+    current: str | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        # computation headers sit at column 0: `[ENTRY ]%name (params) -> shape {`
+        if (line and not line[0].isspace() and line.endswith("{")
+                and "->" in line):
+            hm = re.match(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(", line)
+            if hm:
+                current = hm.group(1)
+                comps[current] = []
+                # header params carry shapes
+                header = line[line.find("("):line.rfind("->")]
+                for pname, pshape in _PARAM_RE.findall(header):
+                    shapes[(current, pname)] = pshape
+                continue
+        if line.strip() == "}" or line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        instr = _parse_instr(line)
+        if instr:
+            comps[current].append(instr)
+            shapes[(current, instr.name)] = instr.shape_text
+
+    def op_shape(cname: str, oname: str) -> str:
+        return shapes.get((cname, oname), "")
+
+    def _fusion_boundary_bytes(instr: _Instr, callee: str | None) -> float:
+        """HBM traffic of one fused kernel: parameters consumed only through
+        dynamic-slice count as the slice; the base of an in-place
+        dynamic-update-slice root counts zero; a DUS root writes only the
+        update.  Everything else is full operand/result size."""
+        if callee is None or callee not in comps:
+            return float(_shape_bytes(instr.shape_text))
+        body = comps[callee]
+        params = {i.name: i.shape_text for i in body if i.opcode == "parameter"}
+        uses: dict[str, list[_Instr]] = {}
+        root: _Instr | None = None
+        for ins in body:
+            if ins.is_root:
+                root = ins
+            if ins.opcode == "parameter":
+                continue
+            for o in ins.operands:
+                if o in params:
+                    uses.setdefault(o, []).append(ins)
+        total = 0.0
+        for pname, pshape in params.items():
+            u = uses.get(pname, [])
+            if u and all(x.opcode == "dynamic-slice" for x in u):
+                total += sum(_shape_bytes(x.shape_text) for x in u)
+            elif u and all(
+                x.opcode == "dynamic-update-slice"
+                and x.operands and x.operands[0] == pname
+                for x in u
+            ):
+                total += 0.0       # aliased base of an in-place update
+            else:
+                total += _shape_bytes(pshape)
+        if (root is not None and root.opcode == "dynamic-update-slice"
+                and len(root.operands) > 1):
+            upd = next((i.shape_text for i in body if i.name == root.operands[1]),
+                       "")
+            total += _shape_bytes(upd) or _shape_bytes(root.shape_text)
+        else:
+            total += _shape_bytes(instr.shape_text)
+        return total
+
+    memo: dict[str, HloCost] = {}
+    called: set[str] = set()
+
+    def callees_of(instr: _Instr) -> list[str]:
+        out = []
+        for grp in _CALL_ATTR_RE.findall(instr.rhs):
+            grp = grp.strip("{}")
+            for nm in grp.split(","):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    out.append(nm)
+        return out
+
+    def trip_count(instr: _Instr, cname: str) -> float | None:
+        m = _TRIP_RE.search(instr.rhs)
+        if m:
+            return float(m.group(1))
+        # fallback: cond computation compares induction var against a constant
+        cm = re.search(r"condition=%?([\w.\-]+)", instr.rhs)
+        if cm and cm.group(1) in comps:
+            text = "\n".join(i.rhs for i in comps[cm.group(1)])
+            cc = re.search(r"constant\((\d+)\)", text)
+            if cc and "direction=LT" in text:
+                return float(cc.group(1))
+        return None
+
+    def comp_cost(cname: str, stack: tuple[str, ...] = ()) -> HloCost:
+        if cname in memo:
+            return memo[cname]
+        cost = HloCost()
+        if cname not in comps or cname in stack:
+            return cost
+        for instr in comps[cname]:
+            op = instr.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            # ---------------- collectives
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                nbytes = sum(_shape_bytes(op_shape(cname, o)) for o in instr.operands)
+                cost.coll_bytes[base] += nbytes
+                cost.coll_counts[base] += 1
+                cost.bytes += nbytes + _shape_bytes(instr.shape_text)
+                continue
+            # ---------------- control flow / nesting
+            if op == "while":
+                mult = trip_count(instr, cname)
+                if mult is None:
+                    mult = 1.0
+                    cost.unknown_trip_loops += 1
+                for callee in callees_of(instr):
+                    cost.add(comp_cost(callee, stack + (cname,)), mult)
+                continue
+            if op == "conditional":
+                branches = [comp_cost(c, stack + (cname,)) for c in callees_of(instr)]
+                if branches:
+                    # charge the most expensive branch
+                    best = max(branches, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+                continue
+            if op == "call":
+                for callee in callees_of(instr):
+                    cost.add(comp_cost(callee, stack + (cname,)))
+                continue
+            if op == "fusion":
+                # one kernel: bytes at the boundary (slice-aware), flops inside
+                callees = callees_of(instr)
+                cost.bytes += _fusion_boundary_bytes(
+                    instr, callees[0] if callees else None)
+                for callee in callees:
+                    inner = comp_cost(callee, stack + (cname,))
+                    cost.flops += inner.flops
+                    cost.transcendentals += inner.transcendentals
+                continue
+            if op == "dynamic-slice":
+                # reads + writes only the slice, not the base operand
+                cost.bytes += 2 * _shape_bytes(instr.shape_text)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place update: traffic = the update slice (read + write)
+                upd = (op_shape(cname, instr.operands[1])
+                       if len(instr.operands) > 1 else "")
+                cost.bytes += 2 * _shape_bytes(upd)
+                continue
+            if op in ("gather", "scatter"):
+                # index-driven: charge the moved elements, not the base table
+                moved = _shape_bytes(instr.shape_text)
+                if op == "scatter" and len(instr.operands) >= 3:
+                    moved = _shape_bytes(op_shape(cname, instr.operands[2]))
+                cost.bytes += 2 * moved
+                continue
+            # ---------------- dot
+            if op == "dot":
+                res_dims_bytes = _shape_bytes(instr.shape_text)
+                res_elems = 0
+                rd = _shape_dims(instr.shape_text)
+                if rd is not None:
+                    res_elems = 1
+                    for d in rd:
+                        res_elems *= d
+                lhs_shape = op_shape(cname, instr.operands[0]) if instr.operands else ""
+                ld = _shape_dims(lhs_shape) or []
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+                contracted = 1
+                if cm and ld:
+                    for d in cm.group(1).split(","):
+                        if d:
+                            idx = int(d)
+                            if idx < len(ld):
+                                contracted *= ld[idx]
+                cost.flops += 2.0 * res_elems * contracted
+                cost.bytes += res_dims_bytes + sum(
+                    _shape_bytes(op_shape(cname, o)) for o in instr.operands)
+                continue
+            if op == "convolution":
+                # rare here; approximate: 2 × result × (window per output)
+                res = _shape_dims(instr.shape_text) or []
+                res_elems = 1
+                for d in res:
+                    res_elems *= d
+                cost.flops += 2.0 * res_elems
+                cost.bytes += _shape_bytes(instr.shape_text) + sum(
+                    _shape_bytes(op_shape(cname, o)) for o in instr.operands)
+                continue
+            # ---------------- everything else
+            if op in _FREE_OPS:
+                continue
+            nbytes = _shape_bytes(instr.shape_text) + sum(
+                _shape_bytes(op_shape(cname, o)) for o in instr.operands)
+            cost.bytes += nbytes
+            if op in _TRANSCENDENTAL:
+                rd = _shape_dims(instr.shape_text)
+                if rd is not None:
+                    n = 1
+                    for d in rd:
+                        n *= d
+                    cost.transcendentals += n
+            # count one flop per output element for arithmetic ops
+            if op in ("add", "subtract", "multiply", "divide", "maximum",
+                      "minimum", "select", "compare", "negate", "abs"):
+                rd = _shape_dims(instr.shape_text)
+                if rd is not None:
+                    n = 1
+                    for d in rd:
+                        n *= d
+                    cost.flops += n
+        for instr in comps[cname]:
+            for callee in callees_of(instr):
+                called.add(callee)
+        memo[cname] = cost
+        return cost
+
+    # resolve call graph: roots = computations never referenced
+    for cname, instrs in comps.items():
+        for instr in instrs:
+            for callee in callees_of(instr):
+                called.add(callee)
+    roots = [c for c in comps if c not in called] or list(comps)
+    total = HloCost()
+    for r in roots:
+        total.add(comp_cost(r))
+    return total
+
+
+# ------------------------------------------------- legacy collective report
+@dataclasses.dataclass
+class CollectiveReport:
+    total_bytes: float
+    by_kind: dict[str, float]
+    counts: dict[str, int]
+    unknown_trip_loops: int
+
+
+def parse_hlo_collectives(hlo_text: str) -> CollectiveReport:
+    c = analyze_hlo(hlo_text)
+    return CollectiveReport(
+        total_bytes=c.collective_bytes,
+        by_kind=dict(c.coll_bytes),
+        counts=dict(c.coll_counts),
+        unknown_trip_loops=c.unknown_trip_loops,
+    )
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return analyze_hlo(hlo_text).collective_bytes

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis extends
+data parallelism (gradient reduce over (pod, data)), scaling to 1000+ nodes
+by growing ``pod`` — weights are never sharded across pods, so cross-pod
+traffic is gradients only (optionally int8-EF compressed,
+:mod:`repro.train.compression`).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(mesh.shape)

@@ -1,0 +1,109 @@
+"""§Roofline term computation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes / (chips × 819e9 B/s)
+    collective term = collective_bytes / (chips × 50e9 B/s per ICI link)
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (forward)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy
+waste — remat pushes it below 1 by design; values ≪ 0.3 flag real waste).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+
+from repro.configs.registry import ShapeCell
+from repro.core.tpu_model import TPU_V5E, dominant_term
+from repro.models.transformer import ModelConfig, abstract_params
+
+__all__ = ["n_active_params", "model_flops", "roofline_terms", "summarize"]
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Non-embedding parameters, with routed experts scaled by k/E."""
+    tree = abstract_params(cfg)
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if keys[-1] == "embed":
+            continue
+        n = math.prod(leaf.shape)
+        if "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down") and leaf.ndim == 4:
+            n *= cfg.experts_per_token / cfg.n_experts
+        total += n
+    return int(total)
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    n_act = n_active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.seq_len * cell.global_batch
+        return 6.0 * n_act * tokens
+    if cell.kind == "prefill":
+        tokens = cell.seq_len * cell.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence (attention cache reads are the memory
+    # term's job, not FLOPs)
+    return 2.0 * n_act * cell.global_batch
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+    chip=TPU_V5E,
+) -> dict[str, float]:
+    return {
+        "compute_s": hlo_flops / (n_chips * chip.peak_flops_bf16),
+        "memory_s": hlo_bytes / (n_chips * chip.hbm_bw),
+        "collective_s": collective_bytes / (n_chips * chip.ici_bw_per_link),
+    }
+
+
+def summarize(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    hlo_cost,                     # HloCost: per-device, trip-count-aware
+    n_chips: int,
+) -> dict[str, Any]:
+    """Roofline record from the per-device HLO cost (see hlo_analysis).
+
+    Per-device values × n_chips = global; terms are per-device work over
+    per-chip peaks (mathematically identical to global/(chips×peak)).
+    """
+    flops_dev = float(hlo_cost.flops)
+    bytes_dev = float(hlo_cost.bytes)
+    coll_dev = float(hlo_cost.collective_bytes)
+    chip = TPU_V5E
+    terms = {
+        "compute_s": flops_dev / chip.peak_flops_bf16,
+        "memory_s": bytes_dev / chip.hbm_bw,
+        "collective_s": coll_dev / chip.ici_bw_per_link,
+    }
+    dom = dominant_term(terms)
+    mf = model_flops(cfg, cell)
+    flops_global = flops_dev * n_chips
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dom,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_flops_global": flops_global,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / flops_global if flops_global else float("nan"),
+        # step-time bounds: all-overlapped (max term) vs fully serial (sum)
+        "ideal_step_s": bound,
+        "serial_step_s": total,
+        # fraction of the ideal the dominant term alone would achieve —
+        # 1.0 means perfectly overlapped execution is bounded by one resource
+        "overlap_headroom": bound / total if total else float("nan"),
+        "unknown_trip_loops": hlo_cost.unknown_trip_loops,
+    }

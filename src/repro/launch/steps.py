@@ -1,0 +1,192 @@
+"""Build the jit-able step function + shardings + abstract inputs for one
+(architecture × shape cell × mesh) — shared by the dry-run, the trainer and
+the server.
+
+Each builder returns a :class:`CellProgram`:
+    fn            — pure step function
+    args          — abstract (ShapeDtypeStruct) positional args
+    in_shardings  — NamedSharding tree congruent with ``args``
+    out_shardings — NamedSharding tree (or None leaves = compiler choice)
+    donate        — arg indices donated (state / caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeCell
+from repro.models.transformer import (
+    ModelConfig,
+    abstract_params,
+    forward_decode,
+    forward_full,
+    init_cache,
+)
+from repro.sharding.ctx import use_activation_sharding
+from repro.sharding.planner import Plan, plan_for
+from repro.train.optim import OptConfig
+from repro.train.train_loop import TrainState, make_train_step, state_specs
+
+__all__ = ["CellProgram", "build_cell", "abstract_train_state"]
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch_id: str
+    cell: ShapeCell
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+    plan: Plan
+    cfg: ModelConfig
+    meta: dict[str, Any]
+
+    def lower(self, mesh: jax.sharding.Mesh):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate,
+        )
+        with mesh:
+            with use_activation_sharding(self.plan.act_specs):
+                return jitted.lower(*self.args)
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    from repro.train.train_loop import init_state
+
+    return jax.eval_shape(lambda: init_state(cfg, jax.random.key(0)))
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def _batch_abstract(cfg: ModelConfig, cell: ShapeCell, batch: int) -> dict:
+    if cfg.modality == "vision_prefix":
+        s_text = cell.seq_len - cfg.vision_prefix_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32),
+            "prefix": jax.ShapeDtypeStruct(
+                (batch, cfg.vision_prefix_len, cfg.d_model), cfg.adt),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, cell.seq_len), jnp.int32)}
+
+
+def _batch_pspec(plan: Plan, batch: int, abstract: dict) -> dict:
+    dp = plan.dp_axes if plan.dp_size and batch % plan.dp_size == 0 else None
+    return {k: P(dp, *([None] * (v.ndim - 1))) for k, v in abstract.items()}
+
+
+def build_cell(
+    spec: ArchSpec,
+    cell: ShapeCell,
+    mesh: jax.sharding.Mesh,
+    *,
+    pod_reduce: str = "fp32",
+    microbatch_override: int | None = None,
+    allow_uneven: bool = False,
+    cfg_overrides: dict | None = None,
+) -> CellProgram:
+    cfg = spec.cell_config(cell)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+        spec = dataclasses.replace(spec, model=cfg)
+    plan = plan_for(
+        spec, mesh, mode=cell.kind, cell=cell,
+        cache_batch=cell.global_batch if cell.kind == "decode" else None,
+        cache_len=cell.seq_len if cell.kind == "decode" else None,
+        allow_uneven=allow_uneven,
+        replicate_embed=pod_reduce == "int8_ef",
+    )
+    meta: dict[str, Any] = {"notes": list(plan.notes)}
+
+    if cell.kind == "train":
+        dp = max(1, plan.dp_size)
+        n_micro = microbatch_override or spec.train_microbatches
+        n_micro = max(1, min(n_micro, cell.global_batch // dp))
+        meta["n_microbatches"] = n_micro
+        # microbatch reshape hint: (n_micro, mb, S) with mb sharded over dp
+        plan.act_specs.setdefault("microbatches", P(None, plan.dp_axes, None))
+        step = make_train_step(
+            cfg, OptConfig(), n_microbatches=n_micro,
+            pod_reduce=pod_reduce, mesh=mesh,
+            grad_specs=plan.param_specs,
+        )
+        astate = abstract_train_state(cfg)
+        if pod_reduce != "int8_ef":
+            astate = dataclasses.replace(astate, ef=None)
+        else:
+            from repro.train.compression import ef_init
+
+            astate = dataclasses.replace(
+                astate, ef=jax.eval_shape(lambda p: ef_init(p), astate.params))
+        abatch = _batch_abstract(cfg, cell, cell.global_batch)
+        sspec = state_specs(plan, ef=pod_reduce == "int8_ef")
+        in_sh = (_ns(mesh, sspec), _ns(mesh, _batch_pspec(plan, cell.global_batch, abatch)))
+        out_sh = (_ns(mesh, sspec),
+                  _ns(mesh, {"loss": P(), "grad_norm": P(), "lr": P()}))
+        return CellProgram(
+            arch_id=spec.arch_id, cell=cell, kind="train", fn=step,
+            args=(astate, abatch), in_shardings=in_sh, out_shardings=out_sh,
+            donate=(0,), plan=plan, cfg=cfg, meta=meta,
+        )
+
+    aparams = abstract_params(cfg)
+    p_ns = _ns(mesh, plan.param_specs)
+
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches, _ = forward_full(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("prefix"), return_cache=True,
+            )
+            return logits, caches
+
+        abatch = _batch_abstract(cfg, cell, cell.global_batch)
+        in_sh = (p_ns, _ns(mesh, _batch_pspec(plan, cell.global_batch, abatch)))
+        cache_plan = plan_for(spec, mesh, mode="prefill", cell=cell,
+                              cache_batch=cell.global_batch, cache_len=cell.seq_len)
+        out_sh = (None, _ns(mesh, cache_plan.cache_specs))
+        return CellProgram(
+            arch_id=spec.arch_id, cell=cell, kind="prefill", fn=prefill_step,
+            args=(aparams, abatch), in_shardings=in_sh, out_shardings=out_sh,
+            donate=(), plan=plan, cfg=cfg, meta=meta,
+        )
+
+    # ---- decode: 1 new token per sequence against a seq_len cache
+    B = cell.global_batch
+
+    def serve_step(params, token, caches, pos):
+        return forward_decode(params, cfg, token, caches, pos)
+
+    acache = init_cache(cfg, B, cell.seq_len, abstract=True)
+    atoken = jax.ShapeDtypeStruct((B,), jnp.int32)
+    apos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    dp = plan.dp_axes if plan.dp_size and B % plan.dp_size == 0 else None
+    tok_ns = NamedSharding(mesh, P(dp))
+    in_sh = (p_ns, tok_ns, _ns(mesh, plan.cache_specs), tok_ns)
+    Vp = cfg.padded_vocab
+    logits_spec = plan.act_specs.get("logits", P(dp, None))
+    lg = P(dp, logits_spec[-1] if len(logits_spec) else None)
+    out_sh = (NamedSharding(mesh, lg), _ns(mesh, plan.cache_specs))
+    return CellProgram(
+        arch_id=spec.arch_id, cell=cell, kind="decode", fn=serve_step,
+        args=(aparams, atoken, acache, apos), in_shardings=in_sh,
+        out_shardings=out_sh, donate=(2,), plan=plan, cfg=cfg, meta=meta,
+    )

@@ -1,0 +1,234 @@
+"""Mamba2 (SSD — state-space duality) block, for mamba2-1.3b and zamba2-7b.
+
+The recurrence (per head h, state h_t ∈ R^{N×P}):
+
+    h_t = exp(a_t) · h_{t-1} + b_t ⊗ x_t            y_t = c_t · h_t
+
+Train/prefill run the **chunked SSD algorithm** (Dao & Gu 2024): the sequence
+is cut into chunks of Q steps; within-chunk contributions use the quadratic
+(attention-like) form with the decay matrix L[t,s] = exp(A_t − A_s), and
+cross-chunk contributions flow through an O(S/Q) state scan.  This is the
+matmul-rich form the MXU wants.  Decode is the O(1)-per-step recurrence
+against a carried (H, N, P) state.
+
+TP note: unlike the reference CUDA implementation's fused ``in_proj``
+(one (D, 2·d_inner+2N+H) matmul whose output is later *sliced*), the
+projections here are **separate weights** (w_z, w_x, w_b, w_c, w_dt, and
+per-component depthwise convs).  Slicing a model-axis-sharded concat at
+non-shard-aligned offsets would force GSPMD to all-gather the activation;
+separate projections keep the z/x channel dim cleanly head-aligned for TP
+while the small B/C/dt projections stay replicated.  (Recorded in DESIGN.md
+§hardware-adaptation.)
+
+The sequential oracle is :func:`repro.kernels.ref.mamba2_ssd_ref`; the
+chunked path is asserted against it in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Initializer, he_init, rms_norm
+
+__all__ = ["init_mamba2", "ssd_chunked", "mamba2_prefill", "mamba2_decode"]
+
+
+def init_mamba2(
+    ini: Initializer,
+    d_model: int,
+    *,
+    d_state: int,
+    head_dim: int = 64,
+    expand: int = 2,
+    conv_width: int = 4,
+    dtype=jnp.float32,
+) -> dict[str, Any]:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    N = d_state
+    return {
+        "w_z": he_init(ini, (d_model, d_inner), d_model, dtype),
+        "w_x": he_init(ini, (d_model, d_inner), d_model, dtype),
+        "w_b": he_init(ini, (d_model, N), d_model, dtype),
+        "w_c": he_init(ini, (d_model, N), d_model, dtype),
+        "w_dt": he_init(ini, (d_model, H), d_model, dtype),
+        "conv_x_w": ini.normal((conv_width, d_inner), 0.1, dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_b_w": ini.normal((conv_width, N), 0.1, dtype),
+        "conv_b_b": jnp.zeros((N,), dtype),
+        "conv_c_w": ini.normal((conv_width, N), 0.1, dtype),
+        "conv_c_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": he_init(ini, (d_inner, d_model), d_inner, dtype),
+    }
+
+
+def _dims(p: dict[str, Any]) -> tuple[int, int, int, int]:
+    d_inner = p["w_z"].shape[1]
+    H = p["A_log"].shape[0]
+    N = p["w_b"].shape[1]
+    P = d_inner // H
+    return d_inner, H, N, P
+
+
+def _proj(w: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,de->bse", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _causal_conv(w: jax.Array, bias: jax.Array, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) via explicit shifts (width ≤ 4)."""
+    wt = w.astype(u.dtype)
+    W = wt.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = sum(up[:, j : j + S, :] * wt[j] for j in range(W))
+    return jax.nn.silu(out + bias.astype(u.dtype))
+
+
+def _conv_step(w: jax.Array, bias: jax.Array, state: jax.Array,
+               u_new: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decode step of the depthwise conv; state (B, W-1, C), u_new (B,1,C)."""
+    wt = w.astype(u_new.dtype)
+    window = jnp.concatenate([state, u_new], axis=1)            # (B, W, C)
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, wt) + bias.astype(u_new.dtype))
+    return out[:, None, :], window[:, 1:, :]
+
+
+# -------------------------------------------------------------- chunked SSD
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) — dt-scaled inputs
+    a: jax.Array,      # (B, S, H)    — per-step decay logits (≤ 0)
+    b: jax.Array,      # (B, S, N)
+    c: jax.Array,      # (B, S, N)
+    *,
+    chunk: int = 128,
+    h0: jax.Array | None = None,   # (B, H, N, P) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked scan; returns (y (B,S,H,P), final state (B,H,N,P)).  fp32 core."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    af = a.astype(jnp.float32).reshape(B, nc, Q, H)
+    bf = b.astype(jnp.float32).reshape(B, nc, Q, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, Q, N)
+
+    A = jnp.cumsum(af, axis=2)                                  # inclusive (B,nc,Q,H)
+    # within-chunk decay matrix L[t,s] = exp(A_t − A_s), s ≤ t
+    Ld = A[:, :, :, None, :] - A[:, :, None, :, :]              # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(Ld), 0.0)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cf, bf)              # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", scores, L, xf)
+
+    # chunk-boundary states
+    decay_end = jnp.exp(A[:, :, -1:, :] - A)                    # (B,nc,Q,H)
+    S_c = jnp.einsum("bcsn,bcsh,bcshp->bchnp", bf, decay_end, xf)
+    a_tot = jnp.exp(A[:, :, -1, :])                             # (B,nc,H)
+
+    def step(h, inp):
+        s_c, at = inp                                           # (B,H,N,P), (B,H)
+        h_new = at[:, :, None, None] * h + s_c
+        return h_new, h                                         # emit state *before* chunk
+
+    hinit = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step, hinit, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(a_tot, 1, 0))
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                         # (B,nc,H,N,P)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cf, jnp.exp(A), h_prev)
+    y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+# ------------------------------------------------------------ block forward
+def mamba2_prefill(
+    p: dict[str, Any],
+    x: jax.Array,            # (B, S, D)
+    *,
+    chunk: int = 128,
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Full-sequence forward.
+
+    Returns (y, (ssm_state, conv_x_state, conv_b_state, conv_c_state)).
+    """
+    d_inner, H, N, P = _dims(p)
+    dt_ = x.dtype
+    B, S, D = x.shape
+    z = _proj(p["w_z"], x)
+    xc_pre = _proj(p["w_x"], x)
+    b_pre = _proj(p["w_b"], x)
+    c_pre = _proj(p["w_c"], x)
+    dtr = _proj(p["w_dt"], x)
+    xc = _causal_conv(p["conv_x_w"], p["conv_x_b"], xc_pre)
+    b = _causal_conv(p["conv_b_w"], p["conv_b_b"], b_pre)
+    c = _causal_conv(p["conv_c_w"], p["conv_c_b"], c_pre)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    a = -jnp.exp(p["A_log"])[None, None, :] * dt                       # (B,S,H)
+    xh = xc.reshape(B, S, H, P)
+    x_scaled = xh.astype(jnp.float32) * dt[..., None]
+    y, h_final = ssd_chunked(x_scaled, a, b, c, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_),
+                     preferred_element_type=jnp.float32).astype(dt_)
+
+    W = p["conv_x_w"].shape[0]
+
+    def tail(u):
+        if S >= W - 1:
+            return u[:, S - (W - 1):, :]
+        return jnp.pad(u, ((0, 0), (W - 1 - S, 0), (0, 0)))
+
+    return out, (h_final, tail(xc_pre), tail(b_pre), tail(c_pre))
+
+
+def mamba2_decode(
+    p: dict[str, Any],
+    x: jax.Array,            # (B, 1, D)
+    state: tuple[jax.Array, ...],   # (ssm (B,H,N,P) fp32, conv_x, conv_b, conv_c)
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """O(1) recurrence step; returns (y (B,1,D), new state tuple)."""
+    d_inner, H, N, P = _dims(p)
+    ssm_state, cx, cb, cc = state
+    dt_ = x.dtype
+    B = x.shape[0]
+    z = _proj(p["w_z"], x)
+    xc_pre = _proj(p["w_x"], x)
+    b_pre = _proj(p["w_b"], x)
+    c_pre = _proj(p["w_c"], x)
+    dtr = _proj(p["w_dt"], x)
+    xc, cx = _conv_step(p["conv_x_w"], p["conv_x_b"], cx, xc_pre)
+    b, cb = _conv_step(p["conv_b_w"], p["conv_b_b"], cb, b_pre)
+    c, cc = _conv_step(p["conv_c_w"], p["conv_c_b"], cc, c_pre)
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)                      # (B,H)
+    xh = xc[:, 0].reshape(B, H, P).astype(jnp.float32) * dt[..., None]
+    bf = b[:, 0].astype(jnp.float32)
+    cf = c[:, 0].astype(jnp.float32)
+    h = a[:, :, None, None] * ssm_state + jnp.einsum("bn,bhp->bhnp", bf, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cf, h)
+    y = y + p["D"][None, :, None] * xc[:, 0].reshape(B, H, P).astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_),
+                     preferred_element_type=jnp.float32).astype(dt_)
+    return out, (h, cx, cb, cc)

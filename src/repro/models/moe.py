@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity dispatch.
+
+Used by olmoe (64 experts, top-8) and deepseek-v2 (2 shared + 160 routed,
+top-6).  Design goals, in order:
+
+1.  **Linear in tokens.**  The dispatch is slot-scatter / slot-gather:
+    every (token, choice) pair gets a slot ``expert·cap + position`` computed
+    from a running per-expert count; tokens past an expert's capacity are
+    dropped (their gate mass is simply lost, Switch-style).  Nothing of size
+    (tokens × experts × capacity) is ever materialized.
+
+2.  **EP-shardable.**  Expert weight stacks are (E, D, F) so the leading
+    axis shards over the ``model`` mesh axis; the scatter/gather then
+    induces the expected all-to-all under GSPMD.
+
+3.  **Load-balance aux loss** (Switch/GShard form): ``E · Σ_e f_e · p_e``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Initializer, he_init
+from repro.sharding.ctx import shard_act
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(
+    ini: Initializer,
+    d_model: int,
+    d_ff_expert: int,
+    n_experts: int,
+    *,
+    n_shared: int = 0,
+    dtype=jnp.float32,
+) -> dict[str, Any]:
+    E, D, F = n_experts, d_model, d_ff_expert
+    p: dict[str, Any] = {
+        "router": he_init(ini, (D, E), D, jnp.float32),  # router stays fp32
+        "w_gate": he_init(ini, (E, D, F), D, dtype),
+        "w_up": he_init(ini, (E, D, F), D, dtype),
+        "w_down": he_init(ini, (E, F, D), F, dtype),
+    }
+    if n_shared:
+        Fs = n_shared * d_ff_expert
+        p["shared"] = {
+            "w_gate": he_init(ini, (D, Fs), D, dtype),
+            "w_up": he_init(ini, (D, Fs), D, dtype),
+            "w_down": he_init(ini, (Fs, D), Fs, dtype),
+        }
+    return p
+
+
+def moe_ffn(
+    p: dict[str, Any],
+    x: jax.Array,               # (B, S, D)
+    *,
+    k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    F = p["w_gate"].shape[-1]
+    T = B * S
+    cap = max(k, int(T * k * capacity_factor / E))
+    cap = -(-cap // 4) * 4  # round up to a lane-friendly multiple
+    dt = x.dtype
+
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    top_g, top_i = jax.lax.top_k(gates, k)                      # (T, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot assignment: running count per expert, slot-priority order
+    counts = jnp.zeros((E,), jnp.int32)
+    slots = []
+    keeps = []
+    for j in range(k):
+        onehot = jax.nn.one_hot(top_i[:, j], E, dtype=jnp.int32)        # (T, E)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot                  # (T, E)
+        pos = jnp.sum(pos_in_e * onehot, axis=-1) + counts[top_i[:, j]]  # (T,)
+        keep = pos < cap
+        # dropped copies land on slot 0 with a zero contribution (keeps the
+        # buffer exactly (E·cap, D) — evenly shardable over the expert axis)
+        slots.append(jnp.where(keep, top_i[:, j] * cap + pos, 0))
+        keeps.append(keep)
+        counts = counts + jnp.sum(onehot, axis=0)
+    slot = jnp.stack(slots, 1)                                  # (T, k)
+    keep = jnp.stack(keeps, 1)                                  # (T, k)
+
+    # ---- dispatch: ONE scatter-add for all k token copies.  k separate
+    # scatters would each force a full-buffer cross-data combine; one
+    # scatter means one combine (EXPERIMENTS.md §Perf, olmoe hillclimb).
+    contrib = (xt[:, None, :] * keep[..., None].astype(dt)).reshape(T * k, D)
+    buf = jnp.zeros((E * cap, D), dt).at[slot.reshape(-1)].add(contrib)
+    # hint the sharded layout at the scatter output itself so the cross-data
+    # combine lowers to reduce-scatter (half the wire bytes of all-reduce)
+    buf = shard_act(buf, "moe_buffer_flat")
+    eb = shard_act(buf.reshape(E, cap, D), "moe_buffer")
+
+    # ---- expert computation (batched SwiGLU over the expert axis)
+    g = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", eb, p["w_up"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(dt)
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+
+    # ---- combine: ONE gather of every choice's slot output.  bf16 on
+    # purpose: the gather/scatter pair is the EP boundary — keeping its
+    # operands (and cotangents) in bf16 halves the cross-shard combine
+    # traffic; the k-way weighted sum is numerically benign in bf16.
+    gathered = eo.reshape(E * cap, D)[slot.reshape(-1)].reshape(T, k, D)
+    w = (top_g * keep.astype(jnp.float32)).astype(dt)           # (T, k)
+    out = jnp.einsum("tkd,tk->td", gathered, w)
+
+    # ---- shared experts (deepseek): always-on dense SwiGLU
+    if "shared" in p:
+        from repro.models.layers import mlp_swiglu
+
+        out = out + mlp_swiglu(p["shared"], xt)
+
+    # ---- aux loss: fraction dispatched (1st choice) × mean router prob
+    f = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    pr = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(f * pr)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,612 @@
+"""Unified LM model covering all assigned architecture families.
+
+One parameter tree + three entry points:
+
+* ``forward_full``   — teacher-forced full-sequence forward (train & prefill;
+  prefill additionally returns the serving caches),
+* ``forward_decode`` — one new token per sequence against carried caches
+  (KV cache / MLA latent cache / SSM state, per family),
+* ``init_cache``     — abstract or concrete cache allocation.
+
+Families (``ModelConfig.family``):
+  dense   — pre-norm GQA transformer (granite, command-r, codeqwen, qwen2.5,
+            musicgen backbone, internvl2 backbone)
+  moe     — GQA or MLA attention + top-k routed experts (olmoe, deepseek-v2)
+  ssm     — attention-free Mamba2 SSD stack (mamba2-1.3b)
+  hybrid  — Mamba2 backbone with a *shared* attention block applied every
+            ``hybrid_attn_every`` layers (zamba2-7b); the shared block runs at
+            2×d_model on concat(hidden, initial embedding), Zamba-style.
+
+Layers are stacked (leading L axis) and driven by ``lax.scan`` so the lowered
+HLO stays compact for the 512-device dry-run; each block is wrapped in
+``jax.checkpoint`` (nothing saveable) when ``cfg.remat``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    Initializer,
+    cross_entropy_loss,
+    he_init,
+    init_mlp,
+    mlp_swiglu,
+    pad_vocab,
+    rms_norm,
+    rope_table,
+)
+from repro.sharding.ctx import shard_act
+
+__all__ = ["ModelConfig", "init_params", "abstract_params", "forward_full",
+           "forward_decode", "init_cache", "lm_loss", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    # --- MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- MLA (deepseek-v2)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    d_rope: int = 0
+    # --- SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2)
+    hybrid_attn_every: int = 0
+    attn_window: int = 0            # sliding window; 0 = full causal
+    # --- misc
+    qkv_bias: bool = False
+    # pad MHA head counts up to a multiple (TP feasibility: e.g. musicgen's
+    # 24 heads → 32 so they shard over a 16-way model axis).  The padded
+    # output-projection rows are zero-initialized, so the function is
+    # unchanged at init.  Only valid for MHA (n_kv_heads == n_heads): padding
+    # GQA would change the query→KV group mapping.
+    head_pad_multiple: int = 0
+    # bf16 attention probabilities for the P·V product (fp32 softmax stats
+    # kept) — halves the flash score traffic; see attention.flash_attention.
+    attn_probs_bf16: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e4
+    modality: str = "text"          # text | audio_tokens | vision_prefix
+    vision_prefix_len: int = 0
+    act_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    vocab_pad_multiple: int = 256
+    kv_chunk: int = 1024
+    remat: bool = True
+    remat_policy: str = "nothing"     # nothing | dots (save matmul outputs)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def adt(self):
+        return jnp.dtype(self.act_dtype)
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def d_conv_ch(self) -> int:
+        return self.d_inner + 2 * self.ssm_state
+
+    # hybrid layout: n_groups × (every-1 mamba + 1 shared attn) + tail mamba
+    @property
+    def hybrid_groups(self) -> int:
+        return self.n_layers // self.hybrid_attn_every if self.hybrid_attn_every else 0
+
+    @property
+    def hybrid_tail(self) -> int:
+        return self.n_layers - self.hybrid_groups * self.hybrid_attn_every
+
+    @property
+    def n_mamba_layers(self) -> int:
+        if self.family == "ssm":
+            return self.n_layers
+        if self.family == "hybrid":
+            return self.hybrid_groups * (self.hybrid_attn_every - 1) + self.hybrid_tail
+        return 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid")
+
+    @property
+    def n_heads_eff(self) -> int:
+        if self.head_pad_multiple and not self.use_mla:
+            assert self.n_kv_heads == self.n_heads, (
+                "head padding is only function-preserving for MHA")
+            m = self.head_pad_multiple
+            return -(-self.n_heads // m) * m
+        return self.n_heads
+
+    @property
+    def n_kv_heads_eff(self) -> int:
+        if self.head_pad_multiple and not self.use_mla:
+            return self.n_heads_eff if self.n_kv_heads == self.n_heads else self.n_kv_heads
+        return self.n_kv_heads
+
+
+# =============================================================== param init
+def _stack(fn, n: int):
+    """Initialize ``n`` stacked layer subtrees via vmap over fold_in keys."""
+
+    def init_one(key):
+        return fn(Initializer(key))
+
+    def stacked(ini: Initializer):
+        keys = jax.random.split(ini.next_key(), n)
+        return jax.vmap(init_one)(keys)
+
+    return stacked
+
+
+def _init_attn_block(cfg: ModelConfig, ini: Initializer) -> dict[str, Any]:
+    dt = cfg.pdt
+    blk: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dt),
+                           "norm2": jnp.ones((cfg.d_model,), dt)}
+    if cfg.use_mla:
+        blk["attn"] = attn.init_mla(
+            ini, cfg.d_model, cfg.n_heads,
+            kv_lora_rank=cfg.kv_lora_rank, q_lora_rank=cfg.q_lora_rank,
+            d_head=cfg.d_head, d_rope=cfg.d_rope, dtype=dt,
+        )
+    else:
+        blk["attn"] = attn.init_gqa(
+            ini, cfg.d_model, cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.d_head,
+            bias=cfg.qkv_bias, dtype=dt,
+        )
+        if cfg.n_heads_eff != cfg.n_heads:
+            # zero the padded heads' output rows → identical function at init
+            wo = blk["attn"]["wo"]
+            blk["attn"]["wo"] = wo.at[cfg.n_heads:].set(0.0)
+    if cfg.family == "moe":
+        blk["moe"] = moe_mod.init_moe(
+            ini, cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+            n_shared=cfg.n_shared_experts, dtype=dt,
+        )
+    else:
+        blk["mlp"] = init_mlp(ini, cfg.d_model, cfg.d_ff, dt)
+    return blk
+
+
+def _init_mamba_block(cfg: ModelConfig, ini: Initializer) -> dict[str, Any]:
+    dt = cfg.pdt
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "ssm": m2.init_mamba2(
+            ini, cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand, conv_width=cfg.ssm_conv, dtype=dt,
+        ),
+    }
+
+
+def _init_shared_attn(cfg: ModelConfig, ini: Initializer) -> dict[str, Any]:
+    """Zamba2-style shared block at 2×d_model over concat(h, emb0)."""
+    dt = cfg.pdt
+    d2 = 2 * cfg.d_model
+    return {
+        "norm1": jnp.ones((d2,), dt),
+        "norm2": jnp.ones((d2,), dt),
+        "attn": attn.init_gqa(ini, d2, cfg.n_heads, cfg.n_kv_heads,
+                              d2 // cfg.n_heads, dtype=dt),
+        "mlp": init_mlp(ini, d2, cfg.d_ff, dt),
+        "out": he_init(ini, (d2, cfg.d_model), d2, dt),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    ini = Initializer(key)
+    dt = cfg.pdt
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": ini.normal((Vp, D), 0.02, dt),
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": he_init(ini, (D, Vp), D, dt),
+    }
+    if cfg.family in ("dense", "moe"):
+        params["blocks"] = _stack(
+            functools.partial(_init_attn_block, cfg), cfg.n_layers
+        )(ini)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack(
+            functools.partial(_init_mamba_block, cfg), cfg.n_layers
+        )(ini)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack(
+            functools.partial(_init_mamba_block, cfg), cfg.n_mamba_layers
+        )(ini)
+        params["shared_attn"] = _init_shared_attn(cfg, ini)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree (no allocation) — what the dry-run lowers with."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+
+    tree = abstract_params(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+# ================================================================== forward
+_REMAT_POLICIES = {
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    # saves every dot incl. attention scores — blows VMEM/HBM working set
+    # at 32k-class shapes (measured 30 GB temp on command-r); kept for
+    # ablation only
+    "dots": lambda: jax.checkpoint_policies.dots_saveable,
+    # saves weight matmul outputs (no batch dims) but recomputes attention
+    # scores — the compute/memory sweet spot (EXPERIMENTS.md §Perf)
+    "dots_nobatch": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=_REMAT_POLICIES[cfg.remat_policy]())
+    return fn
+
+
+def _attn_block_full(cfg: ModelConfig, blk, x, cos, sin, window):
+    h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = attn.mla_prefill(blk["attn"], h, cos, sin, kv_chunk=cfg.kv_chunk,
+                                    probs_bf16=cfg.attn_probs_bf16)
+    else:
+        a, cache = attn.gqa_prefill(blk["attn"], h, cos, sin, window=window,
+                                    kv_chunk=cfg.kv_chunk,
+                                    probs_bf16=cfg.attn_probs_bf16)
+    x = x + a
+    h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe_mod.moe_ffn(blk["moe"], h, k=cfg.experts_per_token,
+                                 capacity_factor=cfg.capacity_factor)
+    else:
+        f, aux = mlp_swiglu(blk["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + f, cache, aux
+
+
+def _shared_block_full(cfg: ModelConfig, sp, x, emb0, cos2, sin2, window):
+    z = jnp.concatenate([x, emb0], axis=-1)
+    h = rms_norm(z, sp["norm1"], cfg.norm_eps)
+    a, cache = attn.gqa_prefill(sp["attn"], h, cos2, sin2, window=window,
+                                kv_chunk=cfg.kv_chunk)
+    z = z + a
+    h = rms_norm(z, sp["norm2"], cfg.norm_eps)
+    z = z + mlp_swiglu(sp["mlp"], h)
+    y = jnp.einsum("bse,ed->bsd", z, sp["out"].astype(z.dtype),
+                   preferred_element_type=jnp.float32).astype(z.dtype)
+    return x + y, cache
+
+
+def _embed(cfg: ModelConfig, params, tokens, prefix_embeds):
+    emb = jnp.take(params["embed"].astype(cfg.adt), tokens, axis=0)
+    if prefix_embeds is not None:
+        emb = jnp.concatenate([prefix_embeds.astype(cfg.adt), emb], axis=1)
+    return emb
+
+
+def forward_full(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S_text) int32
+    *,
+    prefix_embeds: jax.Array | None = None,  # (B, Np, D) — vision stub
+    window: int | None = None,
+    return_cache: bool = False,
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Teacher-forced forward.  Returns (logits (B,S,Vp), caches|None, aux)."""
+    window = cfg.attn_window if window is None else window
+    x = shard_act(_embed(cfg, params, tokens, prefix_embeds), "hidden")
+    B, S, D = x.shape
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = None
+
+    if cfg.family in ("dense", "moe"):
+        cos, sin = rope_table(S, cfg.d_rope if cfg.use_mla else cfg.d_head,
+                              cfg.rope_theta)
+
+        def body(carry, blk):
+            h, aux = carry
+            h2, cache, a = _maybe_remat(
+                lambda b, hh: _attn_block_full(cfg, b, hh, cos, sin, window), cfg
+            )(blk, h)
+            out = cache if return_cache else None
+            return (h2, aux + a), out
+
+        (x, aux_total), caches = jax.lax.scan(body, (x, aux_total), params["blocks"])
+        if return_cache:
+            caches = {"k": caches[0], "v": caches[1]} if not cfg.use_mla else {
+                "ckv": caches[0], "kr": caches[1]}
+
+    elif cfg.family == "ssm":
+        def body(h, blk):
+            def blk_fn(b, hh):
+                y, st = m2.mamba2_prefill(b["ssm"], rms_norm(hh, b["norm1"], cfg.norm_eps),
+                                          chunk=cfg.ssm_chunk)
+                return hh + y, st
+            h2, st = _maybe_remat(blk_fn, cfg)(blk, h)
+            return h2, st if return_cache else None
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        if return_cache:
+            caches = dict(zip(("h", "conv_x", "conv_b", "conv_c"), states))
+
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_full(params, cfg, x, window, return_cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(shard_act(x, "hidden"), params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.adt),
+                        preferred_element_type=jnp.float32)
+    return shard_act(logits, "logits"), caches, aux_total
+
+
+def _hybrid_full(params, cfg: ModelConfig, x, window, return_cache):
+    B, S, D = x.shape
+    emb0 = x
+    k = cfg.hybrid_attn_every
+    G, tail = cfg.hybrid_groups, cfg.hybrid_tail
+    blocks = params["blocks"]
+    grouped = jax.tree.map(lambda a: a[: G * (k - 1)].reshape((G, k - 1) + a.shape[1:]),
+                           blocks)
+    tail_blocks = jax.tree.map(lambda a: a[G * (k - 1):], blocks)
+    sp = params["shared_attn"]
+    d2 = 2 * D
+    cos2, sin2 = rope_table(S, d2 // cfg.n_heads, cfg.rope_theta)
+
+    def mamba_step(h, blk):
+        def blk_fn(b, hh):
+            y, st = m2.mamba2_prefill(b["ssm"], rms_norm(hh, b["norm1"], cfg.norm_eps),
+                                      chunk=cfg.ssm_chunk)
+            return hh + y, st
+        h2, st = _maybe_remat(blk_fn, cfg)(blk, h)
+        return h2, st if return_cache else None
+
+    def group_step(h, grp_blocks):
+        h, sts = jax.lax.scan(mamba_step, h, grp_blocks)
+        h, kv = _maybe_remat(
+            lambda s, hh: _shared_block_full(cfg, s, hh, emb0, cos2, sin2, window),
+            cfg,
+        )(sp, h)
+        return h, (sts, kv if return_cache else None)
+
+    x, (m_states, kvs) = jax.lax.scan(group_step, x, grouped)
+    x, t_states = jax.lax.scan(mamba_step, x, tail_blocks)
+    caches = None
+    if return_cache:
+        def _merge(a, b):  # (G, k-1, ...) + (tail, ...) → (n_mamba, ...)
+            return jnp.concatenate([a.reshape((-1,) + a.shape[2:]), b], axis=0)
+        caches = {
+            name: _merge(m_states[i], t_states[i])
+            for i, name in enumerate(("h", "conv_x", "conv_b", "conv_c"))
+        }
+        caches["k"], caches["v"] = kvs[0], kvs[1]   # (G, B, S, KV, dh2)
+    return x, caches
+
+
+# =================================================================== decode
+def _rope_at(pos: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]   # (B,1,half)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, abstract: bool = False):
+    """Serving cache pytree (zeros, or ShapeDtypeStructs when ``abstract``)."""
+    adt = cfg.adt
+
+    def mk(shape, dtype):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+
+    L, B, S = cfg.n_layers, batch, max_len
+    if cfg.family in ("dense", "moe"):
+        if cfg.use_mla:
+            return {"ckv": mk((L, B, S, cfg.kv_lora_rank), adt),
+                    "kr": mk((L, B, S, cfg.d_rope), adt)}
+        return {"k": mk((L, B, S, cfg.n_kv_heads_eff, cfg.d_head), adt),
+                "v": mk((L, B, S, cfg.n_kv_heads_eff, cfg.d_head), adt)}
+    if cfg.family == "ssm":
+        W1 = cfg.ssm_conv - 1
+        return {"h": mk((L, B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                        jnp.float32),
+                "conv_x": mk((L, B, W1, cfg.d_inner), adt),
+                "conv_b": mk((L, B, W1, cfg.ssm_state), adt),
+                "conv_c": mk((L, B, W1, cfg.ssm_state), adt)}
+    if cfg.family == "hybrid":
+        M, G = cfg.n_mamba_layers, cfg.hybrid_groups
+        d2 = 2 * cfg.d_model
+        W1 = cfg.ssm_conv - 1
+        win = min(S, cfg.attn_window) if cfg.attn_window else S
+        return {
+            "h": mk((M, B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "conv_x": mk((M, B, W1, cfg.d_inner), adt),
+            "conv_b": mk((M, B, W1, cfg.ssm_state), adt),
+            "conv_c": mk((M, B, W1, cfg.ssm_state), adt),
+            "k": mk((G, B, win, cfg.n_kv_heads, d2 // cfg.n_heads), adt),
+            "v": mk((G, B, win, cfg.n_kv_heads, d2 // cfg.n_heads), adt),
+        }
+    raise ValueError(cfg.family)
+
+
+def forward_decode(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    token: jax.Array,        # (B,) int32 — the newest token
+    caches: Any,
+    pos: jax.Array,          # (B,) int32 — its position (current length)
+) -> tuple[jax.Array, Any]:
+    """One decode step; returns (logits (B, Vp), updated caches)."""
+    x = jnp.take(params["embed"].astype(cfg.adt), token[:, None], axis=0)
+
+    if cfg.family in ("dense", "moe"):
+        cos, sin = _rope_at(pos, cfg.d_rope if cfg.use_mla else cfg.d_head,
+                            cfg.rope_theta)
+
+        def body(h, xs):
+            blk, c0, c1 = xs
+            hn = rms_norm(h, blk["norm1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, (c0, c1) = attn.mla_decode(blk["attn"], hn, c0, c1, pos, cos, sin)
+            else:
+                a, (c0, c1) = attn.gqa_decode(blk["attn"], hn, c0, c1, pos, cos, sin,
+                                              window=cfg.attn_window)
+            h = h + a
+            hn = rms_norm(h, blk["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = moe_mod.moe_ffn(blk["moe"], hn, k=cfg.experts_per_token,
+                                       capacity_factor=cfg.capacity_factor)
+            else:
+                f = mlp_swiglu(blk["mlp"], hn)
+            return h + f, (c0, c1)
+
+        keys = ("ckv", "kr") if cfg.use_mla else ("k", "v")
+        x, new = jax.lax.scan(body, x, (params["blocks"], caches[keys[0]], caches[keys[1]]))
+        caches = {keys[0]: new[0], keys[1]: new[1]}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            blk, st = xs
+            y, st = m2.mamba2_decode(blk["ssm"],
+                                     rms_norm(h, blk["norm1"], cfg.norm_eps), st)
+            return h + y, st
+
+        ckeys = ("h", "conv_x", "conv_b", "conv_c")
+        x, new = jax.lax.scan(
+            body, x, (params["blocks"], tuple(caches[k] for k in ckeys))
+        )
+        caches = dict(zip(ckeys, new))
+
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_decode(params, cfg, x, caches, pos)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(shard_act(x, "hidden"), params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.adt),
+                        preferred_element_type=jnp.float32)
+    return shard_act(logits, "logits")[:, 0], caches
+
+
+def _hybrid_decode(params, cfg: ModelConfig, x, caches, pos):
+    B = x.shape[0]
+    D = cfg.d_model
+    emb0 = x
+    k = cfg.hybrid_attn_every
+    G, tail = cfg.hybrid_groups, cfg.hybrid_tail
+    d2 = 2 * D
+    cos2, sin2 = _rope_at(pos, d2 // cfg.n_heads, cfg.rope_theta)
+    sp = params["shared_attn"]
+    win = caches["k"].shape[2]
+    # ring-buffer slot + valid-prefix length for the windowed shared cache
+    wpos = pos % win
+    vlen = jnp.minimum(pos + 1, win)
+
+    blocks = params["blocks"]
+    ckeys = ("h", "conv_x", "conv_b", "conv_c")
+    grouped = jax.tree.map(lambda a: a[: G * (k - 1)].reshape((G, k - 1) + a.shape[1:]),
+                           blocks)
+    tail_blocks = jax.tree.map(lambda a: a[G * (k - 1):], blocks)
+    m_states = tuple(caches[key] for key in ckeys)
+    gm_states = jax.tree.map(lambda a: a[: G * (k - 1)].reshape((G, k - 1) + a.shape[1:]),
+                             m_states)
+    tl_states = jax.tree.map(lambda a: a[G * (k - 1):], m_states)
+
+    def mamba_step(h, xs):
+        blk, st = xs
+        y, st = m2.mamba2_decode(blk["ssm"],
+                                 rms_norm(h, blk["norm1"], cfg.norm_eps), st)
+        return h + y, st
+
+    def group_step(h, xs):
+        grp, gst, kc, vc = xs
+        h, new_m = jax.lax.scan(mamba_step, h, (grp, gst))
+        z = jnp.concatenate([h, emb0], axis=-1)
+        hn = rms_norm(z, sp["norm1"], cfg.norm_eps)
+        a, (kc, vc) = attn.gqa_decode(sp["attn"], hn, kc, vc, pos, cos2, sin2,
+                                      write_pos=wpos, valid_len=vlen)
+        z = z + a
+        hn = rms_norm(z, sp["norm2"], cfg.norm_eps)
+        z = z + mlp_swiglu(sp["mlp"], hn)
+        y = jnp.einsum("bse,ed->bsd", z, sp["out"].astype(z.dtype),
+                       preferred_element_type=jnp.float32).astype(z.dtype)
+        return h + y, (new_m, kc, vc)
+
+    x, (new_gm, new_k, new_v) = jax.lax.scan(
+        group_step, x, (grouped, gm_states, caches["k"], caches["v"])
+    )
+    x, new_tl = jax.lax.scan(mamba_step, x, (tail_blocks, tl_states))
+
+    def _merge(a, b):
+        return jnp.concatenate([a.reshape((-1,) + a.shape[2:]), b], axis=0)
+
+    caches = {key: _merge(new_gm[i], new_tl[i]) for i, key in enumerate(ckeys)}
+    caches["k"], caches["v"] = new_k, new_v
+    return x, caches
+
+
+# ===================================================================== loss
+def lm_loss(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S)
+    *,
+    prefix_embeds: jax.Array | None = None,
+    loss_mask: jax.Array | None = None,      # (B, S-1) over target positions
+) -> jax.Array:
+    """Next-token CE (+ router aux).  Targets are tokens shifted by one."""
+    logits, _, aux = forward_full(params, cfg, tokens, prefix_embeds=prefix_embeds)
+    Np = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    text_logits = logits[:, Np:, :]
+    pred = text_logits[:, :-1]
+    tgt = tokens[:, 1:]
+    ce = cross_entropy_loss(pred, tgt, vocab_size=cfg.vocab_size, mask=loss_mask)
+    return ce + cfg.router_aux_weight * aux

@@ -1,0 +1,225 @@
+"""Batched serving engine: slot-based continuous batching over a fixed cache.
+
+The engine owns a cache pytree for ``max_batch`` sequence *slots* of
+``max_len`` tokens (KV cache / MLA latent cache / SSM state per the model
+family) plus per-slot cursors.  Requests are prefilled one at a time
+(bucketed prompt lengths for the attention families to bound recompiles;
+exact lengths for SSM/hybrid, whose state integrates every position) and
+inserted into a free slot; ``step()`` then decodes one token for *every*
+active slot in a single batched ``forward_decode`` — the batching the
+decode_32k shape cell measures.
+
+All device work happens in two jit'd functions (`_prefill`, `_decode`);
+the Python layer only does slot bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (
+    ModelConfig,
+    forward_decode,
+    forward_full,
+    init_cache,
+)
+
+__all__ = ["ServeEngine", "Request"]
+
+_SEQ_KEYS = ("k", "v", "ckv", "kr")       # cache leaves with a sequence axis
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        max_batch: int = 8,
+        max_len: int = 512,
+        greedy: bool = True,
+        seed: int = 0,
+        mesh: Any | None = None,
+        plan: Any | None = None,
+    ) -> None:
+        """``mesh``/``plan`` (from :func:`repro.sharding.planner.plan_for`
+        with ``mode="decode"``) turn the engine distributed: params live on
+        the plan's shardings, the cache pytree on the plan's cache specs,
+        and both jit'd step functions carry explicit in/out shardings — the
+        same layout the decode_32k dry-run cells prove out."""
+        self.cfg = cfg
+        self.mesh = mesh
+        self.plan = plan
+        if mesh is not None and plan is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            ns = lambda tree: jax.tree.map(
+                lambda s: None if s is None else NamedSharding(mesh, s), tree,
+                is_leaf=lambda x: x is None or isinstance(x, P),
+            )
+            self._param_sh = ns(plan.param_specs)
+            self._cache_sh = ns(plan.cache_specs) if plan.cache_specs else None
+            params = jax.device_put(params, self._param_sh)
+        else:
+            self._param_sh = self._cache_sh = None
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.greedy = greedy
+        self._key = jax.random.key(seed)
+        self.caches = init_cache(cfg, max_batch, max_len)
+        if self._cache_sh is not None:
+            self.caches = jax.device_put(self.caches, self._cache_sh)
+        self.pos = np.zeros(max_batch, np.int32)
+        self.active = np.zeros(max_batch, bool)
+        self.last_token = np.zeros(max_batch, np.int32)
+        self._slots: dict[int, Request] = {}
+        self._next_rid = 0
+        self._queue: list[Request] = []
+        self._finished: list[Request] = []
+        self._exact_prefill = cfg.family in ("ssm", "hybrid")
+
+    # ------------------------------------------------------------- jit fns
+    @functools.cached_property
+    def _prefill(self):
+        @jax.jit
+        def fn(params, tokens):
+            logits, caches, _ = forward_full(params, self.cfg, tokens,
+                                             return_cache=True)
+            return logits, caches
+        return fn
+
+    @functools.cached_property
+    def _decode(self):
+        if self._cache_sh is not None:
+            @functools.partial(
+                jax.jit,
+                in_shardings=(self._param_sh, None, self._cache_sh, None),
+                out_shardings=(None, self._cache_sh),
+                donate_argnums=(2,),
+            )
+            def fn(params, token, caches, pos):
+                return forward_decode(params, self.cfg, token, caches, pos)
+            return fn
+
+        @jax.jit
+        def fn(params, token, caches, pos):
+            logits, caches = forward_decode(params, self.cfg, token, caches, pos)
+            return logits, caches
+        return fn
+
+    # --------------------------------------------------------- bookkeeping
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        req = Request(self._next_rid, list(prompt), max_new_tokens)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    def _free_slots(self) -> list[int]:
+        return [i for i in range(self.max_batch) if not self.active[i]]
+
+    def _bucket(self, n: int) -> int:
+        if self._exact_prefill:
+            return n
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _sample(self, logits: jax.Array) -> int:
+        lf = np.array(logits, np.float32)        # writable copy
+        lf[self.cfg.vocab_size:] = -np.inf       # mask vocab padding
+        if self.greedy:
+            return int(lf.argmax())
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(sub, jnp.asarray(lf)))
+
+    # -------------------------------------------------------------- prefill
+    def _insert(self, req: Request, slot: int) -> None:
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = len(prompt)
+        assert plen < self.max_len, "prompt longer than engine max_len"
+        sp = self._bucket(plen)
+        padded = np.zeros(sp, np.int32)
+        padded[:plen] = prompt
+        logits, pcache = self._prefill(self.params, jnp.asarray(padded)[None, :])
+        first = self._sample(logits[0, plen - 1])
+
+        def put(key: str, engine_leaf, new_leaf):
+            if key in _SEQ_KEYS:
+                S = new_leaf.shape[2]
+                win = engine_leaf.shape[2]
+                if S <= win:
+                    return engine_leaf.at[:, slot, :S].set(new_leaf[:, 0])
+                idx = np.arange(S - win, S)
+                return engine_leaf.at[:, slot, idx % win].set(new_leaf[:, 0, idx])
+            return engine_leaf.at[:, slot].set(new_leaf[:, 0])
+
+        self.caches = {k: put(k, self.caches[k], pcache[k]) for k in self.caches}
+        self.pos[slot] = plen
+        self.active[slot] = True
+        self.last_token[slot] = first
+        req.slot = slot
+        req.tokens.append(first)
+        self._slots[slot] = req
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> dict[int, int]:
+        """Admit queued requests into free slots, then decode one token for
+        every active slot.  Returns {request id: new token}."""
+        for slot in self._free_slots():
+            if not self._queue:
+                break
+            self._insert(self._queue.pop(0), slot)
+        if not self.active.any():
+            return {}
+
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.last_token), self.caches,
+            jnp.asarray(self.pos),
+        )
+        out: dict[int, int] = {}
+        lg = np.array(logits, np.float32)        # writable copy
+        for slot, req in list(self._slots.items()):
+            if req.done:
+                continue
+            row = lg[slot]
+            row[self.cfg.vocab_size:] = -np.inf
+            tok = int(row.argmax()) if self.greedy else self._sample(row)
+            req.tokens.append(tok)
+            out[req.rid] = tok
+            self.last_token[slot] = tok
+            self.pos[slot] += 1
+            if req.done or self.pos[slot] >= self.max_len - 1:
+                self.active[slot] = False
+                self._finished.append(req)
+                del self._slots[slot]
+        return out
+
+    # ------------------------------------------------------------ driver
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self._queue or self._slots) and steps < max_steps:
+            self.step()
+            steps += 1
+        return sorted(self._finished, key=lambda r: r.rid)

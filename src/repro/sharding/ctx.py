@@ -1,0 +1,66 @@
+"""Activation-sharding context.
+
+Model code stays sharding-agnostic: it calls :func:`shard_act` with a logical
+activation name at a few key points (embeddings, block residual stream,
+logits).  The launcher installs a name → PartitionSpec mapping from the plan
+while tracing under the mesh; outside any context (CPU smoke tests, unit
+tests) the calls are identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+
+_ACT: ContextVar[dict | None] = ContextVar("repro_act_shardings", default=None)
+
+
+@contextlib.contextmanager
+def use_activation_sharding(specs: dict):
+    """Install logical-name → PartitionSpec hints for the enclosed trace."""
+    tok = _ACT.set(dict(specs))
+    try:
+        yield
+    finally:
+        _ACT.reset(tok)
+
+
+def _strip_manual(spec):
+    """Drop mesh axes that are Manual in the current trace context (inside a
+    shard_map region constraints may only name the Auto axes)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - older jax
+        return spec
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return spec
+    manual = {
+        n for n, t in zip(mesh.axis_names, mesh.axis_types)
+        if "Manual" in str(t)
+    }
+    if not manual:
+        return spec
+    from jax.sharding import PartitionSpec as P
+
+    entries = []
+    for e in tuple(spec):
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a not in manual)
+            entries.append(kept if kept else None)
+        elif e in manual:
+            entries.append(None)
+        else:
+            entries.append(e)
+    return P(*entries)
+
+
+def shard_act(x: jax.Array, name: str) -> jax.Array:
+    specs = _ACT.get()
+    if specs is None or name not in specs:
+        return x
+    spec = specs[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _strip_manual(spec))

@@ -1,0 +1,79 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+Within a pod (the ``data`` axis), gradient reduction rides the ICI fabric
+and stays fp32.  *Across pods* (DCN or the sparse inter-pod ICI), bandwidth
+is the scarce resource — the classic distributed-optimization trick is to
+quantize the cross-replica reduce to int8 with an error-feedback (EF)
+residual so the quantization noise is re-injected next step instead of
+being lost (1-bit Adam / EF-SGD lineage).
+
+Math (per tensor, per step):
+    c      = g + ef                      # carry forward last step's residual
+    scale  = max|c| / 127
+    q      = round(c / scale)  ∈ int8
+    ĝ      = mean over pods of (q·scale) # ← the only cross-pod traffic: q (1B)
+                                          #   + scale (4B per tensor)
+    ef'    = c − q·scale                 # local residual for next step
+
+Wire cost per element drops 4× vs fp32 (int8 all-gather vs fp32 ring
+all-reduce).  The reduce itself is implemented with ``jax.lax.all_gather``
+over the pod axis on the *int8 payload*, then a local dequant-sum — this is
+what keeps the wire format 8-bit (a plain ``psum`` would upcast).
+
+Used inside ``shard_map`` over the ``pod`` axis (weights are replicated
+across pods, so the pod axis is pure DP) with all other mesh axes left in
+``auto`` (GSPMD) mode — see :func:`repro.train.train_loop.make_train_step`.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_init",
+           "pod_allreduce_int8", "compressed_mean"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads_like)
+
+
+def pod_allreduce_int8(
+    g: jax.Array, ef: jax.Array, axis_name: str
+) -> tuple[jax.Array, jax.Array]:
+    """Cross-pod mean of one gradient tensor with int8 EF compression.
+
+    Returns (mean gradient fp32, new EF residual).
+    """
+    c = g.astype(jnp.float32) + ef
+    q, scale = quantize_int8(c)
+    # int8 payload on the wire; scales are scalar per tensor
+    q_all = jax.lax.all_gather(q, axis_name)            # (n_pods, ...) int8
+    s_all = jax.lax.all_gather(scale, axis_name)        # (n_pods,)
+    deq = q_all.astype(jnp.float32) * s_all.reshape((-1,) + (1,) * q.ndim)
+    mean = jnp.mean(deq, axis=0)
+    ef_new = c - dequantize_int8(q, scale)
+    return mean, ef_new
+
+
+def compressed_mean(grads: Any, ef: Any, axis_name: str) -> tuple[Any, Any]:
+    """Tree version of :func:`pod_allreduce_int8`."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [pod_allreduce_int8(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

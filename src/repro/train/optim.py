@@ -1,0 +1,83 @@
+"""AdamW + LR schedule + global-norm clipping, as explicit pytree functions.
+
+fp32 master weights and moments; the model casts to bf16 at use.  No
+external optimizer dependency — states are plain pytrees so the checkpoint
+and sharding machinery treat them like parameters (same PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "lr_at", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    """Linear warmup → cosine decay to ``min_lr_ratio·lr``."""
+    s = step.astype(jnp.float32)
+    warm = oc.lr * s / max(1, oc.warmup_steps)
+    prog = jnp.clip((s - oc.warmup_steps) / max(1, oc.total_steps - oc.warmup_steps),
+                    0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < oc.warmup_steps, warm, oc.lr * cos)
+
+
+def adamw_init(params: Any) -> tuple[Any, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    params: Any, grads: Any, m: Any, v: Any, step: jax.Array, oc: OptConfig
+) -> tuple[Any, Any, Any, dict[str, jax.Array]]:
+    """One AdamW step (with decoupled weight decay and grad clipping).
+
+    Returns (params, m, v, metrics).
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, oc)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - oc.beta1 ** t
+    bc2 = 1.0 - oc.beta2 ** t
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m_new = oc.beta1 * m_ + (1 - oc.beta1) * g
+        v_new = oc.beta2 * v_ + (1 - oc.beta2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, {"grad_norm": gnorm, "lr": lr}

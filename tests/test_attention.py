@@ -1,0 +1,107 @@
+"""Attention correctness: flash-vs-plain, GQA grouping, windows, MLA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention as A
+from repro.models.layers import Initializer, apply_rope, rope_table
+
+RNG = np.random.default_rng(0)
+
+
+def _qkv(B, Sq, Sk, H, KV, D):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, Sk, KV, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Sk, KV, D)).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("S", [16, 40])
+@pytest.mark.parametrize("kv_chunk", [8, 16, 64])
+def test_flash_matches_plain_causal(H, KV, S, kv_chunk):
+    q, k, v = _qkv(2, S, S, H, KV, 16)
+    out = A.flash_attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+    expect = A.plain_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_flash_matches_plain_windowed(window):
+    q, k, v = _qkv(1, 32, 32, 4, 4, 8)
+    out = A.flash_attention(q, k, v, causal=True, window=window, kv_chunk=8)
+    expect = A.plain_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_q_offset():
+    """Chunked prefill continuation: query block at an offset into the keys."""
+    q, k, v = _qkv(1, 8, 32, 4, 4, 8)
+    out = A.flash_attention(q, k, v, causal=True, q_offset=24, kv_chunk=8)
+    expect = A.plain_attention(q, k, v, causal=True, q_offset=24)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([(4, 4), (4, 2)]),
+       st.sampled_from([9, 17, 33]))
+def test_flash_property_odd_lengths(b, hkv, s):
+    H, KV = hkv
+    q, k, v = _qkv(b, s, s, H, KV, 8)
+    out = A.flash_attention(q, k, v, causal=True, kv_chunk=8)
+    expect = A.plain_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=3e-4, atol=3e-4)
+
+
+def test_gqa_decode_matches_prefill_lastrow():
+    ini = Initializer(jax.random.key(0))
+    D, H, KV, dh, S = 32, 4, 2, 8, 12
+    p = A.init_gqa(ini, D, H, KV, dh)
+    x = jnp.asarray(RNG.normal(size=(2, S, D)).astype(np.float32))
+    cos, sin = rope_table(S, dh)
+    full, (k, v) = A.gqa_prefill(p, x, cos, sin, kv_chunk=8)
+    # decode the last position against a cache of the first S-1
+    kc = jnp.pad(k[:, :-1], ((0, 0), (0, 1), (0, 0), (0, 0)))
+    vc = jnp.pad(v[:, :-1], ((0, 0), (0, 1), (0, 0), (0, 0)))
+    pos = jnp.full((2,), S - 1, jnp.int32)
+    cos1 = cos[S - 1:S][None].repeat(2, 0)
+    sin1 = sin[S - 1:S][None].repeat(2, 0)
+    out, _ = A.gqa_decode(p, x[:, -1:], kc, vc, pos, cos1, sin1)
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=1e-4, atol=1e-4)
+
+
+def test_rope_is_rotation():
+    """RoPE preserves norms and relative-position inner products."""
+    cos, sin = rope_table(10, 8)
+    x = jnp.asarray(RNG.normal(size=(1, 10, 2, 8)).astype(np.float32))
+    r = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(r, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(RNG.normal(size=8).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=8).astype(np.float32))
+    def rot(vec, pos):
+        c, s = rope_table(1, 8, offset=pos)
+        return apply_rope(vec[None, None, None, :], c, s)[0, 0, 0]
+    d01 = jnp.dot(rot(q, 0), rot(k, 3))
+    d47 = jnp.dot(rot(q, 4), rot(k, 7))
+    np.testing.assert_allclose(d01, d47, rtol=1e-4)
+
+
+def test_mla_cache_is_latent_sized():
+    """MLA's point: the cache is (S, r + d_rope), not (S, 2·H·dh)."""
+    ini = Initializer(jax.random.key(1))
+    D, H, dn, dr, r, rq = 32, 4, 8, 4, 16, 12
+    p = A.init_mla(ini, D, H, kv_lora_rank=r, q_lora_rank=rq, d_head=dn, d_rope=dr)
+    x = jnp.asarray(RNG.normal(size=(2, 6, D)).astype(np.float32))
+    cos, sin = rope_table(6, dr)
+    _, (ckv, kr) = A.mla_prefill(p, x, cos, sin)
+    assert ckv.shape == (2, 6, r)
+    assert kr.shape == (2, 6, dr)
+    latent = np.prod(ckv.shape[1:]) + np.prod(kr.shape[1:])
+    full_kv = 6 * 2 * H * dn
+    assert latent < full_kv / 2

@@ -1,0 +1,84 @@
+"""PF constraint propagation tests (paper §IV-A / Fig. 2)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import node_types
+from repro.core.constraints import PFGroups
+from repro.core.dfg import DFG
+
+
+def _mixed_graph():
+    g = DFG()
+    g.add_input("x", (16,))
+    s = g.add("gemv", "x", id="mv", matrix=np.ones((16, 16), np.float32))
+    a = g.add("scalar_mul", s, id="sc", scalar=2.0)
+    b = g.add("tanh", a, id="th")
+    c = g.add("gemv", b, id="mv2", matrix=np.ones((8, 16), np.float32))
+    d = g.add("relu", c, id="rl")
+    g.mark_output(d)
+    return g
+
+
+def test_linear_cluster_shares_group():
+    g = _mixed_graph()
+    groups = PFGroups.build(g)
+    assert groups.group_of["sc"] == groups.group_of["th"]
+    assert groups.group_of["sc"] != groups.group_of["rl"]     # split by mv2
+    assert groups.group_of["mv"] != groups.group_of["mv2"]    # each its own
+
+
+def test_assignment_covers_all_nodes():
+    g = _mixed_graph()
+    groups = PFGroups.build(g)
+    pfs = [i + 1 for i in range(len(groups.members))]
+    asn = groups.assignment(pfs)
+    assert set(asn) == set(g.nodes)
+    # equal within groups
+    for mem in groups.members:
+        assert len({asn[n] for n in mem}) == 1
+
+
+def test_group_max_pf_is_min_of_members():
+    g = _mixed_graph()
+    groups = PFGroups.build(g)
+    gi = groups.group_of["sc"]
+    expect = min(
+        node_types.get(g.nodes[n].op).max_pf(g.nodes[n].dims)
+        for n in groups.members[gi]
+    )
+    assert groups.max_pf(gi) == expect
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(["relu", "tanh", "scalar_mul", "gemv"]),
+                min_size=2, max_size=10))
+def test_random_chains_grouping_invariants(ops):
+    g = DFG()
+    g.add_input("x", (8,))
+    prev = "x"
+    for i, op in enumerate(ops):
+        kw = {}
+        if op == "gemv":
+            kw["matrix"] = np.ones((8, 8), np.float32)
+        if op == "scalar_mul":
+            kw["scalar"] = 1.5
+        prev = g.add(op, prev, id=f"n{i}", **kw)
+    g.mark_output(prev)
+    groups = PFGroups.build(g)
+    # every node in exactly one group
+    seen = [n for mem in groups.members for n in mem]
+    assert sorted(seen) == sorted(g.nodes)
+    # non-linear nodes are singleton groups
+    for mem in groups.members:
+        kinds = {node_types.get(g.nodes[n].op).linear_time for n in mem}
+        assert len(kinds) == 1
+        if kinds == {False}:
+            assert len(mem) == 1
+    # adjacent linear nodes share a group
+    for i in range(len(ops) - 1):
+        a, b = f"n{i}", f"n{i+1}"
+        if (node_types.get(g.nodes[a].op).linear_time
+                and node_types.get(g.nodes[b].op).linear_time):
+            assert groups.group_of[a] == groups.group_of[b]

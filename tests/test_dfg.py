@@ -1,0 +1,121 @@
+"""DFG IR unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dfg import DFG
+
+
+def _chain(n: int) -> DFG:
+    g = DFG("chain")
+    g.add_input("x", (8,))
+    prev = "x"
+    for i in range(n):
+        prev = g.add("relu", prev, id=f"n{i}")
+    g.mark_output(prev)
+    return g
+
+
+def test_build_and_topo():
+    g = _chain(5)
+    order = g.topo_order()
+    assert order == [f"n{i}" for i in range(5)]
+    assert g.out_shape("n4") == (8,)
+
+
+def test_duplicate_ids_rejected():
+    g = DFG()
+    g.add_input("x", (4,))
+    g.add("relu", "x", id="a")
+    with pytest.raises(ValueError):
+        g.add("relu", "x", id="a")
+    with pytest.raises(ValueError):
+        g.add_input("x", (4,))
+
+
+def test_unknown_input_rejected():
+    g = DFG()
+    g.add_input("x", (4,))
+    with pytest.raises(ValueError):
+        g.add("relu", "nope")
+
+
+def test_unknown_op_rejected():
+    g = DFG()
+    g.add_input("x", (4,))
+    with pytest.raises(KeyError):
+        g.add("not_an_op", "x")
+
+
+def test_critical_path_diamond():
+    g = DFG()
+    g.add_input("x", (8,))
+    a = g.add("relu", "x", id="a")
+    b = g.add("exp", a, id="b")       # heavy branch (exp = 4 cycles/elem)
+    c = g.add("relu", a, id="c")      # light branch
+    d = g.add("add", b, c, id="d")
+    g.mark_output(d)
+    lat = {"a": 1.0, "b": 10.0, "c": 1.0, "d": 1.0}
+    path, total = g.critical_path(lambda n: lat[n.id])
+    assert path == ["a", "b", "d"]
+    assert total == 12.0
+
+
+def test_all_paths_counts():
+    g = DFG()
+    g.add_input("x", (4,))
+    a = g.add("relu", "x", id="a")
+    b1 = g.add("relu", a, id="b1")
+    b2 = g.add("relu", a, id="b2")
+    c = g.add("add", b1, b2, id="c")
+    g.mark_output(c)
+    assert len(g.all_paths()) == 2
+
+
+def test_cycle_detection():
+    g = DFG()
+    g.add_input("x", (4,))
+    a = g.add("relu", "x", id="a")
+    b = g.add("relu", a, id="b")
+    g.nodes["a"].inputs = ["b"]       # force a cycle
+    with pytest.raises(ValueError, match="cycle"):
+        g.topo_order()
+
+
+def test_connected_components():
+    g = DFG()
+    g.add_input("x", (4,))
+    a = g.add("relu", "x", id="a")
+    s = g.add("gemv", a, id="s", matrix=np.ones((4, 4), np.float32))
+    b = g.add("relu", s, id="b")
+    c = g.add("tanh", b, id="c")
+    g.mark_output(c)
+    comps = g.subgraph_of_connected(lambda n: n.op in ("relu", "tanh"))
+    assert sorted(map(sorted, comps)) == [["a"], ["b", "c"]]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 12))
+def test_chain_critical_path_is_whole_chain(n):
+    g = _chain(n)
+    path, total = g.critical_path(lambda node: 2.0)
+    assert len(path) == n
+    assert total == 2.0 * n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(["relu", "tanh", "exp", "sigmoid"]),
+                min_size=1, max_size=8))
+def test_topo_respects_dependencies(ops):
+    g = DFG()
+    g.add_input("x", (6,))
+    prev = "x"
+    for i, op in enumerate(ops):
+        prev = g.add(op, prev, id=f"n{i}")
+    order = g.topo_order()
+    pos = {nid: i for i, nid in enumerate(order)}
+    for nid in order:
+        for p in g.predecessors(nid):
+            assert pos[p] < pos[nid]

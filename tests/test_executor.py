@@ -1,0 +1,88 @@
+"""Executor tests: atom-ordered evaluation, fusion equivalence on random
+DFGs (hypothesis), output contracts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+
+
+def _random_dfg(ops: list[str], seed: int) -> DFG:
+    """A branchy random DFG mixing linear and non-linear ops."""
+    rng = np.random.default_rng(seed)
+    g = DFG("rand")
+    g.add_input("x", (12,))
+    frontier = ["x"]
+    for i, op in enumerate(ops):
+        src = frontier[rng.integers(0, len(frontier))]
+        if op == "gemv":
+            nid = g.add(op, src, id=f"n{i}",
+                        matrix=rng.normal(size=(12, 12)).astype(np.float32))
+        elif op == "scalar_mul":
+            nid = g.add(op, src, id=f"n{i}", scalar=float(rng.normal()))
+        elif op == "add2" and len(frontier) >= 2:
+            a, b = rng.choice(len(frontier), size=2, replace=False)
+            fa, fb = frontier[a], frontier[b]
+            # both operands must be shape (12,)
+            nid = g.add("add", fa, fb, id=f"n{i}")
+        else:
+            nid = g.add(op if op != "add2" else "tanh", src, id=f"n{i}")
+        frontier.append(nid)
+    g.mark_output(frontier[-1])
+    return g
+
+
+_OPS = st.lists(
+    st.sampled_from(["relu", "tanh", "exp", "scalar_mul", "gemv", "add2"]),
+    min_size=2, max_size=10,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_OPS, st.integers(0, 2**31 - 1))
+def test_fused_execution_matches_reference(ops, seed):
+    """use_pallas fusion of §IV-G clusters must never change numerics, on
+    arbitrary DFG topologies (chains, diamonds, re-entrant shapes)."""
+    g_ref = _random_dfg(ops, seed)
+    g_fused = _random_dfg(ops, seed)
+    x = np.random.default_rng(seed).normal(size=12).astype(np.float32) * 0.3
+    ref = execute(g_ref, x=x)
+    prog = MafiaCompiler(use_pallas=True).compile(g_fused)
+    out = prog(x=x)
+    for key in ref:
+        np.testing.assert_allclose(out[key], ref[key], rtol=2e-3, atol=2e-4)
+
+
+def test_missing_input_raises():
+    g = _random_dfg(["relu"], 0)
+    fn = build_callable(g, jit=False)
+    with pytest.raises(TypeError, match="missing graph inputs"):
+        fn()
+
+
+def test_outputs_only_marked_nodes():
+    g = DFG()
+    g.add_input("x", (4,))
+    a = g.add("relu", "x", id="a")
+    b = g.add("tanh", a, id="b")
+    g.mark_output(b)
+    out = execute(g, x=np.ones(4, np.float32))
+    assert set(out) == {"b"}
+
+
+def test_selective_pipelining_never_worse():
+    from repro.configs.classical import BENCHMARKS, build
+
+    for bench in BENCHMARKS[:4]:
+        dfg_a, _, _ = build(bench)
+        dfg_p, _, _ = build(bench)
+        dfg_n, _, _ = build(bench)
+        auto = MafiaCompiler(pipelining="auto").compile(dfg_a)
+        pipe = MafiaCompiler(pipelining=True).compile(dfg_p)
+        nopipe = MafiaCompiler(pipelining=False).compile(dfg_n)
+        best = min(pipe.latency_cycles, nopipe.latency_cycles)
+        assert auto.latency_cycles <= best + 1e-9

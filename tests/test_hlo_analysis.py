@@ -1,0 +1,82 @@
+"""HLO cost-analyzer tests: trip-count awareness, dot flops, collectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    cost = analyze_hlo(c.as_text())
+    assert cost.flops >= 2 * 32 * 48 * 16
+    assert cost.flops < 2 * 32 * 48 * 16 * 1.1
+
+
+def test_scan_trip_count_multiplies():
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = _compile(scanned, x, w)
+    cost = analyze_hlo(c.as_text())
+    expect = 2 * 64 * 64 * 64 * 12
+    assert abs(cost.flops - expect) / expect < 0.01
+    assert cost.unknown_trip_loops == 0
+
+
+def test_nested_scan_multiplies_product():
+    def nested(x, w):
+        def inner(c, _):
+            return jnp.tanh(c @ w), None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    cost = analyze_hlo(_compile(nested, x, w).as_text())
+    expect = 2 * 32 * 32 * 32 * 12
+    assert abs(cost.flops - expect) / expect < 0.02
+
+
+def test_bytes_scale_with_scan():
+    def scanned(x):
+        def body(c, _):
+            return c * 2.0 + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c1 = analyze_hlo(_compile(scanned, x).as_text())
+    xla = _compile(scanned, x).cost_analysis()
+    # ours must be ≥ the (single-trip) XLA number
+    assert c1.bytes >= float(xla.get("bytes accessed", 0))
+
+
+def test_transcendentals_counted():
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    cost = analyze_hlo(_compile(lambda v: jnp.exp(v), x).as_text())
+    assert cost.transcendentals >= 128
+
+
+def test_no_collectives_single_device():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = analyze_hlo(_compile(lambda a: a @ a, x).as_text())
+    assert cost.collective_bytes == 0

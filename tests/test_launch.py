@@ -1,0 +1,83 @@
+"""Launch-layer tests that are safe on one CPU device (the dry-run itself
+needs 512 placeholder devices and is exercised via experiments/, not here)."""
+
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import SHAPES, get_arch
+from repro.launch.roofline import model_flops, n_active_params
+from repro.launch.train import run_training
+
+# NOTE: repro.launch.dryrun is intentionally NOT imported here — it sets
+# XLA_FLAGS for 512 placeholder devices as its first statements.
+
+
+def test_n_active_params_moe_scaling():
+    ol = get_arch("olmoe-1b-7b").model
+    total = n_active_params(ol)
+    # olmoe: ~6.9B total, ~1.3B active (top-8 of 64) minus embeddings
+    assert 0.8e9 < total < 2.0e9, total
+    dense = get_arch("granite-8b").model
+    nd = n_active_params(dense)
+    assert 7.5e9 < nd < 8.5e9
+
+
+def test_model_flops_conventions():
+    cfg = get_arch("granite-8b").model
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    # train = 6·N·T, prefill = 2·N·T, decode = 2·N·B
+    assert tr / pf == pytest.approx(3.0, rel=1e-6)
+    assert dc < pf / 1000
+
+
+def test_run_training_smoke_and_resume(tmp_path):
+    out = run_training(
+        "qwen2.5-3b", smoke=True, steps=6, batch=4, seq_len=16,
+        ckpt_dir=str(tmp_path), ckpt_every=3, microbatches=2, lr=3e-3,
+        log_every=2,
+    )
+    assert out["final"]["loss"] > 0
+    # resume: continues from the saved step without error
+    out2 = run_training(
+        "qwen2.5-3b", smoke=True, steps=8, batch=4, seq_len=16,
+        ckpt_dir=str(tmp_path), ckpt_every=4, microbatches=2, lr=3e-3,
+        log_every=2,
+    )
+    assert out2["final"]["step"] == 8
+
+
+def test_mesh_module_is_import_pure():
+    """Importing mesh.py must not touch jax device state (the dry-run sets
+    the device-count flag before first jax init)."""
+    import importlib
+
+    import repro.launch.mesh as m
+
+    importlib.reload(m)     # would fail loudly if module-level jax calls ran
+    assert callable(m.make_production_mesh)
+
+
+def test_opt_overrides_reference_real_archs():
+    # read the table without importing the dryrun module (XLA flags!)
+    import ast, pathlib
+
+    src = pathlib.Path("src/repro/launch/dryrun.py").read_text()
+    tree = ast.parse(src)
+    names = []
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if getattr(t, "id", "") == "OPT_OVERRIDES":
+                names = [ast.literal_eval(k) for k in node.value.keys]
+    assert names, "OPT_OVERRIDES not found"
+    for n in names:
+        get_arch(n)          # raises if unknown

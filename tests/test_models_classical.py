@@ -1,0 +1,65 @@
+"""Bonsai/ProtoNN (the paper's §V-A benchmark models): DFG ≡ reference math,
+trainability, and the compiled-program equivalence across ablations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core import MafiaCompiler
+from repro.core.executor import execute
+from repro.data.datasets import TABLE_I, get_spec, make_dataset
+from repro.models import bonsai, protonn
+
+
+def test_table_i_matches_paper():
+    by = {s.name: s for s in TABLE_I}
+    assert by["cifar-b"].n_features == 400 and by["cifar-b"].mcu_bonsai_us == 6121
+    assert by["ward-b"].n_features == 1000 and by["ward-b"].mcu_protonn_us == 23241
+    assert by["letter-m"].n_features == 16 and by["letter-m"].n_classes == 26
+    assert len(TABLE_I) == 10 and len(BENCHMARKS) == 20
+
+
+@pytest.mark.parametrize("algo,mod", [("bonsai", bonsai), ("protonn", protonn)])
+@pytest.mark.parametrize("ds", ["usps-b", "letter-m"])
+def test_dfg_matches_reference(algo, mod, ds):
+    spec = get_spec(ds)
+    cfg = mod.from_spec(spec)
+    params = mod.init_params(cfg, seed=1)
+    dfg = mod.build_dfg(params, cfg)
+    x = np.random.default_rng(0).normal(size=spec.n_features).astype(np.float32)
+    out = execute(dfg, x=x)
+    ref = mod.predict(params, cfg, jnp.asarray(x))
+    key = "ClassSum" if algo == "bonsai" else "ScoreSum"
+    np.testing.assert_allclose(out[key], ref, rtol=1e-4, atol=1e-4)
+    assert int(out["Pred"][0]) == int(jnp.argmax(ref))
+
+
+@pytest.mark.parametrize("algo,mod", [("bonsai", bonsai), ("protonn", protonn)])
+def test_training_beats_chance(algo, mod):
+    spec = get_spec("usps-b")
+    Xtr, ytr, Xte, yte = make_dataset(spec, n_train=512, n_test=256, seed=0)
+    cfg = mod.from_spec(spec)
+    params = mod.train(cfg, Xtr, ytr, steps=200, seed=0)
+    acc = mod.accuracy(params, cfg, Xte, yte)
+    assert acc > 0.7, f"{algo} accuracy {acc} (chance = 0.5)"
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_compiled_program_equivalence(use_pallas):
+    """Fusion/pipelining ablations never change numerics (§IV-G is a
+    scheduling optimization, not a math change)."""
+    dfg, params, cfg = build("protonn/usps-m")
+    x = np.random.default_rng(2).normal(size=cfg.n_features).astype(np.float32)
+    base = execute(dfg, x=x)["ScoreSum"]
+    prog = MafiaCompiler(use_pallas=use_pallas, pipelining=True).compile(dfg)
+    out = prog(x=x)["ScoreSum"]
+    np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-4)
+
+
+def test_all_twenty_benchmarks_compile():
+    for bench in BENCHMARKS:
+        dfg, params, cfg = build(bench)
+        prog = MafiaCompiler().compile(dfg)
+        assert prog.latency_us > 0
+        assert prog.lut_true > 0

@@ -1,0 +1,91 @@
+"""Op registry (template library) tests — shapes, taxonomy, cost models."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import node_types
+
+PAPER_OPS = {
+    # §III: ops the Matrix Template Library must support
+    "spmv", "gemv", "matmul", "add", "sub", "dot", "outer", "hadamard",
+    "scalar_mul", "exp", "relu", "sigmoid", "tanh",
+}
+
+
+def test_registry_covers_paper_ops():
+    assert PAPER_OPS <= set(node_types.all_ops())
+
+
+def test_taxonomy():
+    # §IV-A: matmul-family = non-linear-time; elementwise = linear-time
+    for op in ("add", "sub", "hadamard", "relu", "exp", "sigmoid", "tanh",
+               "scalar_mul", "dot", "reduce_sum", "argmax"):
+        assert node_types.get(op).linear_time, op
+    for op in ("gemv", "spmv", "matmul", "outer", "sq_l2"):
+        assert not node_types.get(op).linear_time, op
+
+
+def test_dsp_is_exactly_linear():
+    # DSP[PF] = αDSP·PF by construction (§IV-B)
+    for name, spec in node_types.all_ops().items():
+        for pf in (1, 3, 17):
+            assert spec.dsp(pf) == spec.dsp_per_pe * pf
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(PAPER_OPS)), st.integers(1, 64))
+def test_lut_monotone_in_pf(op, pf):
+    spec = node_types.get(op)
+    dims = {"n": 256, "m": 16, "k": 16, "nnz": 128, "d": 16}
+    dims = {k: v for k, v in dims.items()}
+    assert spec.lut(dims, pf + 1) >= spec.lut(dims, pf)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(sorted(PAPER_OPS)))
+def test_pf1_cycles_positive(op):
+    spec = node_types.get(op)
+    dims = {"n": 256, "m": 16, "k": 16, "nnz": 128, "d": 16}
+    assert spec.cycles(dims, 1) > 0
+    assert spec.max_pf(dims) >= 1
+
+
+def test_cycles_improve_then_saturate():
+    """Parallelizing helps up to a point, then arbitration dominates —
+    the non-monotonicity the γL/PF + βL·PF model captures (§IV-B)."""
+    spec = node_types.get("gemv")
+    dims = {"m": 64, "n": 400}
+    c1 = spec.cycles(dims, 1)
+    c8 = spec.cycles(dims, 8)
+    assert c8 < c1 / 4            # near-linear speedup early
+    huge = spec.cycles(dims, 4096)
+    assert huge > spec.cycles(dims, 256)   # over-parallelized regime
+
+
+def test_shape_validation_errors():
+    from repro.core.dfg import DFG
+
+    g = DFG()
+    g.add_input("x", (5,))
+    g.add("gemv", "x", id="bad_mv", matrix=np.ones((3, 4), np.float32))  # 4 != 5
+    with pytest.raises(ValueError):
+        g.validate()
+
+    g2 = DFG()
+    g2.add_input("x", (5,))
+    g2.add("add", "x", id="bad_add", vec=np.ones(7, np.float32))
+    with pytest.raises(ValueError):
+        g2.validate()
+
+
+def test_spmv_nnz_derived():
+    from repro.core.dfg import DFG
+
+    w = np.zeros((6, 8), np.float32)
+    w[0, 0] = w[2, 3] = 1.0
+    g = DFG()
+    g.add_input("x", (8,))
+    nid = g.add("spmv", "x", matrix=w)
+    assert g.nodes[nid].dims["nnz"] == 2

@@ -1,0 +1,107 @@
+"""Best-PF estimator tests (paper §IV-E, §VI-C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import node_types
+from repro.core.compiler import MafiaCompiler
+from repro.core.constraints import PFGroups
+from repro.core.dfg import DFG
+from repro.core.fpga_model import ARTY_A7
+from repro.core.optimizer import CostContext, blackbox_best_pf, greedy_best_pf
+from repro.core.profiler import profile_pf1
+from repro.data.datasets import get_spec
+from repro.models import bonsai, protonn
+
+
+def _ctx(dfg, backend="fpga"):
+    profile_pf1(dfg, backend=backend)
+    groups = PFGroups.build(dfg)
+    from repro.core.tpu_model import TpuBudget
+
+    budget = ARTY_A7 if backend == "fpga" else TpuBudget()
+    return CostContext(dfg, groups, budget, backend=backend)
+
+
+def _bonsai_dfg(ds="usps-b"):
+    spec = get_spec(ds)
+    cfg = bonsai.from_spec(spec)
+    return bonsai.build_dfg(bonsai.init_params(cfg), cfg)
+
+
+def _protonn_dfg(ds="usps-b"):
+    spec = get_spec(ds)
+    cfg = protonn.from_spec(spec)
+    return protonn.build_dfg(protonn.init_params(cfg), cfg)
+
+
+@pytest.mark.parametrize("builder", [_bonsai_dfg, _protonn_dfg])
+def test_greedy_improves_over_pf1(builder):
+    ctx = _ctx(builder())
+    base = ctx.critical([1] * len(ctx.groups.members))[1]
+    res = greedy_best_pf(ctx)
+    assert res.est_latency < base / 2          # substantial speedup
+    assert ctx.fits(res.group_pfs)
+
+
+def test_greedy_respects_budget_and_caps():
+    ctx = _ctx(_bonsai_dfg("mnist-m"))
+    res = greedy_best_pf(ctx, metric="latency")
+    assert res.est_lut <= ARTY_A7.luts
+    assert res.est_dsp <= ARTY_A7.dsps
+    for g, pf in enumerate(res.group_pfs):
+        assert 1 <= pf <= ctx.max_pf(g)
+
+
+def test_both_metrics_supported():
+    ctx = _ctx(_protonn_dfg())
+    r1 = greedy_best_pf(ctx, metric="latency")
+    r2 = greedy_best_pf(ctx, metric="latency_per_lut")
+    assert r1.est_latency > 0 and r2.est_latency > 0
+    # latency-per-lut is the thriftier metric
+    assert r2.est_lut <= r1.est_lut * 1.5
+
+
+def test_blackbox_comparable_to_greedy():
+    """§VI-C quality claim: greedy ≈ as good or better than the paper-
+    faithful black-box (floor rounding loses the relaxed optimum).  The
+    paper's 22× solve-time gap is solver-scale-dependent (our SLSQP on
+    KB-sized DFGs is fast), so timing is asserted only for the beyond-paper
+    solver-effort variant (multistart + rounding branch-and-bound)."""
+    ctx = _ctx(_bonsai_dfg())
+    g = greedy_best_pf(ctx)
+    b = blackbox_best_pf(ctx)
+    assert ctx.fits(b.group_pfs)
+    assert g.est_latency <= b.est_latency * 1.05   # greedy wins or ties
+    bp = blackbox_best_pf(ctx, n_starts=5, rounding_budget=4000)
+    assert ctx.fits(bp.group_pfs)
+    assert bp.solve_time_s > g.solve_time_s        # extra effort costs time
+    assert bp.est_latency <= b.est_latency + 1e-9  # ...and can only help
+
+
+def test_tpu_backend_pow2_steps():
+    ctx = _ctx(_bonsai_dfg(), backend="tpu")
+    res = greedy_best_pf(ctx, metric="latency")
+    for pf in res.group_pfs:
+        assert pf & (pf - 1) == 0, f"PF {pf} not a power of two"
+        assert pf <= 16
+
+
+def test_spmv_pf_varies_across_datasets():
+    """§IV-E: 'the PF for the SpMV node ranges from 3 to 71' across data
+    sets — criticality-driven, not one-size-fits-all."""
+    pfs = []
+    for ds in ("letter-m", "ward-b", "mnist-m", "usps-b", "cr-m"):
+        dfg = _bonsai_dfg(ds)
+        comp = MafiaCompiler(backend="fpga")
+        res, _ = comp.optimize(dfg)
+        pfs.append(res.assignment["Zx"])
+    assert len(set(pfs)) >= 3, f"SpMV PFs suspiciously uniform: {pfs}"
+    assert max(pfs) / max(1, min(pfs)) >= 2
+
+
+def test_strategy_none_is_pf1():
+    dfg = _protonn_dfg()
+    comp = MafiaCompiler(strategy="none")
+    prog = comp.compile(dfg)
+    assert all(pf == 1 for pf in prog.assignment.values())
