@@ -10,7 +10,7 @@ import sys
 import time
 
 _SECTIONS = ["fig3", "fig4", "estimation", "greedy_vs_blackbox", "ablations",
-             "roofline", "throughput"]
+             "roofline", "throughput", "serve"]
 
 
 def main() -> int:
@@ -42,6 +42,9 @@ def main() -> int:
     if "throughput" in wanted:
         from benchmarks import throughput
         runners["throughput"] = throughput.run
+    if "serve" in wanted:
+        from benchmarks import serve_throughput
+        runners["serve"] = serve_throughput.run
 
     failed = 0
     for name, fn in runners.items():

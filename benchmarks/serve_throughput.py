@@ -1,0 +1,69 @@
+"""Serving throughput of compiled classical programs: requests/sec vs batch.
+
+The paper serves one sample at a time (the FPGA setting); the batched
+serving subsystem (:mod:`repro.serve.classical_engine`) pads request queues
+to power-of-two buckets and runs one batched forward per bucket.  This
+benchmark quantifies what that buys on this host: a per-sample request loop
+over the compiled program vs the engine at several batch sizes, plus both
+batched modes ("vmap" = throughput, "map" = bit-exact).
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.datasets import make_dataset
+from repro.serve.classical_engine import ClassicalServeEngine, get_program
+
+__all__ = ["run"]
+
+_BENCHES = ["bonsai/usps-b", "protonn/usps-b"]
+_BATCHES = [4, 16, 64]
+_N_REQUESTS = 256
+
+
+def _per_sample_rps(prog, X) -> float:
+    out = prog(x=X[0])                      # compile + warm
+    jax.block_until_ready(out[next(iter(out))])
+    t0 = time.perf_counter()
+    for i in range(len(X)):
+        out = prog(x=X[i])
+    jax.block_until_ready(out[next(iter(out))])
+    return len(X) / (time.perf_counter() - t0)
+
+
+def _engine_rps(bench: str, X, max_batch: int, mode: str) -> float:
+    eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode)
+    for x in X[:max_batch]:                 # warm the bucket's jit entry
+        eng.submit(x)
+    eng.run_to_completion()
+    eng.reset_stats()
+    for x in X:
+        eng.submit(x)
+    eng.run_to_completion()
+    return eng.throughput()
+
+
+def run() -> list[str]:
+    out = ["serve.benchmark,mode,batch,requests_per_s,speedup_vs_per_sample"]
+    for bench in _BENCHES:
+        prog = get_program(bench)
+        ds = bench.split("/")[1]
+        _, _, Xte, _ = make_dataset(ds, n_train=64, n_test=_N_REQUESTS)
+        base = _per_sample_rps(prog, Xte)
+        out.append(f"serve.{bench},per-sample,1,{base:.0f},1.00")
+        for mode in ("vmap", "map"):
+            for mb in _BATCHES:
+                rps = _engine_rps(bench, Xte, mb, mode)
+                out.append(
+                    f"serve.{bench},{mode},{mb},{rps:.0f},{rps / base:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

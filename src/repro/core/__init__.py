@@ -6,7 +6,7 @@ estimator (greedy / black-box) → dataflow scheduler (+ §IV-G pipelining) →
 executable program + simulated latency/resource report.
 """
 
-from repro.core.compiler import CompiledProgram, MafiaCompiler
+from repro.core.compiler import BatchedProgram, CompiledProgram, MafiaCompiler
 from repro.core.constraints import PFGroups
 from repro.core.cost_model import EstimatorBank, default_bank, train_estimators
 from repro.core.dfg import DFG, GraphInput, Node
@@ -19,6 +19,7 @@ from repro.core.tpu_model import TPU_V5E, TpuBudget, roofline_terms
 
 __all__ = [
     "DFG", "Node", "GraphInput", "MafiaCompiler", "CompiledProgram",
+    "BatchedProgram",
     "PFGroups", "EstimatorBank", "default_bank", "train_estimators",
     "build_callable", "execute", "ARTY_A7", "FpgaBudget", "CostContext",
     "greedy_best_pf", "blackbox_best_pf", "profile_pf1", "Schedule",

@@ -31,7 +31,7 @@ from repro.core.profiler import profile_pf1
 from repro.core.scheduler import Schedule, pipeline_clusters, simulate
 from repro.core.tpu_model import TpuBudget
 
-__all__ = ["MafiaCompiler", "CompiledProgram"]
+__all__ = ["MafiaCompiler", "CompiledProgram", "BatchedProgram"]
 
 
 @dataclasses.dataclass
@@ -45,6 +45,8 @@ class CompiledProgram:
     dsp_true: float
     backend: str
     budget: Any
+    fused_clusters: list[list[str]] = dataclasses.field(default_factory=list)
+    use_pallas: bool = False
 
     @property
     def latency_cycles(self) -> float:
@@ -56,6 +58,104 @@ class CompiledProgram:
 
     def __call__(self, **inputs: Any) -> dict[str, Any]:
         return self.fn(**inputs)
+
+    def batch(self, max_batch: int = 64, *, mode: str = "vmap") -> "BatchedProgram":
+        """Batched execution of this program (the serving path).
+
+        Returns a callable taking each graph input with a leading batch
+        axis.  Batch sizes are rounded up to power-of-two *buckets* (capped
+        at ``max_batch``) so XLA recompiles only once per bucket; larger
+        batches are split into ``max_batch`` chunks.
+
+        ``mode="vmap"`` vmaps the scheduled DFG node-by-node — fused
+        linear-pipeline clusters hand the whole bucket to the Pallas kernel,
+        whose grid tiles the batch axis.  Fastest; last-ulp numerics may
+        differ from per-sample execution (XLA lowers a vmapped matvec as a
+        matmul with a different accumulation order).  ``mode="map"`` runs
+        the per-sample program under ``lax.map`` in one dispatch — bitwise
+        identical to calling the program once per sample.
+        """
+        return BatchedProgram.build(self, max_batch=max_batch, mode=mode)
+
+
+@dataclasses.dataclass
+class BatchedProgram:
+    """Bucketed, jit-cached batched callable over a :class:`CompiledProgram`.
+
+    ``stats`` counts forwards per bucket size — each distinct bucket shape
+    jit-compiles exactly once (jax caches on shape), so its keys are also
+    the set of compiled entry points.
+    """
+
+    program: CompiledProgram
+    max_batch: int
+    mode: str
+    fn: Callable[[dict[str, Any]], dict[str, Any]]
+    stats: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def build(cls, program: CompiledProgram, *, max_batch: int = 64,
+              mode: str = "vmap") -> "BatchedProgram":
+        import jax
+
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if mode == "vmap":
+            inner = build_callable(
+                program.dfg, fused_clusters=program.fused_clusters,
+                use_pallas=program.use_pallas, jit=False, batch=True)
+            fn = jax.jit(lambda inputs: inner(**inputs))
+        elif mode == "map":
+            single = build_callable(
+                program.dfg, fused_clusters=program.fused_clusters,
+                use_pallas=program.use_pallas, jit=False)
+            fn = jax.jit(
+                lambda inputs: jax.lax.map(lambda s: single(**s), inputs))
+        else:
+            raise ValueError(f"unknown batch mode {mode!r}")
+        return cls(program=program, max_batch=max_batch, mode=mode, fn=fn)
+
+    def bucket(self, n: int) -> int:
+        """Smallest power-of-two ≥ n, capped at ``max_batch``."""
+        if n < 1:
+            raise ValueError("empty batch")
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_batch)
+
+    def __call__(self, **inputs: Any) -> dict[str, Any]:
+        import jax.numpy as jnp
+
+        arrays = {k: jnp.asarray(v) for k, v in inputs.items()}
+        missing = set(self.program.dfg.graph_inputs) - set(arrays)
+        if missing:
+            raise TypeError(f"missing graph inputs: {sorted(missing)}")
+        sizes = {v.shape[0] for v in arrays.values()}
+        if len(sizes) != 1:
+            raise ValueError(f"inconsistent batch sizes: {sorted(sizes)}")
+        (B,) = sizes
+        chunks: list[dict[str, Any]] = []
+        start = 0
+        while start < B:
+            stop = min(start + self.max_batch, B)
+            nb = stop - start
+            bkt = self.bucket(nb)
+            pad = bkt - nb
+            chunk = {
+                k: jnp.pad(v[start:stop], ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+                for k, v in arrays.items()
+            }
+            out = self.fn(chunk)
+            self.stats[bkt] = self.stats.get(bkt, 0) + 1
+            chunks.append({k: v[:nb] for k, v in out.items()})
+            start = stop
+        if len(chunks) == 1:
+            return chunks[0]
+        return {
+            k: jnp.concatenate([c[k] for c in chunks], axis=0)
+            for k in chunks[0]
+        }
 
 
 class MafiaCompiler:
@@ -146,4 +246,6 @@ class MafiaCompiler:
             dsp_true=dsp_true,
             backend=self.backend,
             budget=self.budget,
+            fused_clusters=fused,
+            use_pallas=self.use_pallas,
         )

@@ -28,6 +28,7 @@ def build_callable(
     fused_clusters: list[list[str]] | None = None,
     use_pallas: bool = False,
     jit: bool = True,
+    batch: bool = False,
 ) -> Callable[..., dict[str, Any]]:
     """Compile the DFG into a function ``f(**graph_inputs) -> {output: array}``.
 
@@ -36,6 +37,12 @@ def build_callable(
     the Pallas linear-pipeline kernel (interpret mode on CPU); otherwise the
     fusion is structural (jnp ops composed inside one sub-function, which XLA
     fuses into one loop anyway — same semantics, same oracle).
+
+    With ``batch`` every graph input (and output) carries a leading batch
+    axis: per-node templates are vmapped over it, and fused linear-time
+    clusters hand the whole batch to the Pallas pipeline kernel directly —
+    its grid already tiles the batch axis, so one kernel launch serves the
+    entire bucket (the serving path of :mod:`repro.serve.classical_engine`).
     """
     dfg.validate()
     topo = dfg.topo_order()
@@ -55,7 +62,11 @@ def build_callable(
             node = dfg.nodes[nid]
             spec = node_types.get(node.op)
             args = [env[src] for src in node.inputs]
-            env[nid] = spec.jax_fn(args, node.params, node.dims)
+            if batch:
+                fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
+                env[nid] = jax.vmap(fn)(*args)
+            else:
+                env[nid] = spec.jax_fn(args, node.params, node.dims)
 
         if use_pallas:
             from repro.kernels import ops as kernel_ops
@@ -92,7 +103,8 @@ def build_callable(
                 pending = [(nid,) for nid in atom if nid not in done] + pending
                 continue
             if len(atom) > 1 and use_pallas:
-                fused = kernel_ops.try_fuse_linear_cluster(dfg, list(atom), env)
+                fused = kernel_ops.try_fuse_linear_cluster(
+                    dfg, list(atom), env, batched=batch)
                 if fused is not None:
                     env.update(fused)
                     done.update(atom)

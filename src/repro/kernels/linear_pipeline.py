@@ -73,14 +73,23 @@ def fused_linear_chain(
     bn: int = DEFAULT_BN,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Apply a linear-time stage chain to ``x`` (B, n) in one fused kernel.
+    """Apply a linear-time stage chain to ``x`` in one fused kernel.
+
+    ``x`` may be any rank ≥ 1: the last axis is the feature axis and all
+    leading axes flatten onto the kernel's batch grid axis — a (n,) vector
+    runs as one row, a (B, n) serving bucket tiles over batch, a batched
+    matrix value (B, T, D) runs as B·T rows.  The output has ``x``'s shape.
 
     ``stages`` operands: scalars stay static; ``*_vec`` operands are replaced
     by (n,) arrays collected in order; ``*_arr`` operands index into
-    ``extras`` (each (B, n)).
+    ``extras`` (each shaped like ``x``).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    x = jnp.asarray(x)
+    orig_shape = x.shape
+    x = x.reshape(-1, orig_shape[-1]) if x.ndim != 2 else x
+    extras = [jnp.asarray(e).reshape(x.shape) for e in extras]
     B, n = x.shape
     bb = min(bb, max(8, 1 << (B - 1).bit_length()))
     bn = min(bn, max(128, 1 << (n - 1).bit_length()))
@@ -112,4 +121,4 @@ def fused_linear_chain(
         out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
         interpret=interpret,
     )(xp, *vecs, *arrs)
-    return out[:B, :n]
+    return out[:B, :n].reshape(orig_shape)

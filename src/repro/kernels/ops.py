@@ -55,7 +55,7 @@ def _value_needed_outside(dfg: DFG, nid: str, chain_next: str | None) -> bool:
 
 
 def try_fuse_linear_cluster(
-    dfg: DFG, members: list[str], env: dict[str, Any]
+    dfg: DFG, members: list[str], env: dict[str, Any], *, batched: bool = False
 ) -> dict[str, Any] | None:
     """Execute a §IV-G linear-time cluster through the fused pipeline kernel.
 
@@ -63,7 +63,14 @@ def try_fuse_linear_cluster(
     can be staged (caller falls back to per-node eval).  Members whose op has
     a reduction (dot/reduce_sum/argmax — linear-time but not elementwise) are
     evaluated directly; the elementwise remainder runs as fused chains.
+
+    With ``batched`` every value in ``env`` carries a leading batch axis:
+    direct (non-stageable) members are vmapped over it, while staged chains
+    hand the whole batch to the pipeline kernel — its grid tiles the batch
+    axis, so a bucket of serving requests costs one kernel launch.
     """
+    import jax
+
     mset = set(members)
     topo = [n for n in dfg.topo_order() if n in mset]
     if not any(dfg.nodes[n].op in _STAGEABLE for n in topo):
@@ -81,7 +88,12 @@ def try_fuse_linear_cluster(
     def eval_direct(nid: str) -> None:
         node = dfg.nodes[nid]
         spec = node_types.get(node.op)
-        results[nid] = spec.jax_fn([get(s) for s in node.inputs], node.params, node.dims)
+        args = [get(s) for s in node.inputs]
+        if batched:
+            fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
+            results[nid] = jax.vmap(fn)(*args)
+        else:
+            results[nid] = spec.jax_fn(args, node.params, node.dims)
 
     pending = list(topo)
     while pending:
@@ -156,12 +168,12 @@ def try_fuse_linear_cluster(
                 eval_direct(nid)
             continue
 
-        x = jnp.asarray(get(stream_src))
-        squeeze = x.ndim == 1
-        xb = x[None, :] if squeeze else x
-        extras_b = [jnp.asarray(e)[None, :] if squeeze else jnp.asarray(e) for e in extras]
-        out = fused_linear_chain(xb, stages, extras_b)
-        val = out[0] if squeeze else out
+        # fused_linear_chain handles rank itself: 1-D per-sample vectors,
+        # 2-D batches, and batched matrix values (B, T, D) all flatten onto
+        # the kernel's (batch, feature) grid.
+        val = fused_linear_chain(
+            jnp.asarray(get(stream_src)), stages,
+            [jnp.asarray(e) for e in extras])
         # every intermediate chain value equals a prefix of the stage program;
         # only the final value is materialized (that is the point of fusion) —
         # intermediates were proven unconsumed, publish the terminal only.

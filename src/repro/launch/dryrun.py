@@ -27,7 +27,7 @@ import traceback      # noqa: E402
 import jax            # noqa: E402
 
 from repro.configs.registry import ARCH_IDS, SHAPES, get_arch            # noqa: E402
-from repro.launch.hlo_analysis import analyze_hlo                        # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis     # noqa: E402
 from repro.launch.mesh import make_production_mesh                       # noqa: E402
 from repro.launch.roofline import summarize                              # noqa: E402
 from repro.launch.steps import build_cell                                # noqa: E402
@@ -108,9 +108,7 @@ def run_cell(
             rec["memory_analysis_error"] = str(e)
 
         # ---- trip-count-aware cost + collectives → roofline
-        xla_cost = compiled.cost_analysis() or {}
-        if isinstance(xla_cost, (list, tuple)):
-            xla_cost = xla_cost[0] if xla_cost else {}
+        xla_cost = xla_cost_analysis(compiled)
         rec["xla_cost_flops"] = float(xla_cost.get("flops", 0.0))
         rec["xla_cost_bytes"] = float(xla_cost.get("bytes accessed", 0.0))
         hlo = compiled.as_text()

@@ -25,7 +25,21 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["HloCost", "analyze_hlo", "parse_hlo_collectives", "collective_bytes"]
+__all__ = ["HloCost", "analyze_hlo", "parse_hlo_collectives", "collective_bytes",
+           "xla_cost_analysis"]
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalized ``Compiled.cost_analysis()`` — always a flat dict.
+
+    Across JAX versions ``cost_analysis()`` has returned a dict, a
+    one-element list of dicts (one per program), or None.  Every caller
+    here wants the single per-program dict; normalize in one place.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
 
 _COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",

@@ -17,7 +17,23 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "mesh_axes"]
+__all__ = ["make_production_mesh", "mesh_axes", "abstract_mesh"]
+
+
+def abstract_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Version-tolerant ``jax.sharding.AbstractMesh`` constructor.
+
+    JAX has flipped this signature between releases: older versions take
+    ``AbstractMesh(shape_tuple)`` with ``shape_tuple = ((name, size), ...)``,
+    newer ones take ``AbstractMesh(axis_sizes, axis_names)``.  Planner code
+    only ever needs (sizes, names), so accept that and adapt.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+    except (TypeError, ValueError):
+        return AbstractMesh(tuple(shape), tuple(axis_names))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -1,0 +1,112 @@
+"""Test-suite bootstrap.
+
+Provides a deterministic fallback for ``hypothesis`` when it is not
+installed: ``@given`` degrades to a fixed set of seeded examples drawn from
+the same strategy combinators the suite uses (``integers``, ``sampled_from``,
+``lists``, ``floats``, ``booleans``).  With real hypothesis on the path
+(see requirements-dev.txt) the shim is inert and the property tests run at
+full strength.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import itertools
+import random
+import sys
+import types
+
+_SHIM_EXAMPLES = 10  # fixed examples per property when hypothesis is absent
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def _integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _lists(elem, min_size=0, max_size=10):
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.example(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+def _floats(min_value=-1e3, max_value=1e3, **_ignored):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value)
+
+
+def _given(*strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _SHIM_EXAMPLES)
+            n = min(n, _SHIM_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(988245 + i)
+                ex = [s.example(rng) for s in strategies]
+                kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *ex, **kw, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate
+
+
+def _settings(max_examples=None, deadline=None, **_ignored):
+    def decorate(fn):
+        if max_examples is not None:
+            fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def _install_hypothesis_shim() -> None:
+    if importlib.util.find_spec("hypothesis") is not None:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.assume = lambda cond: None
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.sampled_from = _sampled_from
+    st.lists = _lists
+    st.floats = _floats
+    st.booleans = _booleans
+    st.tuples = _tuples
+    st.just = _just
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_shim()

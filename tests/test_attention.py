@@ -46,6 +46,7 @@ def test_flash_q_offset():
     np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 3), st.sampled_from([(4, 4), (4, 2)]),
        st.sampled_from([9, 17, 33]))

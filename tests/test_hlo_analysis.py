@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
 
 
 def _compile(fn, *args):
@@ -64,8 +64,11 @@ def test_bytes_scale_with_scan():
         return y
 
     x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-    c1 = analyze_hlo(_compile(scanned, x).as_text())
-    xla = _compile(scanned, x).cost_analysis()
+    compiled = _compile(scanned, x)
+    c1 = analyze_hlo(compiled.as_text())
+    # cost_analysis() returns a list of dicts on current JAX — use the
+    # normalizing helper rather than assuming a dict
+    xla = xla_cost_analysis(compiled)
     # ours must be ≥ the (single-trip) XLA number
     assert c1.bytes >= float(xla.get("bytes accessed", 0))
 

@@ -124,6 +124,7 @@ def test_decode_attention_ref_vs_plain():
 
 
 # --------------------------------------------------------------- mamba2 ssd
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 2), st.sampled_from([8, 24, 32]), st.integers(1, 4))
 def test_ssd_chunked_vs_sequential(b, s, h):

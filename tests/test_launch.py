@@ -35,6 +35,7 @@ def test_model_flops_conventions():
     assert dc < pf / 1000
 
 
+@pytest.mark.slow
 def test_run_training_smoke_and_resume(tmp_path):
     out = run_training(
         "qwen2.5-3b", smoke=True, steps=6, batch=4, seq_len=16,

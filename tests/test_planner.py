@@ -4,15 +4,15 @@ import math
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_arch
+from repro.launch.mesh import abstract_mesh
 from repro.models.transformer import abstract_params, init_cache
 from repro.sharding.planner import layer_dfg, mafia_shard_report, plan_for
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 AXES = {"data": 16, "model": 16, "pod": 2}
 
 

@@ -31,6 +31,7 @@ def _teacher_forced(cfg, params, prompt, tokens):
     return [int(lf[len(prompt) - 1 + i].argmax()) for i in range(len(tokens))]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "olmoe-1b-7b", "mamba2-1.3b",
                                   "zamba2-7b"])
 def test_generation_matches_teacher_forcing(arch):
@@ -64,6 +65,7 @@ def test_slot_reuse_does_not_leak_state():
     assert done[1].tokens == ref.tokens
 
 
+@pytest.mark.slow
 def test_interleaved_batch_isolation():
     """Requests decoded together must not influence one another (dense)."""
     cfg, params, eng = _engine("granite-8b", max_batch=4, max_len=64)

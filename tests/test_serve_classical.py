@@ -1,0 +1,144 @@
+"""Batched CompiledProgram path + classical serving engine.
+
+Covers the serving subsystem's contracts: ``mode="map"`` batching is
+*bitwise* identical to per-sample execution (ragged final bucket included),
+``mode="vmap"`` agrees to float tolerance and drives the Pallas pipeline
+with the whole bucket, bucketing bounds jit entries, and the engine drains
+mixed-size queues in order through the cached program.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import build
+from repro.data.datasets import get_spec, make_dataset
+from repro.serve.classical_engine import (
+    ClassicalServeEngine,
+    get_program,
+    _PROGRAM_CACHE,
+)
+
+BENCHES = ["bonsai/usps-b", "protonn/usps-b"]
+
+
+def _requests(ds: str, n: int) -> np.ndarray:
+    _, _, Xte, _ = make_dataset(get_spec(ds), n_train=16, n_test=n)
+    return Xte
+
+
+# ------------------------------------------------- batched CompiledProgram
+@pytest.mark.parametrize("bench", BENCHES)
+def test_batched_map_bitwise_matches_per_sample(bench):
+    """mode='map' batching must be bit-for-bit the per-sample program,
+    including the ragged final bucket (13 = 8 + pad-to-8 with 3 dead rows)."""
+    prog = get_program(bench)
+    bp = prog.batch(max_batch=8, mode="map")
+    X = _requests(bench.split("/")[1], 13)
+    out = bp(x=X)
+    for i in range(13):
+        ref = prog(x=X[i])
+        for k in ref:
+            assert np.array_equal(np.asarray(out[k][i]), np.asarray(ref[k])), \
+                f"{bench} {k} row {i} not bitwise-equal"
+
+
+@pytest.mark.parametrize("bench", BENCHES)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_batched_vmap_close_to_per_sample(bench, use_pallas):
+    prog = get_program(bench, use_pallas=use_pallas)
+    bp = prog.batch(max_batch=8, mode="vmap")
+    X = _requests(bench.split("/")[1], 11)
+    out = bp(x=X)
+    for i in range(11):
+        ref = prog(x=X[i])
+        for k in ref:
+            a, b = np.asarray(out[k][i]), np.asarray(ref[k])
+            if np.issubdtype(b.dtype, np.integer):
+                assert np.array_equal(a, b)
+            else:
+                np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+
+
+def test_bucketing_bounds_jit_entries():
+    """Every batch size rounds up to a power-of-two bucket ≤ max_batch, so
+    arbitrary request counts touch only log2(max_batch)+1 compiled shapes."""
+    prog = get_program(BENCHES[0])
+    bp = prog.batch(max_batch=16, mode="vmap")
+    assert [bp.bucket(n) for n in (1, 2, 3, 5, 9, 16, 17, 100)] == \
+        [1, 2, 4, 8, 16, 16, 16, 16]
+    X = _requests("usps-b", 21)            # chunks of 16 + 5 → buckets 16, 8
+    out = bp(x=X)
+    assert out["ClassSum"].shape[0] == 21
+    assert bp.stats == {16: 1, 8: 1}
+    with pytest.raises(ValueError):
+        prog.batch(max_batch=0)
+    with pytest.raises(ValueError):
+        prog.batch(mode="nope")
+
+
+def test_batched_missing_input_raises():
+    bp = get_program(BENCHES[0]).batch(max_batch=4)
+    with pytest.raises(TypeError, match="missing graph inputs"):
+        bp()
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_drains_mixed_queue_in_order():
+    """37 requests through max_batch=8 → 5 forwards (last ragged); results
+    arrive per-request, rid-ordered, and bitwise-equal to per-sample runs
+    (the engine uses mode='map' here to make the check exact)."""
+    bench = BENCHES[0]
+    prog = get_program(bench)
+    eng = ClassicalServeEngine(bench, max_batch=8, mode="map")
+    X = _requests("usps-b", 37)
+    rids = [eng.submit(x) for x in X]
+    assert eng.pending == 37
+    done = eng.run_to_completion()
+    assert [r.rid for r in done] == rids
+    assert eng.pending == 0
+    assert sum(eng.batched.stats.values()) == 5
+    for r in done:
+        ref = prog(x=r.x)
+        for k in ref:
+            assert np.array_equal(r.outputs[k], np.asarray(ref[k]))
+        assert r.pred == int(np.asarray(ref["Pred"]).ravel()[0])
+
+
+def test_engine_step_returns_finished_batch():
+    eng = ClassicalServeEngine(BENCHES[1], max_batch=4, mode="vmap")
+    X = _requests("usps-b", 6)
+    rids = [eng.submit(x) for x in X]
+    first = eng.step()
+    assert sorted(first) == rids[:4] and all(r.done for r in first.values())
+    second = eng.step()
+    assert sorted(second) == rids[4:]
+    assert eng.step() == {}
+
+
+def test_engine_validates_requests():
+    eng = ClassicalServeEngine(BENCHES[0], max_batch=4)
+    with pytest.raises(ValueError, match="request shape"):
+        eng.submit(np.zeros(7, np.float32))
+
+
+def test_program_cache_hits():
+    _PROGRAM_CACHE.clear()
+    a = get_program(BENCHES[1])
+    b = get_program(BENCHES[1])
+    assert a is b
+    c = get_program(BENCHES[1], strategy="none")
+    assert c is not a
+    assert len(_PROGRAM_CACHE) == 2
+
+
+def test_engine_accepts_prebuilt_program():
+    dfg, _, _ = build(BENCHES[0])
+    from repro.core import MafiaCompiler
+
+    prog = MafiaCompiler().compile(dfg)
+    eng = ClassicalServeEngine(prog, max_batch=4)
+    eng.submit(_requests("usps-b", 1)[0])
+    done = eng.run_to_completion()
+    assert len(done) == 1 and done[0].done
+    with pytest.raises(TypeError):
+        ClassicalServeEngine(prog, use_pallas=True)

@@ -72,6 +72,7 @@ def test_loss_decreases_smoke():
     assert losses[-1] < losses[0] - 0.3
 
 
+@pytest.mark.slow
 def test_microbatch_count_invariance():
     """Mean-of-microbatch gradients == full-batch gradients (linearity)."""
     cfg = get_arch("granite-8b").smoke
