@@ -1,0 +1,84 @@
+"""Int8 vs float32 on the paper's classical benchmarks: accuracy + serving.
+
+MAFIA's programs run in SeeDot fixed point; this reproduction's int8 lane
+(``MafiaCompiler(precision="int8")``) must therefore cost ~nothing in
+accuracy.  For every Table-I benchmark this script trains the model, compiles
+it at both precisions (int8 scales calibrated from the training split), and
+reports test accuracy at each plus the absolute delta and the int8-vs-float
+prediction agreement.  A second section measures batched serving throughput
+(requests/sec through :class:`ClassicalServeEngine`) at both precisions.
+
+    PYTHONPATH=src python benchmarks/quantization_error.py
+    PYTHONPATH=src python benchmarks/quantization_error.py --quick   # 4 benches
+
+Expected: ≤ 2% absolute accuracy drop on every benchmark (typically ≤ 1%).
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.configs.classical import (
+    BENCHMARKS,
+    TRAIN_SPLIT,
+    ClassicalBenchmark,
+    build,
+)
+from repro.core.compiler import MafiaCompiler
+from repro.data.datasets import make_dataset
+from repro.models import bonsai, protonn
+
+try:                          # shared engine-throughput measurement protocol
+    from benchmarks.serve_throughput import _engine_rps
+except ImportError:           # run as a script: benchmarks/ is sys.path[0]
+    from serve_throughput import _engine_rps
+
+__all__ = ["run"]
+
+_N_TEST = 512
+_SERVE_BENCH = "bonsai/usps-b"
+_SERVE_BATCH = 64
+_SERVE_REQUESTS = 256
+
+
+def _accuracy_row(bench: ClassicalBenchmark, trained: bool) -> str:
+    # same (n_train, seed) as configs.classical.build(trained=True): the
+    # calibration split below IS the split the model was trained on.
+    Xtr, _, Xte, yte = make_dataset(bench.dataset, n_train=TRAIN_SPLIT,
+                                    n_test=_N_TEST)
+    dfg_f, params, cfg = build(bench, trained=trained)
+    mod = bonsai if bench.algo == "bonsai" else protonn
+    dfg_q = mod.build_dfg(params, cfg, name=f"{dfg_f.name}_q")
+    f32 = MafiaCompiler().compile(dfg_f)
+    i8 = MafiaCompiler(precision="int8").compile(dfg_q, calib=Xtr[:256])
+    pf = np.asarray(f32.batch(_SERVE_BATCH, mode="map")(x=Xte)["Pred"]).ravel()
+    pq = np.asarray(i8.batch(_SERVE_BATCH, mode="map")(x=Xte)["Pred"]).ravel()
+    acc_f = float((pf == yte).mean())
+    acc_q = float((pq == yte).mean())
+    return (f"quant.{bench.name},{acc_f:.4f},{acc_q:.4f},"
+            f"{acc_f - acc_q:+.4f},{float((pf == pq).mean()):.4f}")
+
+
+def _serve_rps(precision: str, mode: str) -> float:
+    _, _, X, _ = make_dataset("usps-b", n_train=64, n_test=_SERVE_REQUESTS)
+    return _engine_rps(_SERVE_BENCH, X, _SERVE_BATCH, mode, precision)
+
+
+def run(benches: list[ClassicalBenchmark] | None = None,
+        trained: bool = True) -> list[str]:
+    out = ["quant.benchmark,acc_float32,acc_int8,delta_abs,agreement"]
+    for bench in (benches or BENCHMARKS):
+        out.append(_accuracy_row(bench, trained))
+    out.append("quant.serve,precision,mode,batch,requests_per_s")
+    for precision in ("float32", "int8"):
+        for mode in ("vmap", "map"):
+            rps = _serve_rps(precision, mode)
+            out.append(f"quant.serve,{precision},{mode},{_SERVE_BATCH},{rps:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    print("\n".join(run(benches=BENCHMARKS[:4] if quick else None)))

@@ -4,8 +4,9 @@ The paper serves one sample at a time (the FPGA setting); the batched
 serving subsystem (:mod:`repro.serve.classical_engine`) pads request queues
 to power-of-two buckets and runs one batched forward per bucket.  This
 benchmark quantifies what that buys on this host: a per-sample request loop
-over the compiled program vs the engine at several batch sizes, plus both
-batched modes ("vmap" = throughput, "map" = bit-exact).
+over the compiled program vs the engine at several batch sizes, both
+batched modes ("vmap" = throughput, "map" = bit-exact), and both precisions
+(the float32 lane and the paper-faithful int8 fixed-point lane).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
 """
@@ -37,8 +38,10 @@ def _per_sample_rps(prog, X) -> float:
     return len(X) / (time.perf_counter() - t0)
 
 
-def _engine_rps(bench: str, X, max_batch: int, mode: str) -> float:
-    eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode)
+def _engine_rps(bench: str, X, max_batch: int, mode: str,
+                precision: str = "float32") -> float:
+    eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode,
+                               precision=precision)
     for x in X[:max_batch]:                 # warm the bucket's jit entry
         eng.submit(x)
     eng.run_to_completion()
@@ -50,18 +53,26 @@ def _engine_rps(bench: str, X, max_batch: int, mode: str) -> float:
 
 
 def run() -> list[str]:
-    out = ["serve.benchmark,mode,batch,requests_per_s,speedup_vs_per_sample"]
+    out = ["serve.benchmark,mode,precision,batch,requests_per_s,"
+           "speedup_vs_per_sample"]
     for bench in _BENCHES:
-        prog = get_program(bench)
         ds = bench.split("/")[1]
         _, _, Xte, _ = make_dataset(ds, n_train=64, n_test=_N_REQUESTS)
-        base = _per_sample_rps(prog, Xte)
-        out.append(f"serve.{bench},per-sample,1,{base:.0f},1.00")
-        for mode in ("vmap", "map"):
-            for mb in _BATCHES:
-                rps = _engine_rps(bench, Xte, mb, mode)
-                out.append(
-                    f"serve.{bench},{mode},{mb},{rps:.0f},{rps / base:.2f}")
+        base = None
+        for precision in ("float32", "int8"):
+            prog = get_program(bench, precision=precision)
+            rps = _per_sample_rps(prog, Xte)
+            if base is None:                   # speedups relative to f32 loop
+                base = rps
+            out.append(
+                f"serve.{bench},per-sample,{precision},1,{rps:.0f},"
+                f"{rps / base:.2f}")
+            for mode in ("vmap", "map"):
+                for mb in _BATCHES:
+                    rps = _engine_rps(bench, Xte, mb, mode, precision)
+                    out.append(
+                        f"serve.{bench},{mode},{precision},{mb},{rps:.0f},"
+                        f"{rps / base:.2f}")
     return out
 
 

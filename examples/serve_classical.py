@@ -69,6 +69,23 @@ def main() -> None:
               f"({eng.throughput():,.0f} req/s), buckets {eng.batched.stats}, "
               f"accuracy {acc:.3f}")
 
+    # ---- tier 2b: the engine on the int8 fixed-point lane — the arithmetic
+    # the paper's SeeDot-lineage programs actually run, calibrated from the
+    # training split (power-of-two scales, int32 accumulation)
+    prog_q = MafiaCompiler(precision="int8").compile(
+        bonsai.build_dfg(params, cfg), calib=Xtr)
+    eng = ClassicalServeEngine(prog_q, max_batch=64, mode="vmap")
+    for x in Xte[:64]:
+        eng.submit(x)
+    eng.run_to_completion()
+    eng.reset_stats()
+    for x in Xte:
+        eng.submit(x)
+    done = eng.run_to_completion()
+    acc = float(np.mean([r.pred == y for r, y in zip(done, yte)]))
+    print(f"engine int8     : {1e6 / eng.throughput():8.1f} us/request "
+          f"({eng.throughput():,.0f} req/s), accuracy {acc:.3f}")
+
     # ---- tier 3: raw batched JAX reference (the ceiling; no request framing)
     pj = {k: jnp.asarray(v) for k, v in params.items()}
     fn = jax.jit(lambda X: jnp.argmax(bonsai.predict(pj, cfg, X), -1))

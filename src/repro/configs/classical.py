@@ -14,7 +14,12 @@ from repro.core.dfg import DFG
 from repro.data.datasets import TABLE_I, DatasetSpec, get_spec, make_dataset
 from repro.models import bonsai, protonn
 
-__all__ = ["ClassicalBenchmark", "BENCHMARKS", "build"]
+__all__ = ["ClassicalBenchmark", "BENCHMARKS", "TRAIN_SPLIT", "build",
+           "training_split"]
+
+# Rows build(trained=True) fits on — int8 calibration and the quantization
+# benchmark reuse this so their split is exactly the training split.
+TRAIN_SPLIT = 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +41,21 @@ BENCHMARKS: list[ClassicalBenchmark] = [
 ]
 
 
+def _resolve(bench: ClassicalBenchmark | str) -> ClassicalBenchmark:
+    if isinstance(bench, str):
+        algo, ds = bench.split("/")
+        return ClassicalBenchmark(bench, algo, get_spec(ds))
+    return bench
+
+
+def training_split(bench: ClassicalBenchmark | str, seed: int = 0):
+    """(X, y) of the exact rows — same draw, same standardization stats —
+    that ``build(trained=True)`` fits on; the int8 calibration source."""
+    bench = _resolve(bench)
+    Xtr, ytr, _, _ = make_dataset(bench.dataset, n_train=TRAIN_SPLIT, seed=seed)
+    return Xtr, ytr
+
+
 def build(
     bench: ClassicalBenchmark | str,
     *,
@@ -45,13 +65,11 @@ def build(
     """Build (dfg, params, config) for one benchmark; optionally fit on the
     synthetic dataset first (slow — tests/benches default to random init,
     which exercises identical shapes/sparsity)."""
-    if isinstance(bench, str):
-        algo, ds = bench.split("/")
-        bench = ClassicalBenchmark(bench, algo, get_spec(ds))
+    bench = _resolve(bench)
     mod = bonsai if bench.algo == "bonsai" else protonn
     cfg = mod.from_spec(bench.dataset)
     if trained:
-        Xtr, ytr, _, _ = make_dataset(bench.dataset, n_train=1024, seed=seed)
+        Xtr, ytr = training_split(bench, seed=seed)
         params = mod.train(cfg, Xtr, ytr, steps=120, seed=seed)
     else:
         params = mod.init_params(cfg, seed=seed)

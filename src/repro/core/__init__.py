@@ -14,6 +14,7 @@ from repro.core.executor import build_callable, execute
 from repro.core.fpga_model import ARTY_A7, FpgaBudget
 from repro.core.optimizer import CostContext, blackbox_best_pf, greedy_best_pf
 from repro.core.profiler import profile_pf1
+from repro.core.quantize import QuantPlan, calibrate
 from repro.core.scheduler import Schedule, simulate
 from repro.core.tpu_model import TPU_V5E, TpuBudget, roofline_terms
 
@@ -22,6 +23,7 @@ __all__ = [
     "BatchedProgram",
     "PFGroups", "EstimatorBank", "default_bank", "train_estimators",
     "build_callable", "execute", "ARTY_A7", "FpgaBudget", "CostContext",
-    "greedy_best_pf", "blackbox_best_pf", "profile_pf1", "Schedule",
-    "simulate", "TPU_V5E", "TpuBudget", "roofline_terms",
+    "greedy_best_pf", "blackbox_best_pf", "profile_pf1", "QuantPlan",
+    "calibrate", "Schedule", "simulate", "TPU_V5E", "TpuBudget",
+    "roofline_terms",
 ]

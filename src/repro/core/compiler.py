@@ -47,6 +47,8 @@ class CompiledProgram:
     budget: Any
     fused_clusters: list[list[str]] = dataclasses.field(default_factory=list)
     use_pallas: bool = False
+    precision: str = "float32"
+    qplan: Any | None = None     # QuantPlan when precision == "int8"
 
     @property
     def latency_cycles(self) -> float:
@@ -73,7 +75,9 @@ class CompiledProgram:
         differ from per-sample execution (XLA lowers a vmapped matvec as a
         matmul with a different accumulation order).  ``mode="map"`` runs
         the per-sample program under ``lax.map`` in one dispatch — bitwise
-        identical to calling the program once per sample.
+        identical to calling the program once per sample.  For an int8
+        program both modes are bitwise-identical: integer accumulation has
+        no reassociation error.
         """
         return BatchedProgram.build(self, max_batch=max_batch, mode=mode)
 
@@ -103,12 +107,14 @@ class BatchedProgram:
         if mode == "vmap":
             inner = build_callable(
                 program.dfg, fused_clusters=program.fused_clusters,
-                use_pallas=program.use_pallas, jit=False, batch=True)
+                use_pallas=program.use_pallas, jit=False, batch=True,
+                precision=program.precision, qplan=program.qplan)
             fn = jax.jit(lambda inputs: inner(**inputs))
         elif mode == "map":
             single = build_callable(
                 program.dfg, fused_clusters=program.fused_clusters,
-                use_pallas=program.use_pallas, jit=False)
+                use_pallas=program.use_pallas, jit=False,
+                precision=program.precision, qplan=program.qplan)
             fn = jax.jit(
                 lambda inputs: jax.lax.map(lambda s: single(**s), inputs))
         else:
@@ -170,9 +176,19 @@ class MafiaCompiler:
         pipelining: bool = True,
         use_pallas: bool = False,
         bank: EstimatorBank | None = None,
+        precision: str = "float32",
+        calib_samples: int = 64,
     ) -> None:
+        """``precision="int8"`` emits the fixed-point program the paper's
+        SeeDot-lineage workloads actually run (float32 is the beyond-paper
+        default): :meth:`compile` calibrates per-tensor power-of-two scales
+        (from its ``calib`` batch, or ``calib_samples`` synthetic
+        standard-normal samples) and the emitted callable computes in int8
+        with int32 accumulation — interface stays float in / float out."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
+        if precision not in ("float32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}")
         self.backend = backend
         self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())
         self.strategy = strategy
@@ -181,6 +197,8 @@ class MafiaCompiler:
         self.pipelining = pipelining
         self.use_pallas = use_pallas
         self.bank = bank or default_bank()
+        self.precision = precision
+        self.calib_samples = calib_samples
 
     # ----------------------------------------------------------------- stages
     def optimize(self, dfg: DFG) -> tuple[PFResult, PFGroups]:
@@ -200,13 +218,25 @@ class MafiaCompiler:
         groups.apply(res.group_pfs)
         return res, groups
 
-    def compile(self, dfg: DFG, assignment: dict[str, int] | None = None) -> CompiledProgram:
+    def compile(
+        self,
+        dfg: DFG,
+        assignment: dict[str, int] | None = None,
+        *,
+        calib: Any | None = None,
+    ) -> CompiledProgram:
         """Full flow; pass ``assignment`` to impose external PFs (baselines).
 
         ``pipelining`` may be True (paper §IV-G: always fuse linear-time
         clusters), False, or ``"auto"`` (beyond-paper: fuse only when the
         simulated schedule improves — a cluster's all-inputs-ready start
         condition can *delay* branchy DFGs, see benchmarks/ablations.py).
+
+        ``calib`` (int8 only) is the calibration batch — the benchmark's
+        training split for the classical models (a ``(N, n_features)`` array,
+        or a dict of graph-input name → batch for multi-input DFGs).  Omitted,
+        calibration falls back to synthetic standardized samples, matching
+        the zero-mean/unit-variance preprocessing the datasets ship with.
         """
         pf_result: PFResult | None = None
         if assignment is None:
@@ -229,7 +259,13 @@ class MafiaCompiler:
             sched = simulate(dfg, assignment, order=self.order,
                              pipelining=use_pipe, groups=groups)
         fused = pipeline_clusters(dfg, groups, assignment) if use_pipe else []
-        fn = build_callable(dfg, fused_clusters=fused, use_pallas=self.use_pallas)
+        qplan = None
+        if self.precision == "int8":
+            from repro.core import quantize as quantize_mod
+
+            qplan = quantize_mod.calibrate(dfg, calib, n_samples=self.calib_samples)
+        fn = build_callable(dfg, fused_clusters=fused, use_pallas=self.use_pallas,
+                            precision=self.precision, qplan=qplan)
         lut_true = sum(
             node_types.get(n.op).lut(n.dims, assignment[n.id]) for n in dfg.nodes.values()
         )
@@ -248,4 +284,6 @@ class MafiaCompiler:
             budget=self.budget,
             fused_clusters=fused,
             use_pallas=self.use_pallas,
+            precision=self.precision,
+            qplan=qplan,
         )

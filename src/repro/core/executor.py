@@ -29,6 +29,8 @@ def build_callable(
     use_pallas: bool = False,
     jit: bool = True,
     batch: bool = False,
+    precision: str = "float32",
+    qplan: Any | None = None,
 ) -> Callable[..., dict[str, Any]]:
     """Compile the DFG into a function ``f(**graph_inputs) -> {output: array}``.
 
@@ -43,7 +45,21 @@ def build_callable(
     clusters hand the whole batch to the Pallas pipeline kernel directly —
     its grid already tiles the batch axis, so one kernel launch serves the
     entire bucket (the serving path of :mod:`repro.serve.classical_engine`).
+
+    ``precision="int8"`` runs the DFG in SeeDot-style fixed point (the
+    paper's workload class): float inputs are quantized to int8 at the
+    ``qplan`` scales on entry, ops with an ``OpSpec.jax_fn_q`` template run
+    int8→int32-accumulate→int8, the rest run dequantize→float→requantize,
+    and float outputs are dequantized back on exit (integer outputs such as
+    argmax pass through).  Requires a :class:`repro.core.quantize.QuantPlan`
+    from :func:`repro.core.quantize.calibrate`.  The interface stays float
+    in / float out, so callers (and the serving engine) are precision-blind.
     """
+    if precision not in ("float32", "int8"):
+        raise ValueError(f"unknown precision {precision!r}")
+    if precision == "int8" and qplan is None:
+        raise ValueError(
+            "precision='int8' requires a QuantPlan — see repro.core.quantize.calibrate")
     dfg.validate()
     topo = dfg.topo_order()
     fused_clusters = fused_clusters or []
@@ -51,22 +67,48 @@ def build_callable(
     for ci, mem in enumerate(fused_clusters):
         for nid in mem:
             cluster_of[nid] = ci
+    if precision == "int8":
+        from repro.core import quantize as quantize_mod
 
     def run(**inputs: Any) -> dict[str, Any]:
         missing = set(dfg.graph_inputs) - set(inputs)
         if missing:
             raise TypeError(f"missing graph inputs: {sorted(missing)}")
-        env: dict[str, Any] = {k: jnp.asarray(v) for k, v in inputs.items()}
+        if precision == "int8":
+            env: dict[str, Any] = {
+                k: quantize_mod.quantize_jnp(jnp.asarray(v, jnp.float32),
+                                             qplan.input_exps[k])
+                for k, v in inputs.items()
+            }
+        else:
+            env = {k: jnp.asarray(v) for k, v in inputs.items()}
 
-        def eval_node(nid: str) -> None:
+        def node_fn(nid: str) -> Any:
             node = dfg.nodes[nid]
             spec = node_types.get(node.op)
-            args = [env[src] for src in node.inputs]
-            if batch:
-                fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
-                env[nid] = jax.vmap(fn)(*args)
-            else:
-                env[nid] = spec.jax_fn(args, node.params, node.dims)
+            if precision != "int8":
+                return lambda *a: spec.jax_fn(list(a), node.params, node.dims)
+            nq = qplan.nodes[nid]
+            if spec.jax_fn_q is not None:
+                return lambda *a: spec.jax_fn_q(list(a), node.params, node.dims, nq)
+
+            def dequant_requant(*a: Any) -> Any:
+                # no integer template (nonlinearities, reductions): MAFIA's
+                # table-based PEs — fixed-point in, fixed-point out, float math
+                # in the middle.
+                fa = [x if e is None else quantize_mod.dequantize(x, e)
+                      for x, e in zip(a, nq.in_exps)]
+                out = spec.jax_fn(fa, node.params, node.dims)
+                if nq.out_exp is None:       # integer output (argmax)
+                    return out
+                return quantize_mod.quantize_jnp(out, nq.out_exp)
+
+            return dequant_requant
+
+        def eval_node(nid: str) -> None:
+            fn = node_fn(nid)
+            args = [env[src] for src in dfg.nodes[nid].inputs]
+            env[nid] = jax.vmap(fn)(*args) if batch else fn(*args)
 
         if use_pallas:
             from repro.kernels import ops as kernel_ops
@@ -112,6 +154,12 @@ def build_callable(
             for nid in atom:
                 eval_node(nid)
                 done.add(nid)
+        if precision == "int8":
+            return {
+                out: env[out] if qplan.nodes[out].out_exp is None
+                else quantize_mod.dequantize(env[out], qplan.nodes[out].out_exp)
+                for out in dfg.outputs
+            }
         return {out: env[out] for out in dfg.outputs}
 
     return jax.jit(run) if jit else run

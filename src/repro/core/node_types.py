@@ -5,6 +5,11 @@ every compiler stage needs to know about the op:
 
   * semantics        — a pure-jnp implementation (``jax_fn``) used by the
                        executor and as the oracle for the Pallas kernels,
+                       plus an optional int8 variant (``jax_fn_q``) taking
+                       int8 inputs and a :class:`repro.core.quantize.NodeQuant`
+                       — int32 accumulation, requantize-on-write (the SeeDot
+                       fixed-point arithmetic the paper's programs run in;
+                       ops without one fall back to dequant→float→requant),
   * shape rules      — ``infer_dims`` / ``out_shape`` / ``validate``,
   * taxonomy         — ``linear_time`` (paper §IV-A: linear-time nodes must keep
                        input PF == execution PF == output PF; non-linear-time
@@ -70,6 +75,10 @@ class OpSpec:
     lut: Callable[[dict[str, int], int], float]
     max_pf: Callable[[dict[str, int]], int]
     has_reduction: bool = False  # parallel exec followed by partial-sum reduction
+    # int8 fixed-point variant: (int8 inputs, float params, dims, NodeQuant)
+    # -> int8 output at NodeQuant.out_exp.  None = no integer template; the
+    # executor runs dequantize -> jax_fn -> requantize instead.
+    jax_fn_q: Callable[[list[Any], dict[str, Any], dict[str, int], Any], Any] | None = None
 
     def dsp(self, pf: int) -> float:
         """DSP[PF] = alpha_DSP * PF (paper §IV-B) — exact by construction."""
@@ -114,6 +123,64 @@ def _jnp():
     return jnp
 
 
+# ------------------------------------------------------- int8 template variants
+def _requantize(acc, shift: int):
+    from repro.core.quantize import requantize_i32
+
+    return requantize_i32(acc, shift)
+
+
+def _q_align(x, e: int, e_c: int):
+    """Bring an int32 value from exponent ``e`` to common exponent ``e_c``."""
+    return x << (e_c - e) if e_c >= e else x >> (e - e_c)
+
+
+def _q_elementwise(kind: str) -> Callable:
+    """int8 add/sub/hadamard: int32 combine at an aligned scale, then one
+    requantizing shift to the output format."""
+
+    def jax_fn_q(inputs, params, dims, nq):
+        jnp = _jnp()
+        a = jnp.asarray(inputs[0], jnp.int32)
+        e_a = nq.in_exps[0]
+        if "vec" in nq.params_q:
+            b = jnp.asarray(nq.params_q["vec"], jnp.int32)
+            e_b = nq.param_exps["vec"]
+        else:
+            b = jnp.asarray(inputs[1], jnp.int32)
+            e_b = nq.in_exps[1]
+        if kind == "hadamard":
+            return _requantize(a * b, e_a + e_b - nq.out_exp)
+        # align addends to the finer scale before combining; cap the shift —
+        # past it the finer operand is below the coarser one's resolution.
+        e_c = min(max(e_a, e_b), min(e_a, e_b) + 20)
+        acc = _q_align(a, e_a, e_c) + (1 if kind == "add" else -1) * _q_align(b, e_b, e_c)
+        return _requantize(acc, e_c - nq.out_exp)
+
+    return jax_fn_q
+
+
+def _q_scalar_mul(inputs, params, dims, nq):
+    jnp = _jnp()
+    acc = jnp.asarray(inputs[0], jnp.int32) * int(nq.params_q["scalar"])
+    return _requantize(acc, nq.in_exps[0] + nq.param_exps["scalar"] - nq.out_exp)
+
+
+def _q_matvec(inputs, params, dims, nq):
+    """int8 gemv/spmv: int8×int8 MACs accumulated in int32 (the widened
+    accumulator of the fixed-point MAC PE), one requantize per output row."""
+    jnp = _jnp()
+    Wq = jnp.asarray(nq.params_q["matrix"], jnp.int32)
+    acc = Wq @ jnp.asarray(inputs[0], jnp.int32).ravel()
+    return _requantize(acc, nq.param_exps["matrix"] + nq.in_exps[0] - nq.out_exp)
+
+
+def _q_matmul(inputs, params, dims, nq):
+    jnp = _jnp()
+    acc = jnp.asarray(inputs[0], jnp.int32) @ jnp.asarray(inputs[1], jnp.int32)
+    return _requantize(acc, nq.in_exps[0] + nq.in_exps[1] - nq.out_exp)
+
+
 # ----------------------------------------------------------------- elementwise family
 def _make_elementwise(
     name: str,
@@ -124,6 +191,7 @@ def _make_elementwise(
     lut_per_pe: int = _LUT_ADD,
     dsp_per_pe: int = 0,
     flops_per_elem: float = 1.0,
+    jax_fn_q: Callable | None = None,
 ) -> OpSpec:
     def infer_dims(dfg: "DFG", node: "Node") -> dict[str, int]:
         shapes = dfg.in_shapes(node.id)
@@ -166,18 +234,22 @@ def _make_elementwise(
             cycles=cycles,
             lut=lut,
             max_pf=lambda d: max(1, d["n"]),
+            jax_fn_q=jax_fn_q,
         )
     )
 
 
-_make_elementwise("add", lambda: (lambda a, b: _jnp().add(a, b)), binary=True)
-_make_elementwise("sub", lambda: (lambda a, b: _jnp().subtract(a, b)), binary=True)
+_make_elementwise("add", lambda: (lambda a, b: _jnp().add(a, b)), binary=True,
+                  jax_fn_q=_q_elementwise("add"))
+_make_elementwise("sub", lambda: (lambda a, b: _jnp().subtract(a, b)), binary=True,
+                  jax_fn_q=_q_elementwise("sub"))
 _make_elementwise(
     "hadamard",
     lambda: (lambda a, b: _jnp().multiply(a, b)),
     binary=True,
     lut_per_pe=_LUT_MAC,
     dsp_per_pe=1,
+    jax_fn_q=_q_elementwise("hadamard"),
 )
 _make_elementwise("relu", lambda: (lambda a: _jnp().maximum(a, 0.0)), binary=False, lut_per_pe=_LUT_CMP)
 _make_elementwise(
@@ -213,6 +285,7 @@ def _scalar_mul_spec() -> OpSpec:
             cycles=lambda d, pf: math.ceil(d["n"] / pf) + _FILL,
             lut=lambda d, pf: 90 + _LUT_MAC * pf,
             max_pf=lambda d: max(1, d["n"]),
+            jax_fn_q=_q_scalar_mul,
         )
     )
 
@@ -365,6 +438,7 @@ def _gemv_spec() -> OpSpec:
             cycles=cycles,
             lut=lut,
             max_pf=lambda d: max(1, (d["m"] * d["n"]) // 4),
+            jax_fn_q=_q_matvec,
         )
     )
 
@@ -412,6 +486,7 @@ def _spmv_spec() -> OpSpec:
             cycles=cycles,
             lut=lut,
             max_pf=lambda d: max(1, d["nnz"] // 4),
+            jax_fn_q=_q_matvec,
         )
     )
 
@@ -450,6 +525,7 @@ def _matmul_spec() -> OpSpec:
             cycles=cycles,
             lut=lambda d, pf: 160 + _LUT_MAC * pf + _shuffle_lut(pf),
             max_pf=lambda d: max(1, (d["m"] * d["n"])),
+            jax_fn_q=_q_matmul,
         )
     )
 

@@ -118,7 +118,7 @@ def greedy_best_pf(ctx: CostContext, metric: Metric = "latency_per_lut") -> PFRe
     while True:
         iters += 1
         path, total = ctx.critical(pfs)
-        best: tuple[float, list[int], float] | None = None
+        best: tuple[tuple[float, float], list[int], float] | None = None
         tried: set[int] = set()
         for nid in path:
             g = ctx.groups.group_of[nid]
@@ -137,10 +137,15 @@ def greedy_best_pf(ctx: CostContext, metric: Metric = "latency_per_lut") -> PFRe
             if dlat <= 0:
                 continue
             if metric == "latency":
-                score = dlat
+                score = (0.0, dlat)
             else:
                 dlut = ctx.lut_total(cand) - ctx.lut_total(pfs)
-                score = dlat / max(dlut, 1e-9)
+                # A move that adds no LUTs (dlut <= 0) is *free*: strictly
+                # prefer it over any paid move, and rank free moves among
+                # themselves by latency gain.  (Dividing by an epsilon-clamped
+                # dlut instead lets a paid move outscore a small free one and
+                # collapses LUT-reducing moves onto the same inflated ratio.)
+                score = (1.0, dlat) if dlut <= 0 else (0.0, dlat / dlut)
             if best is None or score > best[0]:
                 best = (score, cand, new_total)
         if best is None:

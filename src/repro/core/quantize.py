@@ -1,0 +1,210 @@
+"""Fixed-point (int8) quantization pass — the workload class MAFIA targets.
+
+MAFIA compiles *SeeDot-lineage* programs: ML inference expressed entirely in
+low-bitwidth integer arithmetic so it fits milliwatt FPGAs (paper §II, §V-A).
+This pass retrofits that onto the float32 DFG pipeline: given a built DFG and
+a calibration set, it infers one *power-of-two* scale per tensor (SeeDot's
+fixed-point representation: ``value ≈ q · 2^-exp`` with ``q`` an int8), and
+quantizes every static parameter the int8 templates consume.
+
+Scales are per-tensor and symmetric (zero-point 0, range ±127), so every
+rescale between fixed-point formats is a plain arithmetic shift — exactly the
+hardware SeeDot emits (no integer division, no per-channel multipliers).
+Calibration picks, for each tensor, the largest exponent whose range still
+covers the tensor's observed max-abs: maximal precision without (calibration)
+overflow; unseen inputs beyond that range saturate, the standard fixed-point
+behaviour.
+
+The executor consumes the plan (:func:`repro.core.executor.build_callable`
+with ``precision="int8"``): ops with an int8 template variant
+(``OpSpec.jax_fn_q``) run int8-in/int8-out with int32 accumulation and a
+requantize-on-write; everything else (nonlinearities, reductions) runs
+dequantize → float template → requantize, mirroring MAFIA's table-based
+nonlinear PEs that take fixed-point in and produce fixed-point out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core import node_types
+from repro.core.dfg import DFG
+
+__all__ = [
+    "Q_MAX", "NodeQuant", "QuantPlan", "pow2_exp", "quantize_np",
+    "quantize_jnp", "dequantize", "requantize_i32", "calibration_inputs",
+    "calibrate",
+]
+
+Q_MAX = 127          # symmetric int8 range ±127 (avoids the -128 asymmetry)
+_EXP_CLAMP = 21      # |exp| bound: keeps every requantize shift int32-safe
+_MAX_RSHIFT = 24     # beyond this a right shift of any int32 acc is ~0 anyway
+_MAX_LSHIFT = 8      # beyond this any nonzero acc saturates ±127 anyway
+
+
+def _jnp():
+    import jax.numpy as jnp
+
+    return jnp
+
+
+# ------------------------------------------------------------------ helpers
+def pow2_exp(max_abs: float) -> int:
+    """Largest exponent ``e`` with ``max_abs · 2^e ≤ Q_MAX`` (clamped)."""
+    if not math.isfinite(max_abs) or max_abs <= 0.0:
+        return 0
+    e = int(math.floor(math.log2(Q_MAX / max_abs)))
+    return max(-_EXP_CLAMP, min(_EXP_CLAMP, e))
+
+
+def quantize_np(x: np.ndarray, exp: int) -> np.ndarray:
+    """Host-side quantization of static parameters to int8 at ``2^-exp``."""
+    q = np.round(np.asarray(x, np.float64) * float(2.0**exp))
+    return np.clip(q, -Q_MAX, Q_MAX).astype(np.int8)
+
+
+def quantize_jnp(x: Any, exp: int) -> Any:
+    """Traceable float → int8 quantization (graph inputs, requant-on-write)."""
+    jnp = _jnp()
+    q = jnp.round(jnp.asarray(x, jnp.float32) * (2.0**exp))
+    return jnp.clip(q, -Q_MAX, Q_MAX).astype(jnp.int8)
+
+
+def dequantize(q: Any, exp: int) -> Any:
+    jnp = _jnp()
+    return jnp.asarray(q, jnp.float32) * (2.0 ** (-exp))
+
+
+def requantize_i32(acc: Any, shift: int) -> Any:
+    """int32 accumulator → int8 at the output scale: rounding arithmetic
+    shift + saturate, the write-back step of every int8 template.  ``shift``
+    is static per node (scales are compile-time), so this jits to two ops."""
+    jnp = _jnp()
+    acc = jnp.asarray(acc, jnp.int32)
+    if shift > 0:
+        s = min(shift, _MAX_RSHIFT)
+        acc = (acc + (1 << (s - 1))) >> s
+    elif shift < 0:
+        # output scale finer than the accumulator's: any |acc| ≥ 1 saturates
+        # once the shift exceeds _MAX_LSHIFT, so the clamp loses nothing.
+        acc = jnp.clip(acc, -(1 << 20), 1 << 20) << min(-shift, _MAX_LSHIFT)
+    return jnp.clip(acc, -Q_MAX, Q_MAX).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class NodeQuant:
+    """Per-node fixed-point formats: one exponent per input (positionally
+    matching ``node.inputs``; None = non-quantized value such as an integer
+    index), the output exponent (None = integer output, e.g. argmax), and
+    the int8-quantized static parameters with their exponents."""
+
+    in_exps: tuple[int | None, ...]
+    out_exp: int | None
+    params_q: dict[str, Any]
+    param_exps: dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Everything the executor needs to run a DFG in int8."""
+
+    input_exps: dict[str, int]
+    nodes: dict[str, NodeQuant]
+
+
+def calibration_inputs(dfg: DFG, n: int = 64, seed: int = 0) -> dict[str, np.ndarray]:
+    """Synthetic standard-normal calibration batch per graph input — the
+    fallback when no training split is supplied.  Matches the standardized
+    (zero-mean unit-variance) preprocessing SeeDot assumes, so ranges are
+    representative for the classical benchmarks even without real data."""
+    rng = np.random.default_rng(seed)
+    return {
+        name: rng.normal(size=(n,) + gi.shape).astype(np.float32)
+        for name, gi in dfg.graph_inputs.items()
+    }
+
+
+def calibrate(
+    dfg: DFG,
+    calib: Mapping[str, Any] | np.ndarray | None = None,
+    *,
+    n_samples: int = 64,
+    seed: int = 0,
+) -> QuantPlan:
+    """Walk the DFG over a calibration batch and infer per-tensor scales.
+
+    ``calib`` is a dict of graph-input name → ``(N, *shape)`` batch, a bare
+    batch array when the DFG has a single input (the classical benchmarks),
+    or None to fall back to :func:`calibration_inputs`.  The walk runs the
+    *float* templates — calibration observes the real value ranges the int8
+    program must cover.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if calib is None:
+        calib = calibration_inputs(dfg, n=n_samples, seed=seed)
+    if not isinstance(calib, Mapping):
+        if len(dfg.graph_inputs) != 1:
+            raise ValueError(
+                f"bare calibration array needs a single-input DFG; "
+                f"{dfg.name!r} has inputs {sorted(dfg.graph_inputs)}")
+        (name,) = dfg.graph_inputs
+        calib = {name: calib}
+    missing = set(dfg.graph_inputs) - set(calib)
+    if missing:
+        raise ValueError(f"calibration missing graph inputs: {sorted(missing)}")
+
+    env: dict[str, Any] = {}
+    for name, gi in dfg.graph_inputs.items():
+        arr = jnp.asarray(np.asarray(calib[name], np.float32))
+        if arr.shape[1:] != gi.shape:
+            raise ValueError(
+                f"calibration batch for {name!r} has shape {arr.shape}, "
+                f"expected (N,) + {gi.shape}")
+        env[name] = arr
+    maxabs: dict[str, float] = {
+        name: float(jnp.max(jnp.abs(v))) for name, v in env.items()
+    }
+    for nid in dfg.topo_order():
+        node = dfg.nodes[nid]
+        spec = node_types.get(node.op)
+        fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
+        out = jax.vmap(fn)(*[env[s] for s in node.inputs])
+        env[nid] = out
+        if jnp.issubdtype(out.dtype, jnp.floating):
+            maxabs[nid] = float(jnp.max(jnp.abs(out)))
+
+    exps = {name: pow2_exp(v) for name, v in maxabs.items()}
+    nodes: dict[str, NodeQuant] = {}
+    for nid, node in dfg.nodes.items():
+        spec = node_types.get(node.op)
+        params_q: dict[str, Any] = {}
+        param_exps: dict[str, int] = {}
+        if spec.jax_fn_q is not None:
+            if "scalar" in node.params:
+                s = float(node.params["scalar"])
+                e = pow2_exp(abs(s))
+                params_q["scalar"] = int(np.clip(round(s * 2.0**e), -Q_MAX, Q_MAX))
+                param_exps["scalar"] = e
+            for pname in ("matrix", "vec"):
+                if pname in node.params:
+                    arr = np.asarray(node.params[pname])
+                    e = pow2_exp(float(np.max(np.abs(arr))) if arr.size else 0.0)
+                    params_q[pname] = quantize_np(arr, e)
+                    param_exps[pname] = e
+        nodes[nid] = NodeQuant(
+            in_exps=tuple(exps.get(s) for s in node.inputs),
+            out_exp=exps.get(nid),
+            params_q=params_q,
+            param_exps=param_exps,
+        )
+    return QuantPlan(
+        input_exps={name: exps[name] for name in dfg.graph_inputs},
+        nodes=nodes,
+    )

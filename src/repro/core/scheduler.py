@@ -93,8 +93,10 @@ def _node_cycles(dfg: DFG, nid: str, assignment: dict[str, int]) -> float:
 
 def _pipelined_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int]) -> float:
     """Super-node latency: elements stream through all stages concurrently —
-    bottleneck stage's streaming time + per-stage fill."""
-    stage = [_node_cycles(dfg, nid, assignment) - _FILL for nid in cluster]
+    bottleneck stage's streaming time + per-stage fill.  A stage shorter than
+    its own fill overhead streams for 0 cycles, never a negative number (a
+    negative bottleneck would understate the cluster below its fill total)."""
+    stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL) for nid in cluster]
     return max(stage) + _FILL * len(cluster)
 
 

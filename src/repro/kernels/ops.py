@@ -75,6 +75,14 @@ def try_fuse_linear_cluster(
     topo = [n for n in dfg.topo_order() if n in mset]
     if not any(dfg.nodes[n].op in _STAGEABLE for n in topo):
         return None
+    # Quantized (int8) clusters stream integer values whose inter-stage
+    # requantization the float pipeline kernel cannot express — decline so
+    # the caller's quantized per-node path runs instead of miscomputing.
+    if any(
+        jnp.issubdtype(jnp.asarray(env[src]).dtype, jnp.integer)
+        for nid in topo for src in dfg.nodes[nid].inputs if src in env
+    ):
+        return None
     results: dict[str, Any] = {}
 
     def get(ref: str) -> Any:

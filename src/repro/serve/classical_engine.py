@@ -12,9 +12,15 @@ size; the Python layer only does queue bookkeeping — mirroring the
 slot/queue split of the transformer engine.
 
 Programs are cached per ``(benchmark, trained, seed, backend, strategy,
-metric, pipelining, use_pallas)`` — repeat engines (and repeat benchmark
-sweeps) never recompile: :func:`configs.classical.build` is deterministic
-in those knobs, so the key fully identifies the program.
+metric, pipelining, use_pallas, precision)`` — repeat engines (and repeat
+benchmark sweeps) never recompile: :func:`configs.classical.build` is
+deterministic in those knobs, so the key fully identifies the program.
+
+``precision="int8"`` serves the fixed-point program the paper's workloads
+actually run: the compiler calibrates power-of-two scales from the
+benchmark's training split and the batched forwards execute in int8 with
+int32 accumulation.  Requests still carry float feature vectors — the
+quantize/dequantize boundary lives inside the compiled callable.
 """
 
 from __future__ import annotations
@@ -25,8 +31,10 @@ from typing import Any
 
 import numpy as np
 
-from repro.configs.classical import ClassicalBenchmark, build
+from repro.configs.classical import ClassicalBenchmark, build, training_split
 from repro.core.compiler import BatchedProgram, CompiledProgram, MafiaCompiler
+
+_CALIB_SAMPLES = 256     # training-split rows used for int8 scale calibration
 
 __all__ = ["ClassicalServeEngine", "InferRequest", "get_program",
            "clear_program_cache"]
@@ -46,24 +54,30 @@ def get_program(
     metric: str = "latency_per_lut",
     pipelining: bool | str = True,
     use_pallas: bool = False,
+    precision: str = "float32",
 ) -> CompiledProgram:
     """Compile (or fetch from cache) one classical benchmark program.
 
     ``build()`` is deterministic given ``(bench, trained, seed)`` and the
-    compiler is deterministic given its knobs, so the tuple of all eight
+    compiler is deterministic given its knobs, so the tuple of all nine
     arguments keys the cache exactly — a repeat call is a dict hit, not a
-    recompile.
+    recompile.  With ``precision="int8"`` the int8 scales are calibrated
+    from the benchmark's (deterministic, seeded) training split.
     """
     name = bench if isinstance(bench, str) else bench.name
     key = (name, trained, seed, backend, strategy, metric, pipelining,
-           use_pallas)
+           use_pallas, precision)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         dfg, _, _ = build(bench, trained=trained, seed=seed)
+        calib = None
+        if precision == "int8":
+            Xtr, _ = training_split(bench, seed=seed)
+            calib = Xtr[:_CALIB_SAMPLES]
         compiler = MafiaCompiler(
             backend=backend, strategy=strategy, metric=metric,
-            pipelining=pipelining, use_pallas=use_pallas)
-        prog = compiler.compile(dfg)
+            pipelining=pipelining, use_pallas=use_pallas, precision=precision)
+        prog = compiler.compile(dfg, calib=calib)
         _PROGRAM_CACHE[key] = prog
     return prog
 
@@ -103,9 +117,11 @@ class ClassicalServeEngine:
 
     ``program`` is a :class:`CompiledProgram`, or a benchmark name like
     ``"bonsai/usps-b"`` resolved through the program cache (compile knobs
-    pass through ``**compile_kw``).  ``mode`` picks the batched execution
-    strategy: ``"vmap"`` (throughput; Pallas pipeline clusters see the whole
-    bucket) or ``"map"`` (bit-identical to per-sample execution).
+    pass through ``**compile_kw`` — e.g. ``precision="int8"`` serves the
+    fixed-point lane).  ``mode`` picks the batched execution strategy:
+    ``"vmap"`` (throughput; Pallas pipeline clusters see the whole bucket)
+    or ``"map"`` (bit-identical to per-sample execution — at int8 the two
+    modes agree *bitwise*, integer arithmetic has no reassociation error).
     """
 
     def __init__(

@@ -130,7 +130,15 @@ class ServeEngine:
 
     # --------------------------------------------------------- bookkeeping
     def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
-        req = Request(self._next_rid, list(prompt), max_new_tokens)
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= engine max_len {self.max_len}")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        req = Request(self._next_rid, prompt, max_new_tokens)
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
@@ -158,7 +166,9 @@ class ServeEngine:
     def _insert(self, req: Request, slot: int) -> None:
         prompt = np.asarray(req.prompt, np.int32)
         plen = len(prompt)
-        assert plen < self.max_len, "prompt longer than engine max_len"
+        if plen >= self.max_len:  # submit() validates; keep a -O-proof guard
+            raise ValueError(
+                f"prompt length {plen} >= engine max_len {self.max_len}")
         sp = self._bucket(plen)
         padded = np.zeros(sp, np.int32)
         padded[:plen] = prompt
@@ -191,6 +201,15 @@ class ServeEngine:
             if not self._queue:
                 break
             self._insert(self._queue.pop(0), slot)
+        # Retire requests already satisfied by prefill (max_new_tokens=1:
+        # _insert sampled their one token) *before* decoding — the decode
+        # loop skips done requests, so without this sweep their slots never
+        # free and run_to_completion spins to max_steps.
+        for slot, req in list(self._slots.items()):
+            if req.done:
+                self.active[slot] = False
+                self._finished.append(req)
+                del self._slots[slot]
         if not self.active.any():
             return {}
 
@@ -199,13 +218,9 @@ class ServeEngine:
             jnp.asarray(self.pos),
         )
         out: dict[int, int] = {}
-        lg = np.array(logits, np.float32)        # writable copy
+        lg = np.asarray(logits, np.float32)      # _sample copies its own row
         for slot, req in list(self._slots.items()):
-            if req.done:
-                continue
-            row = lg[slot]
-            row[self.cfg.vocab_size:] = -np.inf
-            tok = int(row.argmax()) if self.greedy else self._sample(row)
+            tok = self._sample(lg[slot])         # masks padding + greedy/categorical
             req.tokens.append(tok)
             out[req.rid] = tok
             self.last_token[slot] = tok

@@ -79,6 +79,64 @@ def test_blackbox_comparable_to_greedy():
     assert bp.est_latency <= b.est_latency + 1e-9  # ...and can only help
 
 
+class _TierCtx:
+    """Duck-typed CostContext over single-node groups with hand-set latency
+    and LUT tables, where the budget admits bumping exactly one group —
+    isolates greedy's candidate scoring from estimator noise."""
+
+    def __init__(self, lat, dlut):
+        # lat[g] = (latency at pf 1, latency at pf 2); dlut[g] = LUT cost of
+        # the pf 1 -> 2 bump
+        self.ids = [f"g{i}" for i in range(len(lat))]
+        self.lat, self.dlut = lat, dlut
+        self.groups = self
+        self.members = [[i] for i in self.ids]
+        self.group_of = {nid: g for g, nid in enumerate(self.ids)}
+
+    def assignment(self, pfs):
+        return {nid: pfs[g] for nid, g in self.group_of.items()}
+
+    def critical(self, pfs):
+        return list(self.ids), sum(self.lat[g][pf - 1] for g, pf in enumerate(pfs))
+
+    def next_pf(self, pf):
+        return pf + 1
+
+    def max_pf(self, g):
+        return 2
+
+    def fits(self, pfs):
+        return sum(pf > 1 for pf in pfs) <= 1     # budget: one bump only
+
+    def lut_total(self, pfs):
+        return sum(self.dlut[g] * (pf - 1) for g, pf in enumerate(pfs))
+
+    def dsp_total(self, pfs):
+        return 0.0
+
+
+def test_greedy_free_move_strictly_preferred():
+    """Regression: `dlat / max(dlut, 1e-9)` let a paid move outscore a free
+    (zero-LUT-delta) one whenever the free latency gain was tiny.  A free
+    move must win the tie-break outright, however small its gain."""
+    ctx = _TierCtx(lat=[(100.0, 100.0 - 1e-7), (100.0, 10.0)],
+                   dlut=[0.0, 50.0])
+    res = greedy_best_pf(ctx, metric="latency_per_lut")
+    assert res.group_pfs == [2, 1], \
+        f"free move lost the tie-break to a paid one: {res.group_pfs}"
+
+
+def test_greedy_free_tier_ranked_by_latency_gain():
+    """Within the free tier (dlut <= 0, including LUT-*reducing* moves) the
+    larger latency gain wins; the `latency` metric is unaffected."""
+    ctx = _TierCtx(lat=[(100.0, 99.0), (100.0, 10.0), (100.0, 95.0)],
+                   dlut=[0.0, 50.0, -10.0])
+    res = greedy_best_pf(ctx, metric="latency_per_lut")
+    assert res.group_pfs == [1, 1, 2]              # dlat 5 free beats dlat 1 free
+    res = greedy_best_pf(ctx, metric="latency")
+    assert res.group_pfs == [1, 2, 1]              # pure latency: biggest drop
+
+
 def test_tpu_backend_pow2_steps():
     ctx = _ctx(_bonsai_dfg(), backend="tpu")
     res = greedy_best_pf(ctx, metric="latency")

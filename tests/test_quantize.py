@@ -1,0 +1,162 @@
+"""Int8 fixed-point compilation path (the paper's SeeDot-lineage workload
+class): scale/requantize helpers, float-vs-int8 parity on every classical
+benchmark, bitwise map/vmap agreement, Pallas fusion decline, serving."""
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core import quantize
+from repro.core.compiler import MafiaCompiler
+from repro.data.datasets import make_dataset
+from repro.models import bonsai, protonn
+from repro.serve.classical_engine import ClassicalServeEngine
+
+# Accuracy a quantized program may lose vs its float32 twin before the
+# parity suite fails — the calibrated floor (benchmarks/quantization_error.py
+# measures the actual deltas, ≲1% on trained models).
+ACC_FLOOR = 0.06
+
+
+# ----------------------------------------------------------------- helpers
+def _seeded_pair(bench, n_test=64):
+    """(float32 program, int8 program, Xte, yte) for one benchmark, built
+    from cheap data-seeded inits (ProtoNN's prototype seeding makes its
+    accuracy meaningful without gradient steps)."""
+    Xtr, ytr, Xte, yte = make_dataset(bench.dataset, n_train=256, n_test=n_test)
+    mod = bonsai if bench.algo == "bonsai" else protonn
+    cfg = mod.from_spec(bench.dataset)
+    if bench.algo == "protonn":
+        params = mod.init_params(cfg, 0, Xtr, ytr)
+    else:
+        params = mod.init_params(cfg, 0)
+    dfg_f = mod.build_dfg(params, cfg)
+    dfg_q = mod.build_dfg(params, cfg)
+    f32 = MafiaCompiler(strategy="none").compile(dfg_f)
+    i8 = MafiaCompiler(strategy="none", precision="int8").compile(dfg_q, calib=Xtr)
+    return f32, i8, Xte, yte
+
+
+def _preds(prog, X):
+    return np.asarray(prog.batch(len(X), mode="map")(x=X)["Pred"]).ravel()
+
+
+# ------------------------------------------------------------ scale helpers
+def test_pow2_exp_and_roundtrip():
+    assert quantize.pow2_exp(1.0) == 6            # 127 * 2^-7 < 1 <= 127 * 2^-6
+    assert quantize.pow2_exp(127.0) == 0
+    assert quantize.pow2_exp(1000.0) == -3
+    assert quantize.pow2_exp(0.0) == 0            # degenerate: all-zero tensor
+    x = np.linspace(-3.0, 3.0, 64, dtype=np.float32)
+    e = quantize.pow2_exp(3.0)
+    q = quantize.quantize_np(x, e)
+    assert q.dtype == np.int8 and np.abs(q).max() <= quantize.Q_MAX
+    err = np.abs(np.asarray(quantize.dequantize(q, e)) - x)
+    assert err.max() <= 2.0 ** (-e - 1) + 1e-7    # within half a quantum
+
+
+def test_requantize_shift_directions():
+    acc = np.array([512, -512, 3, 0], np.int32)
+    # right shift with rounding: 512 >> 2 = 128 -> saturates at 127
+    out = np.asarray(quantize.requantize_i32(acc, 2))
+    assert out.tolist() == [127, -127, 1, 0]
+    # negative shift = finer output scale: left shift then saturate
+    out = np.asarray(quantize.requantize_i32(np.array([3, -2], np.int32), -4))
+    assert out.tolist() == [48, -32]
+    out = np.asarray(quantize.requantize_i32(np.array([1, 0], np.int32), -30))
+    assert out.tolist() == [127, 0]               # clamped shift still saturates
+
+
+def test_calibrate_validates_inputs():
+    dfg, _, _ = build(BENCHMARKS[0])
+    with pytest.raises(ValueError, match="shape"):
+        quantize.calibrate(dfg, np.zeros((4, 7), np.float32))
+    with pytest.raises(ValueError, match="missing graph inputs"):
+        quantize.calibrate(dfg, {"nope": np.zeros((4, 7), np.float32)})
+    plan = quantize.calibrate(dfg)                # synthetic fallback
+    assert set(plan.input_exps) == {"x"}
+    assert plan.nodes["Pred"].out_exp is None     # argmax output stays integer
+
+
+def test_compiler_rejects_unknown_precision():
+    with pytest.raises(ValueError, match="precision"):
+        MafiaCompiler(precision="int4")
+
+
+# ------------------------------------------------------ parity, every bench
+def test_int8_accuracy_floor_every_benchmark():
+    """The int8 program must stay within the calibrated accuracy floor of its
+    float32 twin on all 20 classical benchmarks (paper Table I sweep)."""
+    for bench in BENCHMARKS:
+        f32, i8, Xte, yte = _seeded_pair(bench)
+        acc_f = float((_preds(f32, Xte) == yte).mean())
+        acc_q = float((_preds(i8, Xte) == yte).mean())
+        assert acc_q >= acc_f - ACC_FLOOR, (
+            f"{bench.name}: int8 accuracy {acc_q:.3f} fell more than "
+            f"{ACC_FLOOR} below float32 {acc_f:.3f}")
+
+
+def test_int8_works_without_calibration_data():
+    """Acceptance path: MafiaCompiler(precision='int8').compile(dfg) with no
+    calib batch (synthetic standardized calibration) still classifies."""
+    dfg, _, _ = build(BENCHMARKS[0])
+    prog = MafiaCompiler(precision="int8").compile(dfg)
+    assert prog.precision == "int8" and prog.qplan is not None
+    _, _, Xte, _ = make_dataset(BENCHMARKS[0].dataset, n_train=16, n_test=4)
+    out = prog(x=Xte[0])
+    assert np.isfinite(np.asarray(out["ClassSum"])).all()
+    assert np.asarray(out["Pred"]).dtype == np.int32
+
+
+# --------------------------------------------------- batched-mode contracts
+@pytest.mark.parametrize("bench", [BENCHMARKS[3], BENCHMARKS[13]])  # usps-b ×2
+def test_int8_map_vmap_bitwise(bench):
+    """At int8, mode='map' and mode='vmap' batched serving agree *bitwise* —
+    integer accumulation has no reassociation error, unlike float vmap."""
+    _, i8, Xte, _ = _seeded_pair(bench, n_test=13)
+    om = i8.batch(max_batch=8, mode="map")(x=Xte)
+    ov = i8.batch(max_batch=8, mode="vmap")(x=Xte)
+    for k in om:
+        assert np.array_equal(np.asarray(om[k]), np.asarray(ov[k])), \
+            f"{bench.name} {k}: int8 map/vmap not bitwise-equal"
+    # and map stays bitwise-equal to the per-sample program (float contract)
+    for i in range(13):
+        ref = i8(x=Xte[i])
+        for k in ref:
+            assert np.array_equal(np.asarray(om[k][i]), np.asarray(ref[k]))
+
+
+def test_int8_pallas_cluster_declined_not_miscomputed():
+    """use_pallas must not push int8 clusters through the float pipeline
+    kernel: the fusion glue declines them and the quantized per-node path
+    runs — results bitwise-identical to the non-Pallas int8 program."""
+    bench = BENCHMARKS[13]                        # protonn: has a fused cluster
+    Xtr, _, Xte, _ = make_dataset(bench.dataset, n_train=64, n_test=5)
+    cfg = protonn.from_spec(bench.dataset)
+    params = protonn.init_params(cfg, 0)
+    progs = []
+    for use_pallas in (False, True):
+        dfg = protonn.build_dfg(params, cfg)
+        progs.append(MafiaCompiler(precision="int8", use_pallas=use_pallas)
+                     .compile(dfg, calib=Xtr))
+    assert progs[1].fused_clusters                # there was a cluster to decline
+    for i in range(5):
+        a, b = progs[0](x=Xte[i]), progs[1](x=Xte[i])
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ----------------------------------------------------------------- serving
+def test_int8_serving_engine_end_to_end():
+    eng = ClassicalServeEngine("bonsai/usps-b", max_batch=8, mode="map",
+                               precision="int8")
+    assert eng.program.precision == "int8"
+    _, _, Xte, _ = make_dataset("usps-b", n_train=16, n_test=11)
+    rids = [eng.submit(x) for x in Xte]
+    done = eng.run_to_completion()
+    assert [r.rid for r in done] == rids
+    for r in done:
+        ref = eng.program(x=r.x)
+        for k in ref:
+            assert np.array_equal(r.outputs[k], np.asarray(ref[k]))
+        assert r.pred == int(np.asarray(ref["Pred"]).ravel()[0])

@@ -60,6 +60,53 @@ def test_sequential_is_sum_of_nodes():
     assert np.isclose(sq.total_cycles, total)
 
 
+def _register_subfill_op():
+    """An op whose total latency (2 cycles) is below the pipeline fill
+    overhead (_FILL = 6) — exercises the streaming-time clamp."""
+    from repro.core import node_types
+
+    if "subfill" in node_types.all_ops():
+        return
+    node_types.register(node_types.OpSpec(
+        name="subfill",
+        linear_time=True,
+        dsp_per_pe=0,
+        infer_dims=lambda dfg, node: {"n": 4},
+        out_shape=lambda dfg, node: dfg.in_shapes(node.id)[0],
+        jax_fn=lambda inputs, params, dims: inputs[0],
+        flops=lambda d: 1.0,
+        mem_bytes=lambda d: 8.0,
+        cycles=lambda d, pf: 2.0,
+        lut=lambda d, pf: 10.0,
+        max_pf=lambda d: 4,
+    ))
+
+
+def test_pipelined_sub_fill_stage_clamps_at_zero():
+    """Regression: `cycles - _FILL` went negative for stages shorter than the
+    fill overhead, letting a negative bottleneck understate the cluster below
+    its own fill total (two 2-cycle stages reported 8 < 2·_FILL = 12)."""
+    from repro.core.scheduler import _FILL, _pipelined_cycles
+
+    _register_subfill_op()
+    g = DFG()
+    g.add_input("x", (4,))
+    a = g.add("subfill", "x", id="a")
+    b = g.add("subfill", a, id="b")
+    g.mark_output(b)
+    profile_pf1(g)
+    asn = {nid: 1 for nid in g.nodes}
+    assert _pipelined_cycles(g, ["a", "b"], asn) == 2 * _FILL
+    sched = simulate(g, asn, order="dataflow", pipelining=True)
+    assert sched.pipelined_clusters == [["a", "b"]]
+    assert sched.total_cycles == 2 * _FILL
+    # the cluster can never beat the serial sum of its stages' fills, nor
+    # any single member's full latency
+    from repro.core import node_types
+    for nid in ("a", "b"):
+        assert sched.total_cycles >= node_types.get("subfill").cycles({"n": 4}, 1)
+
+
 def test_reentrant_cluster_not_pipelined():
     g = DFG()
     g.add_input("x", (8,))

@@ -42,6 +42,42 @@ def test_generation_matches_teacher_forcing(arch):
         assert r.tokens == _teacher_forced(cfg, params, r.prompt, r.tokens)
 
 
+def test_max_new_tokens_1_retires_without_spinning():
+    """Regression: a request satisfied by its prefill token (max_new_tokens=1)
+    must be retired before the decode loop — previously its slot never freed
+    and run_to_completion spun to max_steps returning nothing."""
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=2, max_len=64)
+    rids = [eng.submit([1 + i, 2, 3], max_new_tokens=1) for i in range(3)]
+    done = eng.run_to_completion(max_steps=6)     # 3 requests, 2 slots: ≤ 2 steps
+    assert sorted(r.rid for r in done) == rids
+    assert all(len(r.tokens) == 1 for r in done)
+    assert not eng._slots and not eng.active.any()
+
+
+def test_max_new_tokens_1_mixed_with_longer_requests():
+    """A one-token request sharing a batch with longer ones must free its
+    slot while they keep decoding."""
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=2, max_len=64)
+    short = eng.submit([5, 6], max_new_tokens=1)
+    long = eng.submit([7, 8, 9], max_new_tokens=4)
+    done = eng.run_to_completion(max_steps=10)
+    by_rid = {r.rid: r for r in done}
+    assert len(by_rid[short].tokens) == 1
+    assert len(by_rid[long].tokens) == 4
+
+
+def test_submit_validates_inputs():
+    """Input validation raises ValueError (a bare assert vanishes under -O)."""
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(1, 17)))            # plen == max_len
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], max_new_tokens=0)
+    assert not eng._queue                         # nothing was admitted
+
+
 def test_more_requests_than_slots():
     cfg, params, eng = _engine("qwen2.5-3b", max_batch=2, max_len=64)
     rids = [eng.submit([1 + i, 2, 3], max_new_tokens=4) for i in range(5)]

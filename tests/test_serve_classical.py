@@ -129,6 +129,10 @@ def test_program_cache_hits():
     c = get_program(BENCHES[1], strategy="none")
     assert c is not a
     assert len(_PROGRAM_CACHE) == 2
+    d = get_program(BENCHES[1], precision="int8")   # precision keys the cache
+    assert d is not a and d.precision == "int8"
+    assert d is get_program(BENCHES[1], precision="int8")
+    assert len(_PROGRAM_CACHE) == 3
 
 
 def test_engine_accepts_prebuilt_program():
