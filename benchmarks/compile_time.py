@@ -1,0 +1,80 @@
+"""Callable-construction time: per-build re-analysis (old) vs static plan.
+
+Before the lowering pipeline, every ``build_callable`` re-derived atom
+ordering and cluster chain decomposition inside the traced callable — once
+per execution lane (per-sample, vmap, map), so compiling a program's serving
+stack paid the graph analysis three times.  Now
+:meth:`repro.core.compiler.MafiaCompiler.compile` lowers once to a static
+:class:`~repro.core.lowering.ExecutionPlan` and every lane interprets the
+same plan.
+
+This benchmark quantifies that on the largest Table-I benchmark (by node
+count): ``old`` re-runs the lowering pass pipeline for each of the three
+lanes (what per-build analysis cost); ``plan`` lowers once and builds the
+three lanes from the shared plan.  Construction only — no jit, no forward.
+
+    PYTHONPATH=src python benchmarks/compile_time.py
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core.compiler import MafiaCompiler
+from repro.core.executor import build_callable
+from repro.core.lowering import lower
+
+__all__ = ["run"]
+
+_REPEATS = 20
+_LANES = (dict(jit=False), dict(jit=False, batch=True), dict(jit=False))
+
+
+def _largest_benchmark():
+    best, best_n = None, -1
+    for bench in BENCHMARKS:
+        dfg, _, _ = build(bench)
+        if len(dfg.nodes) > best_n:
+            best, best_n, best_dfg = bench, len(dfg.nodes), dfg
+    return best, best_dfg
+
+
+def _time(fn, repeats: int = _REPEATS) -> float:
+    fn()                                   # warm caches (imports, validate)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e3   # ms
+
+
+def run() -> list[str]:
+    bench, dfg = _largest_benchmark()
+    prog = MafiaCompiler(use_pallas=True).compile(dfg)
+    fused = prog.fused_clusters
+
+    def old() -> None:
+        # pre-plan behaviour: each lane re-derives the full graph analysis
+        for kw in _LANES:
+            build_callable(dfg, fused_clusters=fused, use_pallas=True, **kw)
+
+    def planned() -> None:
+        plan = lower(dfg, fused_clusters=fused, use_pallas=True)
+        for kw in _LANES:
+            build_callable(dfg, plan=plan, **kw)
+
+    t_old = _time(old)
+    t_plan = _time(planned)
+    t_lower = _time(lambda: lower(dfg, fused_clusters=fused, use_pallas=True))
+    return [
+        "compile_time.benchmark,nodes,variant,ms_per_3_lanes,speedup",
+        f"compile_time.{bench.name},{len(dfg.nodes)},old,{t_old:.3f},1.00",
+        f"compile_time.{bench.name},{len(dfg.nodes)},plan,{t_plan:.3f},"
+        f"{t_old / t_plan:.2f}",
+        f"compile_time.{bench.name},{len(dfg.nodes)},lower_once,{t_lower:.3f},"
+        f"{t_old / t_lower:.2f}",
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

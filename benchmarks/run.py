@@ -10,7 +10,7 @@ import sys
 import time
 
 _SECTIONS = ["fig3", "fig4", "estimation", "greedy_vs_blackbox", "ablations",
-             "roofline", "throughput", "serve"]
+             "roofline", "throughput", "serve", "quant", "compile_time"]
 
 
 def main() -> int:
@@ -45,6 +45,12 @@ def main() -> int:
     if "serve" in wanted:
         from benchmarks import serve_throughput
         runners["serve"] = serve_throughput.run
+    if "quant" in wanted:
+        from benchmarks import quantization_error
+        runners["quant"] = quantization_error.run
+    if "compile_time" in wanted:
+        from benchmarks import compile_time
+        runners["compile_time"] = compile_time.run
 
     failed = 0
     for name, fn in runners.items():

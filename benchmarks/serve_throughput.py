@@ -39,9 +39,9 @@ def _per_sample_rps(prog, X) -> float:
 
 
 def _engine_rps(bench: str, X, max_batch: int, mode: str,
-                precision: str = "float32") -> float:
+                precision: str = "float32", use_pallas: bool = False) -> float:
     eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode,
-                               precision=precision)
+                               precision=precision, use_pallas=use_pallas)
     for x in X[:max_batch]:                 # warm the bucket's jit entry
         eng.submit(x)
     eng.run_to_completion()
@@ -73,6 +73,15 @@ def run() -> list[str]:
                     out.append(
                         f"serve.{bench},{mode},{precision},{mb},{rps:.0f},"
                         f"{rps / base:.2f}")
+        # fused §IV-G lanes: clusters execute through the Pallas pipeline
+        # kernel (float) / its fixed-point twin (int8 goes integer
+        # end-to-end through one kernel launch per chain).
+        for precision in ("float32", "int8"):
+            rps = _engine_rps(bench, Xte, max(_BATCHES), "vmap", precision,
+                              use_pallas=True)
+            out.append(
+                f"serve.{bench},vmap+pallas,{precision},{max(_BATCHES)},"
+                f"{rps:.0f},{rps / base:.2f}")
     return out
 
 

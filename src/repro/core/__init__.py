@@ -12,6 +12,7 @@ from repro.core.cost_model import EstimatorBank, default_bank, train_estimators
 from repro.core.dfg import DFG, GraphInput, Node
 from repro.core.executor import build_callable, execute
 from repro.core.fpga_model import ARTY_A7, FpgaBudget
+from repro.core.lowering import ChainStep, ExecutionPlan, NodeStep, lower
 from repro.core.optimizer import CostContext, blackbox_best_pf, greedy_best_pf
 from repro.core.profiler import profile_pf1
 from repro.core.quantize import QuantPlan, calibrate
@@ -22,7 +23,8 @@ __all__ = [
     "DFG", "Node", "GraphInput", "MafiaCompiler", "CompiledProgram",
     "BatchedProgram",
     "PFGroups", "EstimatorBank", "default_bank", "train_estimators",
-    "build_callable", "execute", "ARTY_A7", "FpgaBudget", "CostContext",
+    "build_callable", "execute", "ExecutionPlan", "NodeStep", "ChainStep",
+    "lower", "ARTY_A7", "FpgaBudget", "CostContext",
     "greedy_best_pf", "blackbox_best_pf", "profile_pf1", "QuantPlan",
     "calibrate", "Schedule", "simulate", "TPU_V5E", "TpuBudget",
     "roofline_terms",

@@ -21,6 +21,7 @@ from repro.core.cost_model import EstimatorBank, default_bank
 from repro.core.dfg import DFG
 from repro.core.executor import build_callable
 from repro.core.fpga_model import ARTY_A7, FpgaBudget
+from repro.core.lowering import ExecutionPlan, lower
 from repro.core.optimizer import (
     CostContext,
     PFResult,
@@ -48,7 +49,8 @@ class CompiledProgram:
     fused_clusters: list[list[str]] = dataclasses.field(default_factory=list)
     use_pallas: bool = False
     precision: str = "float32"
-    qplan: Any | None = None     # QuantPlan when precision == "int8"
+    qplan: Any | None = None     # QuantPlan on the fixed-point lanes
+    plan: ExecutionPlan | None = None  # static plan every lane interprets
 
     @property
     def latency_cycles(self) -> float:
@@ -104,17 +106,17 @@ class BatchedProgram:
 
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        # every lane interprets the program's static plan — vmap and map
+        # differ only in how the batch axis is driven, never in analysis.
+        kw: dict[str, Any] = dict(
+            fused_clusters=program.fused_clusters,
+            use_pallas=program.use_pallas, precision=program.precision,
+            qplan=program.qplan, plan=program.plan)
         if mode == "vmap":
-            inner = build_callable(
-                program.dfg, fused_clusters=program.fused_clusters,
-                use_pallas=program.use_pallas, jit=False, batch=True,
-                precision=program.precision, qplan=program.qplan)
+            inner = build_callable(program.dfg, jit=False, batch=True, **kw)
             fn = jax.jit(lambda inputs: inner(**inputs))
         elif mode == "map":
-            single = build_callable(
-                program.dfg, fused_clusters=program.fused_clusters,
-                use_pallas=program.use_pallas, jit=False,
-                precision=program.precision, qplan=program.qplan)
+            single = build_callable(program.dfg, jit=False, **kw)
             fn = jax.jit(
                 lambda inputs: jax.lax.map(lambda s: single(**s), inputs))
         else:
@@ -134,7 +136,11 @@ class BatchedProgram:
         import jax.numpy as jnp
 
         arrays = {k: jnp.asarray(v) for k, v in inputs.items()}
-        missing = set(self.program.dfg.graph_inputs) - set(arrays)
+        allowed = set(self.program.dfg.graph_inputs)
+        unknown = set(arrays) - allowed
+        if unknown:  # mirror the per-sample path: extras are a caller bug
+            raise TypeError(f"unknown graph inputs: {sorted(unknown)}")
+        missing = allowed - set(arrays)
         if missing:
             raise TypeError(f"missing graph inputs: {sorted(missing)}")
         sizes = {v.shape[0] for v in arrays.values()}
@@ -179,15 +185,17 @@ class MafiaCompiler:
         precision: str = "float32",
         calib_samples: int = 64,
     ) -> None:
-        """``precision="int8"`` emits the fixed-point program the paper's
-        SeeDot-lineage workloads actually run (float32 is the beyond-paper
+        """``precision="int8"`` / ``"int16"`` emits the fixed-point program
+        the paper's SeeDot-lineage workloads actually run, at either
+        activation width SeeDot targets (float32 is the beyond-paper
         default): :meth:`compile` calibrates per-tensor power-of-two scales
         (from its ``calib`` batch, or ``calib_samples`` synthetic
-        standard-normal samples) and the emitted callable computes in int8
-        with int32 accumulation — interface stays float in / float out."""
+        standard-normal samples) and the emitted callable computes in narrow
+        integers with int32 accumulation — interface stays float in / float
+        out."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
-        if precision not in ("float32", "int8"):
+        if precision not in ("float32", "int8", "int16"):
             raise ValueError(f"unknown precision {precision!r}")
         self.backend = backend
         self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())
@@ -232,8 +240,9 @@ class MafiaCompiler:
         simulated schedule improves — a cluster's all-inputs-ready start
         condition can *delay* branchy DFGs, see benchmarks/ablations.py).
 
-        ``calib`` (int8 only) is the calibration batch — the benchmark's
-        training split for the classical models (a ``(N, n_features)`` array,
+        ``calib`` (fixed-point lanes only) is the calibration batch — the
+        benchmark's training split for the classical models (a
+        ``(N, n_features)`` array,
         or a dict of graph-input name → batch for multi-input DFGs).  Omitted,
         calibration falls back to synthetic standardized samples, matching
         the zero-mean/unit-variance preprocessing the datasets ship with.
@@ -243,6 +252,13 @@ class MafiaCompiler:
             pf_result, groups = self.optimize(dfg)
             assignment = pf_result.assignment
         else:
+            unknown = set(assignment) - set(dfg.nodes)
+            if unknown:
+                raise ValueError(
+                    f"assignment names unknown nodes: {sorted(unknown)}")
+            # external assignments (Vivado-baseline paths) may be partial:
+            # unmentioned nodes run at PF=1, the template default.
+            assignment = {nid: int(assignment.get(nid, 1)) for nid in dfg.nodes}
             profile_pf1(dfg, backend=self.backend)
             groups = PFGroups.build(dfg)
             for nid, pf in assignment.items():
@@ -260,12 +276,17 @@ class MafiaCompiler:
                              pipelining=use_pipe, groups=groups)
         fused = pipeline_clusters(dfg, groups, assignment) if use_pipe else []
         qplan = None
-        if self.precision == "int8":
+        if self.precision != "float32":
             from repro.core import quantize as quantize_mod
 
-            qplan = quantize_mod.calibrate(dfg, calib, n_samples=self.calib_samples)
-        fn = build_callable(dfg, fused_clusters=fused, use_pallas=self.use_pallas,
-                            precision=self.precision, qplan=qplan)
+            qplan = quantize_mod.calibrate(
+                dfg, calib, n_samples=self.calib_samples,
+                bits=quantize_mod.PRECISION_BITS[self.precision])
+        # the lowering pass pipeline runs ONCE here; every execution lane
+        # (per-sample, vmap, map) interprets the resulting static plan.
+        plan = lower(dfg, fused_clusters=fused, use_pallas=self.use_pallas,
+                     precision=self.precision, qplan=qplan)
+        fn = build_callable(dfg, plan=plan)
         lut_true = sum(
             node_types.get(n.op).lut(n.dims, assignment[n.id]) for n in dfg.nodes.values()
         )
@@ -286,4 +307,5 @@ class MafiaCompiler:
             use_pallas=self.use_pallas,
             precision=self.precision,
             qplan=qplan,
+            plan=plan,
         )

@@ -1,12 +1,21 @@
-"""DFG executor — the "Verilog generator" stage of the paper, retargeted.
+"""Plan interpreter — the "Verilog generator" stage of the paper, retargeted.
 
 On the FPGA, MAFIA emits Verilog from the template library.  Here the same
-walk over the scheduled DFG emits a JAX callable: every node is instantiated
-from its template's ``jax_fn`` and the whole graph is jit-compiled.  Pipelined
-linear-time clusters (§IV-G) can optionally execute through the fused Pallas
-kernel (:mod:`repro.kernels.linear_pipeline`) — one HBM→VMEM→HBM round-trip
-for the whole cluster instead of one per node, the TPU analogue of removing
-inter-node buffers.
+role is split in two: :mod:`repro.core.lowering` runs the compile-time pass
+pipeline once and emits a static :class:`~repro.core.lowering.ExecutionPlan`,
+and :func:`build_callable` is a thin interpreter over that plan — it walks
+the pre-ordered steps, applies each pre-bound template function, and hands
+pre-lowered stage chains to the fused Pallas pipeline kernel
+(:mod:`repro.kernels.linear_pipeline`, float or fixed-point variant): one
+HBM→VMEM→HBM round-trip for a whole §IV-G cluster instead of one per node.
+
+All analysis (atom ordering, cluster chain decomposition, quantization
+binding) happens at compile time in the lowering pipeline; nothing here
+re-derives graph structure, which is what keeps the per-sample, vmap and map
+lanes in agreement — they interpret the same plan.
+
+:func:`execute` stays the *unplanned* numeric oracle: a direct per-node walk
+with the float templates, no lowering, no fusion, no jit.
 """
 
 from __future__ import annotations
@@ -18,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import node_types
 from repro.core.dfg import DFG
+from repro.core.lowering import ChainStep, ExecutionPlan, NodeStep, lower
 
 __all__ = ["build_callable", "execute"]
 
@@ -31,140 +41,118 @@ def build_callable(
     batch: bool = False,
     precision: str = "float32",
     qplan: Any | None = None,
+    plan: ExecutionPlan | None = None,
 ) -> Callable[..., dict[str, Any]]:
     """Compile the DFG into a function ``f(**graph_inputs) -> {output: array}``.
 
+    Without a pre-built ``plan`` the lowering pipeline runs here (direct
+    callers, tests); :meth:`repro.core.compiler.MafiaCompiler.compile` lowers
+    once and passes the plan through, so the per-sample, vmap and map lanes
+    all interpret the same static plan.
+
     ``fused_clusters`` (from the scheduler) lists linear-time clusters to
-    execute as a fused unit.  With ``use_pallas`` the fused unit lowers through
-    the Pallas linear-pipeline kernel (interpret mode on CPU); otherwise the
-    fusion is structural (jnp ops composed inside one sub-function, which XLA
-    fuses into one loop anyway — same semantics, same oracle).
+    execute as a fused unit.  With ``use_pallas`` the plan carries pre-lowered
+    stage chains executed through the Pallas linear-pipeline kernel
+    (interpret mode on CPU); otherwise cluster members run per-node (which
+    XLA fuses into one loop anyway — same semantics, same oracle).
 
     With ``batch`` every graph input (and output) carries a leading batch
-    axis: per-node templates are vmapped over it, and fused linear-time
-    clusters hand the whole batch to the Pallas pipeline kernel directly —
-    its grid already tiles the batch axis, so one kernel launch serves the
-    entire bucket (the serving path of :mod:`repro.serve.classical_engine`).
+    axis: per-node templates are vmapped over it, and fused chains hand the
+    whole batch to the pipeline kernel directly — its grid already tiles the
+    batch axis, so one kernel launch serves the entire bucket (the serving
+    path of :mod:`repro.serve.classical_engine`).
 
-    ``precision="int8"`` runs the DFG in SeeDot-style fixed point (the
-    paper's workload class): float inputs are quantized to int8 at the
+    ``precision="int8"`` / ``"int16"`` runs the DFG in SeeDot-style fixed
+    point (the paper's workload class): float inputs are quantized at the
     ``qplan`` scales on entry, ops with an ``OpSpec.jax_fn_q`` template run
-    int8→int32-accumulate→int8, the rest run dequantize→float→requantize,
-    and float outputs are dequantized back on exit (integer outputs such as
-    argmax pass through).  Requires a :class:`repro.core.quantize.QuantPlan`
-    from :func:`repro.core.quantize.calibrate`.  The interface stays float
-    in / float out, so callers (and the serving engine) are precision-blind.
+    narrow→int32-accumulate→narrow, the rest run dequantize→float→requantize,
+    fused chains execute through the fixed-point pipeline kernel (bitwise
+    identical to per-node eval), and float outputs are dequantized back on
+    exit (integer outputs such as argmax pass through).  Requires a
+    :class:`repro.core.quantize.QuantPlan` from
+    :func:`repro.core.quantize.calibrate`.  The interface stays float in /
+    float out, so callers (and the serving engine) are precision-blind.
     """
-    if precision not in ("float32", "int8"):
-        raise ValueError(f"unknown precision {precision!r}")
-    if precision == "int8" and qplan is None:
-        raise ValueError(
-            "precision='int8' requires a QuantPlan — see repro.core.quantize.calibrate")
-    dfg.validate()
-    topo = dfg.topo_order()
-    fused_clusters = fused_clusters or []
-    cluster_of: dict[str, int] = {}
-    for ci, mem in enumerate(fused_clusters):
-        for nid in mem:
-            cluster_of[nid] = ci
-    if precision == "int8":
+    if plan is None:
+        plan = lower(dfg, fused_clusters=fused_clusters, use_pallas=use_pallas,
+                     precision=precision, qplan=qplan)
+    return _interpret(plan, jit=jit, batch=batch)
+
+
+def _interpret(
+    plan: ExecutionPlan, *, jit: bool = True, batch: bool = False
+) -> Callable[..., dict[str, Any]]:
+    """Thin interpreter over a static plan (per-sample or batched lane)."""
+    quantized = plan.precision != "float32"
+    if quantized:
         from repro.core import quantize as quantize_mod
+    if any(isinstance(s, ChainStep) for s in plan.steps):
+        from repro.kernels.linear_pipeline import (
+            fused_linear_chain,
+            fused_linear_chain_q,
+        )
+    allowed = set(plan.dfg.graph_inputs)
+    bits = plan.bits or 8
 
     def run(**inputs: Any) -> dict[str, Any]:
-        missing = set(dfg.graph_inputs) - set(inputs)
+        unknown = set(inputs) - allowed
+        if unknown:
+            raise TypeError(f"unknown graph inputs: {sorted(unknown)}")
+        missing = allowed - set(inputs)
         if missing:
             raise TypeError(f"missing graph inputs: {sorted(missing)}")
-        if precision == "int8":
+        if quantized:
             env: dict[str, Any] = {
                 k: quantize_mod.quantize_jnp(jnp.asarray(v, jnp.float32),
-                                             qplan.input_exps[k])
+                                             plan.input_exps[k], bits)
                 for k, v in inputs.items()
             }
         else:
             env = {k: jnp.asarray(v) for k, v in inputs.items()}
 
-        def node_fn(nid: str) -> Any:
-            node = dfg.nodes[nid]
-            spec = node_types.get(node.op)
-            if precision != "int8":
-                return lambda *a: spec.jax_fn(list(a), node.params, node.dims)
-            nq = qplan.nodes[nid]
-            if spec.jax_fn_q is not None:
-                return lambda *a: spec.jax_fn_q(list(a), node.params, node.dims, nq)
+        for step in plan.steps:
+            if isinstance(step, NodeStep):
+                args = [env[r] for r in step.inputs]
+                env[step.nid] = (jax.vmap(step.fn)(*args) if batch
+                                 else step.fn(*args))
+            else:  # pre-lowered fused chain: one pipeline kernel launch.
+                x = jnp.asarray(env[step.stream])
+                extras = [jnp.asarray(env[r]) for r in step.extras]
+                if step.quantized:
+                    val = fused_linear_chain_q(
+                        x, step.stages,
+                        [jnp.asarray(v) for v in step.vecs], extras, bits=bits)
+                else:
+                    val = fused_linear_chain(x, step.stages, extras)
+                # intermediates were proven unconsumed at lowering time; only
+                # the terminal is materialized (that is the point of fusion).
+                for nid in step.dead:
+                    env[nid] = None
+                env[step.terminal] = val
 
-            def dequant_requant(*a: Any) -> Any:
-                # no integer template (nonlinearities, reductions): MAFIA's
-                # table-based PEs — fixed-point in, fixed-point out, float math
-                # in the middle.
-                fa = [x if e is None else quantize_mod.dequantize(x, e)
-                      for x, e in zip(a, nq.in_exps)]
-                out = spec.jax_fn(fa, node.params, node.dims)
-                if nq.out_exp is None:       # integer output (argmax)
-                    return out
-                return quantize_mod.quantize_jnp(out, nq.out_exp)
-
-            return dequant_requant
-
-        def eval_node(nid: str) -> None:
-            fn = node_fn(nid)
-            args = [env[src] for src in dfg.nodes[nid].inputs]
-            env[nid] = jax.vmap(fn)(*args) if batch else fn(*args)
-
-        if use_pallas:
-            from repro.kernels import ops as kernel_ops
-
-        # Execute in *atom* order: a fused cluster fires only once all of its
-        # external inputs are available (§IV-G pipeline start condition).
-        done: set[str] = set()
-        order: list[tuple[str, ...]] = []  # atoms as member tuples
-        emitted: set[int] = set()
-        for nid in topo:
-            ci = cluster_of.get(nid)
-            if ci is None:
-                order.append((nid,))
-            elif ci not in emitted:
-                emitted.add(ci)
-                order.append(tuple(fused_clusters[ci]))
-        # atom topo sort (clusters may need inputs topologically after their
-        # first member; sort by readiness)
-        pending = list(order)
-        while pending:
-            for i, atom in enumerate(pending):
-                mem = set(atom)
-                ext = {
-                    src
-                    for nid in atom
-                    for src in dfg.predecessors(nid)
-                    if src not in mem
-                }
-                if ext <= done:
-                    pending.pop(i)
-                    break
-            else:  # cycle through a cluster: split it back into nodes
-                atom = pending.pop(0)
-                pending = [(nid,) for nid in atom if nid not in done] + pending
-                continue
-            if len(atom) > 1 and use_pallas:
-                fused = kernel_ops.try_fuse_linear_cluster(
-                    dfg, list(atom), env, batched=batch)
-                if fused is not None:
-                    env.update(fused)
-                    done.update(atom)
-                    continue
-            for nid in atom:
-                eval_node(nid)
-                done.add(nid)
-        if precision == "int8":
+        if quantized:
             return {
-                out: env[out] if qplan.nodes[out].out_exp is None
-                else quantize_mod.dequantize(env[out], qplan.nodes[out].out_exp)
-                for out in dfg.outputs
+                out: env[out] if plan.output_exps[out] is None
+                else quantize_mod.dequantize(env[out], plan.output_exps[out])
+                for out in plan.outputs
             }
-        return {out: env[out] for out in dfg.outputs}
+        return {out: env[out] for out in plan.outputs}
 
     return jax.jit(run) if jit else run
 
 
 def execute(dfg: DFG, **inputs: Any) -> dict[str, Any]:
-    """One-shot reference execution (no fusion, no jit) — the numeric oracle."""
-    return build_callable(dfg, jit=False)(**inputs)
+    """One-shot reference execution — the *unplanned* numeric oracle: a
+    direct per-node walk with the float templates (no lowering, no fusion,
+    no jit) that plan-based execution is asserted against."""
+    dfg.validate()
+    missing = set(dfg.graph_inputs) - set(inputs)
+    if missing:
+        raise TypeError(f"missing graph inputs: {sorted(missing)}")
+    env: dict[str, Any] = {k: jnp.asarray(v) for k, v in inputs.items()}
+    for nid in dfg.topo_order():
+        node = dfg.nodes[nid]
+        spec = node_types.get(node.op)
+        env[nid] = spec.jax_fn([env[s] for s in node.inputs], node.params,
+                               node.dims)
+    return {out: env[out] for out in dfg.outputs}

@@ -1,0 +1,580 @@
+"""Compile-time lowering pipeline: DFG → passes → static :class:`ExecutionPlan`.
+
+MAFIA's pitch (paper §IV, Fig. 1) is that ML-specific *compile-time* analysis
+— not runtime dispatch — is what beats general HLS.  This module is that
+spine for the executor: a small pass pipeline
+
+    validate → prune (dead-node / identity-fold) → quantize-rewrite →
+    cluster → chain-decompose → plan
+
+runs **once** in :meth:`repro.core.compiler.MafiaCompiler.compile` and emits a
+static :class:`ExecutionPlan` — an ordered list of steps where each step is
+either a :class:`NodeStep` (resolved template fn with pre-bound quantization
+info) or a :class:`ChainStep` (a §IV-G linear-time chain fully pre-lowered to
+a fused-pipeline stage program, including the requantize shifts of the
+fixed-point lane).  :func:`repro.core.executor.build_callable` is then a thin
+interpreter over the plan: no atom re-sorting, no trace-time chain growth,
+no runtime dtype sniffing.
+
+Pass responsibilities:
+
+* **validate** — structural DFG validation (shapes, acyclicity).
+* **prune** — dead-node elimination (nodes unreachable from the outputs are
+  never executed) and identity folding (``scalar_mul`` by exactly 1.0
+  forwards its input; float lanes only, where ``x * 1.0`` is bitwise ``x``).
+  The DFG itself is untouched — scheduling and resource reports still see
+  every node; only the emitted plan shrinks.
+* **quantize-rewrite** — binds each live node to its execution mode:
+  ``float`` (float32 lane), ``q`` (integer template ``OpSpec.jax_fn_q``,
+  int32 accumulate + requantize-on-write) or ``dq`` (dequantize → float
+  template → requantize, MAFIA's table-based PEs).
+* **cluster** — collapses the scheduler's §IV-G pipeline clusters into atoms
+  and fixes the atom execution order (a cluster fires once all external
+  inputs are ready; a cycle *through* a cluster splits it back into nodes —
+  the start condition could never be met).
+* **chain-decompose** — decomposes each fused atom into stage *chains* (one
+  ``pallas_call`` each) plus direct member steps, entirely at compile time.
+  Quantized chains lower to the ``q_*`` stage vocabulary with static
+  requantize shifts, so fixed-point clusters run fused end-to-end instead of
+  declining to per-node eval.
+* **plan** — flattens atoms into the final step list and checks the plan
+  invariants (every live node produced exactly once; chain intermediates are
+  suppressed only when provably unconsumed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core import node_types
+from repro.core.dfg import DFG
+
+__all__ = [
+    "NodeStep", "ChainStep", "ExecutionPlan", "lower", "PASS_NAMES",
+    "STAGEABLE_OPS",
+]
+
+# DFG ops expressible as fused pipeline stages (elementwise, no reduction).
+STAGEABLE_OPS = frozenset(
+    {"scalar_mul", "add", "sub", "hadamard", "tanh", "sigmoid", "relu", "exp"})
+_BIN_ARR = {"add": "add_arr", "sub": "sub_arr", "hadamard": "hadamard_arr"}
+_BIN_VEC = {"add": "add_vec", "sub": "sub_vec", "hadamard": "hadamard_vec"}
+_Q_BIN_ARR = {"add": "q_add_arr", "sub": "q_sub_arr", "hadamard": "q_hadamard_arr"}
+_Q_BIN_VEC = {"add": "q_add_vec", "sub": "q_sub_vec", "hadamard": "q_hadamard_vec"}
+_UNARY_OPS = ("tanh", "sigmoid", "relu", "exp")
+
+PASS_NAMES = ("validate", "prune", "quantize-rewrite", "cluster",
+              "chain-decompose", "plan")
+
+
+# ------------------------------------------------------------------- steps
+@dataclasses.dataclass(frozen=True)
+class NodeStep:
+    """Execute one node through its resolved template function.
+
+    ``fn`` is pre-bound at lowering time: the float template, the integer
+    template with its :class:`~repro.core.quantize.NodeQuant`, or the
+    dequantize→float→requantize wrapper — the interpreter never consults the
+    op registry or the quant plan again.
+    """
+
+    nid: str
+    inputs: tuple[str, ...]          # resolved env refs (post identity-fold)
+    fn: Callable[..., Any]
+    mode: str = "float"              # float | q | dq
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainStep:
+    """Execute a pre-lowered linear-time stage chain in one fused kernel.
+
+    ``stages`` is the static stage program (float vocabulary with embedded
+    vec operands, or the ``q_*`` vocabulary indexing ``vecs``); ``extras``
+    are env refs streamed in as full arrays.  ``dead`` members are published
+    as ``None`` — the lowering proved no step ever reads them (that is the
+    point of fusion); ``terminal`` carries the chain's value.
+    """
+
+    members: tuple[str, ...]
+    stream: str                      # env ref of the streaming input
+    stages: tuple[Any, ...]
+    extras: tuple[str, ...]          # env refs for *_arr stage operands
+    vecs: tuple[Any, ...]            # static vec operands (quantized chains)
+    terminal: str
+    dead: tuple[str, ...]
+    quantized: bool
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Static execution plan: everything the interpreter needs, resolved.
+
+    The plan is per (DFG, fused_clusters, use_pallas, precision) — the
+    per-sample, vmap and map lanes all interpret the same plan, which is what
+    makes them agree (bitwise at fixed point)."""
+
+    dfg: DFG
+    steps: tuple[NodeStep | ChainStep, ...]
+    outputs: tuple[str, ...]
+    precision: str
+    bits: int | None                 # activation width (int lanes), else None
+    qplan: Any | None
+    use_pallas: bool
+    input_exps: dict[str, int] | None     # input quantization (int lanes)
+    output_exps: dict[str, int | None] | None  # None exp = integer passthrough
+    alias: dict[str, str]            # folded node id -> forwarded env ref
+    pruned: tuple[str, ...]          # dead node ids never executed
+    cluster_splits: int              # clusters split by the cycle fallback
+
+    @property
+    def chain_steps(self) -> list[ChainStep]:
+        return [s for s in self.steps if isinstance(s, ChainStep)]
+
+    @property
+    def node_steps(self) -> list[NodeStep]:
+        return [s for s in self.steps if isinstance(s, NodeStep)]
+
+    def summary(self) -> str:
+        ch = self.chain_steps
+        return (f"ExecutionPlan({self.dfg.name!r}: {len(self.node_steps)} node "
+                f"steps, {len(ch)} fused chains "
+                f"({sum(len(c.members) for c in ch)} nodes), "
+                f"{len(self.pruned)} pruned, {len(self.alias)} folded, "
+                f"precision={self.precision})")
+
+    def verify(self) -> None:
+        """Assert the compile-time invariants the old executor re-derived at
+        trace time: complete single-assignment coverage of the live graph,
+        and chain intermediates suppressed only when provably unconsumed."""
+        produced: list[str] = []
+        for step in self.steps:
+            if isinstance(step, NodeStep):
+                produced.append(step.nid)
+            else:
+                produced.extend(step.members)
+        dup = {n for n in produced if produced.count(n) > 1}
+        if dup:
+            raise AssertionError(f"plan produces nodes twice: {sorted(dup)}")
+        live = set(self.dfg.nodes) - set(self.pruned) - set(self.alias)
+        if set(produced) != live:
+            raise AssertionError(
+                f"plan covers {sorted(set(produced))} but live set is {sorted(live)}")
+        # consumers over resolved edges, dead edges excluded
+        consumers: dict[str, set[str]] = {}
+        for nid in live:
+            for src in self.dfg.nodes[nid].inputs:
+                consumers.setdefault(_resolve(self.alias, src), set()).add(nid)
+        for step in self.chain_steps:
+            for i, nid in enumerate(step.dead):
+                nxt = step.members[step.members.index(nid) + 1]
+                outside = consumers.get(nid, set()) - {nxt}
+                if nid in self.outputs or outside:
+                    raise AssertionError(
+                        f"chain suppresses {nid!r} but it is consumed by "
+                        f"{sorted(outside) or 'outputs'}")
+
+
+def _resolve(alias: dict[str, str], ref: str) -> str:
+    while ref in alias:
+        ref = alias[ref]
+    return ref
+
+
+# ---------------------------------------------------------------- lowering
+class _Lowering:
+    """Mutable pass-pipeline state; each pass reads the previous one's
+    fields and fills its own."""
+
+    def __init__(self, dfg: DFG, fused_clusters, use_pallas: bool,
+                 precision: str, qplan) -> None:
+        self.dfg = dfg
+        self.fused_clusters = [list(c) for c in (fused_clusters or [])]
+        self.use_pallas = use_pallas
+        self.precision = precision
+        self.qplan = qplan
+        self.bits: int | None = None
+        self.alias: dict[str, str] = {}
+        self.live: set[str] = set()
+        self.mode: dict[str, str] = {}
+        self.topo: list[str] = []
+        self.succ: dict[str, list[str]] = {}
+        self.atoms: list[tuple[str, ...]] = []
+        self.cluster_splits = 0
+        self.steps: list[NodeStep | ChainStep] = []
+
+    # -------------------------------------------------------------- helpers
+    def ref(self, src: str) -> str:
+        return _resolve(self.alias, src)
+
+    def rinputs(self, nid: str) -> list[str]:
+        return [self.ref(s) for s in self.dfg.nodes[nid].inputs]
+
+    def deps(self, nid: str) -> set[str]:
+        """Live node-dependencies of ``nid`` (graph inputs excluded)."""
+        return {r for r in self.rinputs(nid) if r in self.dfg.nodes}
+
+
+# pass 1 ------------------------------------------------------------------
+def _pass_validate(st: _Lowering) -> None:
+    st.dfg.validate()
+    if st.precision != "float32":
+        from repro.core import quantize as qm
+
+        if st.precision not in qm.PRECISION_BITS:
+            raise ValueError(f"unknown precision {st.precision!r}")
+        if st.qplan is None:
+            raise ValueError(
+                f"precision={st.precision!r} requires a QuantPlan — see "
+                "repro.core.quantize.calibrate")
+        st.bits = getattr(st.qplan, "bits", qm.PRECISION_BITS[st.precision])
+
+
+# pass 2 ------------------------------------------------------------------
+def _pass_prune(st: _Lowering) -> None:
+    dfg = st.dfg
+    if st.precision == "float32":
+        # identity fold: x * 1.0 is bitwise x in float32 — forward the input.
+        # (Fixed-point lanes keep the node: its requantize can change scale.)
+        for nid, node in dfg.nodes.items():
+            if (node.op == "scalar_mul" and nid not in dfg.outputs
+                    and float(node.params["scalar"]) == 1.0):
+                st.alias[nid] = node.inputs[0]
+    live: set[str] = set()
+    stack = [st.ref(o) for o in dfg.outputs]
+    while stack:
+        nid = stack.pop()
+        if nid in live or nid not in dfg.nodes:
+            continue
+        live.add(nid)
+        stack.extend(st.rinputs(nid))
+    st.live = live
+    st.topo = [n for n in dfg.topo_order() if n in live]
+    st.succ = {}
+    for nid in st.topo:
+        for r in st.rinputs(nid):
+            st.succ.setdefault(r, []).append(nid)
+
+
+# pass 3 ------------------------------------------------------------------
+def _pass_quantize_rewrite(st: _Lowering) -> None:
+    if st.precision == "float32":
+        st.mode = {nid: "float" for nid in st.live}
+        return
+    for nid in st.topo:
+        spec = node_types.get(st.dfg.nodes[nid].op)
+        st.mode[nid] = "q" if spec.jax_fn_q is not None else "dq"
+
+
+# pass 4 ------------------------------------------------------------------
+def _pass_cluster(st: _Lowering) -> None:
+    """Fix the atom execution order: a fused cluster fires only once all of
+    its external inputs are available (§IV-G pipeline start condition); a
+    cycle *through* a cluster splits it back into per-node atoms."""
+    clusters: list[list[str]] = []
+    topo_idx = {nid: i for i, nid in enumerate(st.topo)}
+    for mem in st.fused_clusters:
+        mem_live = sorted((n for n in mem if n in st.live),
+                          key=topo_idx.__getitem__)
+        if len(mem_live) >= 2:
+            clusters.append(mem_live)
+    cluster_of: dict[str, int] = {}
+    for ci, mem in enumerate(clusters):
+        for nid in mem:
+            cluster_of[nid] = ci
+    order: list[tuple[str, ...]] = []
+    emitted: set[int] = set()
+    for nid in st.topo:
+        ci = cluster_of.get(nid)
+        if ci is None:
+            order.append((nid,))
+        elif ci not in emitted:
+            emitted.add(ci)
+            order.append(tuple(clusters[ci]))
+    done: set[str] = set()
+    atoms: list[tuple[str, ...]] = []
+    pending = list(order)
+    while pending:
+        for i, atom in enumerate(pending):
+            mem = set(atom)
+            ext = {d for nid in atom for d in st.deps(nid)} - mem
+            if ext <= done:
+                pending.pop(i)
+                break
+        else:  # cycle through a cluster: split it back into nodes
+            atom = pending.pop(0)
+            st.cluster_splits += 1
+            pending = [(nid,) for nid in atom if nid not in done] + pending
+            continue
+        atoms.append(atom)
+        done.update(atom)
+    st.atoms = atoms
+
+
+# pass 5 ------------------------------------------------------------------
+def _node_step(st: _Lowering, nid: str) -> NodeStep:
+    node = st.dfg.nodes[nid]
+    spec = node_types.get(node.op)
+    mode = st.mode[nid]
+    if mode == "float":
+        fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
+    elif mode == "q":
+        nq = st.qplan.nodes[nid]
+        fn = lambda *a: spec.jax_fn_q(list(a), node.params, node.dims, nq)
+    else:  # dq: no integer template (nonlinearities, reductions) — MAFIA's
+        # table-based PEs: fixed-point in, fixed-point out, float in between.
+        from repro.core import quantize as qm
+
+        nq = st.qplan.nodes[nid]
+        bits = st.bits or 8
+
+        def fn(*a: Any) -> Any:
+            fa = [x if e is None else qm.dequantize(x, e)
+                  for x, e in zip(a, nq.in_exps)]
+            out = spec.jax_fn(fa, node.params, node.dims)
+            if nq.out_exp is None:          # integer output (argmax)
+                return out
+            return qm.quantize_jnp(out, nq.out_exp, bits)
+
+    return NodeStep(nid=nid, inputs=tuple(st.rinputs(nid)), fn=fn, mode=mode)
+
+
+def _needed_outside(st: _Lowering, nid: str, chain_next: str | None) -> bool:
+    """True if ``nid``'s value is consumed anywhere other than ``chain_next``
+    (dead consumers were pruned; outputs always count)."""
+    if nid in st.dfg.outputs:
+        return True
+    return any(s != chain_next for s in st.succ.get(nid, []))
+
+
+def _lower_stage_float(st: _Lowering, nid: str, prev: str | None,
+                       stream_src: str | None, extras: list[str]):
+    """Lower one float chain node → (stage, stream_src) or None to bail."""
+    import jax.numpy as jnp
+
+    nd = st.dfg.nodes[nid]
+    if nd.op == "scalar_mul":
+        return ("scalar_mul", float(nd.params["scalar"])), stream_src
+    if nd.op in _UNARY_OPS:
+        return (nd.op, None), stream_src
+    if nd.op in _BIN_VEC and "vec" in nd.params:
+        return (_BIN_VEC[nd.op], jnp.asarray(nd.params["vec"])), stream_src
+    if nd.op in _BIN_ARR and len(nd.inputs) == 2:
+        rin = st.rinputs(nid)
+        stream_in = prev if prev in rin else rin[0]
+        other = [i for i in rin if i != stream_in]
+        if len(other) != 1:
+            return None
+        # sub is not commutative: stream must be the left operand
+        if nd.op == "sub" and stream_in != rin[0]:
+            return None
+        if prev is None:
+            stream_src = stream_in
+        extras.append(other[0])
+        return (_BIN_ARR[nd.op], len(extras) - 1), stream_src
+    return None
+
+
+def _lower_stage_q(st: _Lowering, nid: str, prev: str | None,
+                   stream_src: str | None, extras: list[str],
+                   vecs: list[Any]):
+    """Lower one fixed-point chain node → (q_stage, stream_src) or None.
+
+    Every shift is computed from the calibrated exponents exactly as the
+    per-node integer templates compute it, so the fused chain is bitwise
+    identical to per-node eval."""
+    from repro.core.quantize import align_cap
+
+    cap = align_cap(st.bits or 8)
+    nd = st.dfg.nodes[nid]
+    nq = st.qplan.nodes[nid]
+    out_e = nq.out_exp
+    if out_e is None:
+        return None
+    if nd.op == "scalar_mul":
+        if nq.in_exps[0] is None or "scalar" not in nq.params_q:
+            return None
+        rq = nq.in_exps[0] + nq.param_exps["scalar"] - out_e
+        return ("q_scalar_mul", (int(nq.params_q["scalar"]), rq)), stream_src
+    if nd.op in _UNARY_OPS:
+        if nq.in_exps[0] is None:
+            return None
+        return ("q_unary", (nd.op, nq.in_exps[0], out_e)), stream_src
+    if nd.op in _Q_BIN_VEC and "vec" in nd.params:
+        e_a, e_b = nq.in_exps[0], nq.param_exps["vec"]
+        if e_a is None:
+            return None
+        vecs.append(nq.params_q["vec"])
+        vi = len(vecs) - 1
+        if nd.op == "hadamard":
+            return ("q_hadamard_vec", (vi, e_a + e_b - out_e)), stream_src
+        e_c = min(max(e_a, e_b), min(e_a, e_b) + cap)
+        return (_Q_BIN_VEC[nd.op],
+                (vi, e_c - e_a, e_c - e_b, e_c - out_e)), stream_src
+    if nd.op in _Q_BIN_ARR and len(nd.inputs) == 2:
+        rin = st.rinputs(nid)
+        stream_in = prev if prev in rin else rin[0]
+        other = [i for i in rin if i != stream_in]
+        if len(other) != 1:
+            return None
+        if nd.op == "sub" and stream_in != rin[0]:
+            return None
+        pos_s, pos_o = rin.index(stream_in), rin.index(other[0])
+        e_s, e_o = nq.in_exps[pos_s], nq.in_exps[pos_o]
+        if e_s is None or e_o is None:
+            return None
+        if prev is None:
+            stream_src = stream_in
+        extras.append(other[0])
+        ai = len(extras) - 1
+        if nd.op == "hadamard":
+            return ("q_hadamard_arr", (ai, e_s + e_o - out_e)), stream_src
+        e_c = min(max(e_s, e_o), min(e_s, e_o) + cap)
+        return (_Q_BIN_ARR[nd.op],
+                (ai, e_c - e_s, e_c - e_o, e_c - out_e)), stream_src
+    return None
+
+
+def _decompose_atom(st: _Lowering, atom: tuple[str, ...]) -> list[NodeStep | ChainStep]:
+    """Compile-time twin of the old trace-time ``try_fuse_linear_cluster``:
+    decompose a fused cluster into stage chains (one kernel launch each) plus
+    direct steps for reduction-flavoured members, in data-ready order."""
+    mset = set(atom)
+    topo_idx = {nid: i for i, nid in enumerate(st.topo)}
+    topo = sorted(atom, key=topo_idx.__getitem__)
+    quantized = st.precision != "float32"
+    if not any(st.dfg.nodes[n].op in STAGEABLE_OPS for n in topo):
+        return [_node_step(st, nid) for nid in topo]
+
+    steps: list[NodeStep | ChainStep] = []
+    produced: set[str] = set()
+
+    def ready(nid: str) -> bool:
+        return all((p not in mset) or (p in produced) for p in st.deps(nid))
+
+    pending = list(topo)
+    while pending:
+        head = next(n for n in pending if ready(n))
+        pending.remove(n := head)
+        node = st.dfg.nodes[n]
+        if node.op not in STAGEABLE_OPS:
+            steps.append(_node_step(st, n))
+            produced.add(n)
+            continue
+
+        # ---- grow a chain starting at `n` (static: only order matters)
+        chain = [n]
+        while True:
+            tail = chain[-1]
+            nxts = [
+                s
+                for s in st.succ.get(tail, [])
+                if s in mset
+                and s in pending
+                and st.dfg.nodes[s].op in STAGEABLE_OPS
+                and all(
+                    p == tail or (p not in mset) or (p in produced)
+                    for p in st.rinputs(s)
+                )
+            ]
+            if len(set(nxts)) != 1:
+                break
+            nxt = nxts[0]
+            # the tail's value must not be needed anywhere except `nxt`
+            if _needed_outside(st, tail, chain_next=nxt):
+                break
+            chain.append(nxt)
+            pending.remove(nxt)
+
+        # ---- lower the chain to a static stage program
+        first = st.dfg.nodes[chain[0]]
+        stream_src = st.rinputs(chain[0])[0] if first.inputs else None
+        stages: list[Any] = []
+        extras: list[str] = []
+        vecs: list[Any] = []
+        ok = True
+        prev: str | None = None
+        for nid in chain:
+            lowered = (
+                _lower_stage_q(st, nid, prev, stream_src, extras, vecs)
+                if quantized else
+                _lower_stage_float(st, nid, prev, stream_src, extras))
+            if lowered is None:
+                ok = False
+                break
+            stage, stream_src = lowered
+            stages.append(stage)
+            prev = nid
+        if not ok or stream_src is None or len(chain) < 1:
+            # bail out: evaluate the whole chain node-by-node
+            for nid in chain:
+                steps.append(_node_step(st, nid))
+                produced.add(nid)
+            continue
+        dead = tuple(chain[:-1])
+        for i, nid in enumerate(dead):
+            # provably never read: growth only extended past `nid` after
+            # checking its sole consumer is the next chain element.
+            assert not _needed_outside(st, nid, chain_next=chain[i + 1])
+        steps.append(ChainStep(
+            members=tuple(chain), stream=stream_src, stages=tuple(stages),
+            extras=tuple(extras), vecs=tuple(vecs), terminal=chain[-1],
+            dead=dead, quantized=quantized))
+        produced.update(chain)
+    return steps
+
+
+def _pass_chain_decompose(st: _Lowering) -> None:
+    for atom in st.atoms:
+        if len(atom) > 1 and st.use_pallas:
+            st.steps.extend(_decompose_atom(st, atom))
+        else:
+            st.steps.extend(_node_step(st, nid) for nid in atom)
+
+
+# pass 6 ------------------------------------------------------------------
+def _pass_plan(st: _Lowering) -> ExecutionPlan:
+    input_exps = output_exps = None
+    if st.precision != "float32":
+        input_exps = dict(st.qplan.input_exps)
+        output_exps = {o: st.qplan.nodes[o].out_exp for o in st.dfg.outputs}
+    plan = ExecutionPlan(
+        dfg=st.dfg,
+        steps=tuple(st.steps),
+        outputs=tuple(st.dfg.outputs),
+        precision=st.precision,
+        bits=st.bits,
+        qplan=st.qplan,
+        use_pallas=st.use_pallas,
+        input_exps=input_exps,
+        output_exps=output_exps,
+        alias=dict(st.alias),
+        pruned=tuple(sorted(set(st.dfg.nodes) - st.live - set(st.alias))),
+        cluster_splits=st.cluster_splits,
+    )
+    plan.verify()
+    return plan
+
+
+# ------------------------------------------------------------------- entry
+def lower(
+    dfg: DFG,
+    *,
+    fused_clusters: list[list[str]] | None = None,
+    use_pallas: bool = False,
+    precision: str = "float32",
+    qplan: Any | None = None,
+) -> ExecutionPlan:
+    """Run the pass pipeline once and return the static execution plan."""
+    if precision != "float32":
+        from repro.core import quantize as qm
+
+        if precision not in qm.PRECISION_BITS:
+            raise ValueError(f"unknown precision {precision!r}")
+    st = _Lowering(dfg, fused_clusters, use_pallas, precision, qplan)
+    _pass_validate(st)
+    _pass_prune(st)
+    _pass_quantize_rewrite(st)
+    _pass_cluster(st)
+    _pass_chain_decompose(st)
+    return _pass_plan(st)

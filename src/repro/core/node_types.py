@@ -123,11 +123,11 @@ def _jnp():
     return jnp
 
 
-# ------------------------------------------------------- int8 template variants
-def _requantize(acc, shift: int):
+# -------------------------------------------------- integer template variants
+def _requantize(acc, shift: int, bits: int = 8):
     from repro.core.quantize import requantize_i32
 
-    return requantize_i32(acc, shift)
+    return requantize_i32(acc, shift, bits)
 
 
 def _q_align(x, e: int, e_c: int):
@@ -150,12 +150,15 @@ def _q_elementwise(kind: str) -> Callable:
             b = jnp.asarray(inputs[1], jnp.int32)
             e_b = nq.in_exps[1]
         if kind == "hadamard":
-            return _requantize(a * b, e_a + e_b - nq.out_exp)
+            return _requantize(a * b, e_a + e_b - nq.out_exp, nq.bits)
         # align addends to the finer scale before combining; cap the shift —
-        # past it the finer operand is below the coarser one's resolution.
-        e_c = min(max(e_a, e_b), min(e_a, e_b) + 20)
+        # past it the finer operand is below the coarser one's resolution
+        # (and the shifted coarser value would leave the int32 carrier).
+        from repro.core.quantize import align_cap
+
+        e_c = min(max(e_a, e_b), min(e_a, e_b) + align_cap(nq.bits))
         acc = _q_align(a, e_a, e_c) + (1 if kind == "add" else -1) * _q_align(b, e_b, e_c)
-        return _requantize(acc, e_c - nq.out_exp)
+        return _requantize(acc, e_c - nq.out_exp, nq.bits)
 
     return jax_fn_q
 
@@ -163,22 +166,24 @@ def _q_elementwise(kind: str) -> Callable:
 def _q_scalar_mul(inputs, params, dims, nq):
     jnp = _jnp()
     acc = jnp.asarray(inputs[0], jnp.int32) * int(nq.params_q["scalar"])
-    return _requantize(acc, nq.in_exps[0] + nq.param_exps["scalar"] - nq.out_exp)
+    return _requantize(acc, nq.in_exps[0] + nq.param_exps["scalar"] - nq.out_exp,
+                       nq.bits)
 
 
 def _q_matvec(inputs, params, dims, nq):
-    """int8 gemv/spmv: int8×int8 MACs accumulated in int32 (the widened
+    """Integer gemv/spmv: narrow×narrow MACs accumulated in int32 (the widened
     accumulator of the fixed-point MAC PE), one requantize per output row."""
     jnp = _jnp()
     Wq = jnp.asarray(nq.params_q["matrix"], jnp.int32)
     acc = Wq @ jnp.asarray(inputs[0], jnp.int32).ravel()
-    return _requantize(acc, nq.param_exps["matrix"] + nq.in_exps[0] - nq.out_exp)
+    return _requantize(acc, nq.param_exps["matrix"] + nq.in_exps[0] - nq.out_exp,
+                       nq.bits)
 
 
 def _q_matmul(inputs, params, dims, nq):
     jnp = _jnp()
     acc = jnp.asarray(inputs[0], jnp.int32) @ jnp.asarray(inputs[1], jnp.int32)
-    return _requantize(acc, nq.in_exps[0] + nq.in_exps[1] - nq.out_exp)
+    return _requantize(acc, nq.in_exps[0] + nq.in_exps[1] - nq.out_exp, nq.bits)
 
 
 # ----------------------------------------------------------------- elementwise family

@@ -1,26 +1,30 @@
-"""Fixed-point (int8) quantization pass — the workload class MAFIA targets.
+"""Fixed-point quantization pass — the workload class MAFIA targets.
 
 MAFIA compiles *SeeDot-lineage* programs: ML inference expressed entirely in
 low-bitwidth integer arithmetic so it fits milliwatt FPGAs (paper §II, §V-A).
 This pass retrofits that onto the float32 DFG pipeline: given a built DFG and
 a calibration set, it infers one *power-of-two* scale per tensor (SeeDot's
-fixed-point representation: ``value ≈ q · 2^-exp`` with ``q`` an int8), and
-quantizes every static parameter the int8 templates consume.
+fixed-point representation: ``value ≈ q · 2^-exp`` with ``q`` an int8 or
+int16 — both widths SeeDot emits, selected by the ``bits`` knob), and
+quantizes every static parameter the integer templates consume.
 
-Scales are per-tensor and symmetric (zero-point 0, range ±127), so every
-rescale between fixed-point formats is a plain arithmetic shift — exactly the
-hardware SeeDot emits (no integer division, no per-channel multipliers).
-Calibration picks, for each tensor, the largest exponent whose range still
-covers the tensor's observed max-abs: maximal precision without (calibration)
-overflow; unseen inputs beyond that range saturate, the standard fixed-point
-behaviour.
+Scales are per-tensor and symmetric (zero-point 0, range ±(2^(bits-1)-1)), so
+every rescale between fixed-point formats is a plain arithmetic shift —
+exactly the hardware SeeDot emits (no integer division, no per-channel
+multipliers).  Calibration picks, for each tensor, the largest exponent whose
+range still covers the tensor's observed max-abs: maximal precision without
+(calibration) overflow; unseen inputs beyond that range saturate, the
+standard fixed-point behaviour.
 
-The executor consumes the plan (:func:`repro.core.executor.build_callable`
-with ``precision="int8"``): ops with an int8 template variant
-(``OpSpec.jax_fn_q``) run int8-in/int8-out with int32 accumulation and a
+The lowering pipeline consumes the plan (:mod:`repro.core.lowering` with
+``precision="int8"`` / ``"int16"``): ops with an integer template variant
+(``OpSpec.jax_fn_q``) run narrow-in/narrow-out with int32 accumulation and a
 requantize-on-write; everything else (nonlinearities, reductions) runs
 dequantize → float template → requantize, mirroring MAFIA's table-based
-nonlinear PEs that take fixed-point in and produce fixed-point out.
+nonlinear PEs that take fixed-point in and produce fixed-point out.  The
+``*_core`` helpers keep the int32 carrier so fused pipeline stages
+(:mod:`repro.kernels.linear_pipeline`) can chain requantizations in-register
+and still match the per-node path bit for bit.
 """
 
 from __future__ import annotations
@@ -35,15 +39,37 @@ from repro.core import node_types
 from repro.core.dfg import DFG
 
 __all__ = [
-    "Q_MAX", "NodeQuant", "QuantPlan", "pow2_exp", "quantize_np",
-    "quantize_jnp", "dequantize", "requantize_i32", "calibration_inputs",
-    "calibrate",
+    "Q_MAX", "PRECISION_BITS", "NodeQuant", "QuantPlan", "q_max", "int_dtype",
+    "pow2_exp", "quantize_np", "quantize_jnp", "quantize_core", "dequantize",
+    "requantize_i32", "requantize_core", "calibration_inputs", "calibrate",
 ]
 
 Q_MAX = 127          # symmetric int8 range ±127 (avoids the -128 asymmetry)
 _EXP_CLAMP = 21      # |exp| bound: keeps every requantize shift int32-safe
 _MAX_RSHIFT = 24     # beyond this a right shift of any int32 acc is ~0 anyway
-_MAX_LSHIFT = 8      # beyond this any nonzero acc saturates ±127 anyway
+
+# Activation widths the compiler accepts (SeeDot emits both); accumulation is
+# int32 at either width.
+PRECISION_BITS = {"int8": 8, "int16": 16}
+
+
+def q_max(bits: int = 8) -> int:
+    """Symmetric saturation bound at ``bits``: ±(2^(bits-1) − 1)."""
+    return (1 << (bits - 1)) - 1
+
+
+def align_cap(bits: int = 8) -> int:
+    """Max left-shift when aligning two addends to a common scale: past the
+    activation's own resolution the finer operand contributes nothing, and
+    the shifted value must stay inside the int32 carrier (a ``bits``-wide
+    value shifted by ``30 − bits`` peaks at ~2^29; the sum of two fits)."""
+    return min(20, 30 - bits)
+
+
+def int_dtype(bits: int = 8) -> str:
+    if bits not in (8, 16):
+        raise ValueError(f"unsupported activation width {bits}")
+    return f"int{bits}"
 
 
 def _jnp():
@@ -53,25 +79,35 @@ def _jnp():
 
 
 # ------------------------------------------------------------------ helpers
-def pow2_exp(max_abs: float) -> int:
-    """Largest exponent ``e`` with ``max_abs · 2^e ≤ Q_MAX`` (clamped)."""
+def pow2_exp(max_abs: float, bits: int = 8) -> int:
+    """Largest exponent ``e`` with ``max_abs · 2^e ≤ q_max(bits)`` (clamped)."""
     if not math.isfinite(max_abs) or max_abs <= 0.0:
         return 0
-    e = int(math.floor(math.log2(Q_MAX / max_abs)))
+    e = int(math.floor(math.log2(q_max(bits) / max_abs)))
     return max(-_EXP_CLAMP, min(_EXP_CLAMP, e))
 
 
-def quantize_np(x: np.ndarray, exp: int) -> np.ndarray:
-    """Host-side quantization of static parameters to int8 at ``2^-exp``."""
+def quantize_np(x: np.ndarray, exp: int, bits: int = 8) -> np.ndarray:
+    """Host-side quantization of static parameters at ``2^-exp``."""
     q = np.round(np.asarray(x, np.float64) * float(2.0**exp))
-    return np.clip(q, -Q_MAX, Q_MAX).astype(np.int8)
+    qm = q_max(bits)
+    return np.clip(q, -qm, qm).astype(int_dtype(bits))
 
 
-def quantize_jnp(x: Any, exp: int) -> Any:
-    """Traceable float → int8 quantization (graph inputs, requant-on-write)."""
+def quantize_core(x: Any, exp: int, bits: int = 8) -> Any:
+    """Traceable float → fixed-point quantization keeping the int32 carrier
+    (the in-register form fused pipeline stages chain on)."""
     jnp = _jnp()
     q = jnp.round(jnp.asarray(x, jnp.float32) * (2.0**exp))
-    return jnp.clip(q, -Q_MAX, Q_MAX).astype(jnp.int8)
+    qm = q_max(bits)
+    return jnp.clip(q, -qm, qm).astype(jnp.int32)
+
+
+def quantize_jnp(x: Any, exp: int, bits: int = 8) -> Any:
+    """Traceable float → narrow-int quantization (graph inputs,
+    requant-on-write)."""
+    jnp = _jnp()
+    return quantize_core(x, exp, bits).astype(int_dtype(bits))
 
 
 def dequantize(q: Any, exp: int) -> Any:
@@ -79,10 +115,12 @@ def dequantize(q: Any, exp: int) -> Any:
     return jnp.asarray(q, jnp.float32) * (2.0 ** (-exp))
 
 
-def requantize_i32(acc: Any, shift: int) -> Any:
-    """int32 accumulator → int8 at the output scale: rounding arithmetic
-    shift + saturate, the write-back step of every int8 template.  ``shift``
-    is static per node (scales are compile-time), so this jits to two ops."""
+def requantize_core(acc: Any, shift: int, bits: int = 8) -> Any:
+    """int32 accumulator → saturated value at the output scale, *kept int32*:
+    rounding arithmetic shift + clamp to ±q_max.  ``shift`` is static per node
+    (scales are compile-time), so this jits to two ops.  Fused pipeline
+    stages use this directly so the in-kernel stream matches the per-node
+    narrow-int values bit for bit."""
     jnp = _jnp()
     acc = jnp.asarray(acc, jnp.int32)
     if shift > 0:
@@ -90,9 +128,18 @@ def requantize_i32(acc: Any, shift: int) -> Any:
         acc = (acc + (1 << (s - 1))) >> s
     elif shift < 0:
         # output scale finer than the accumulator's: any |acc| ≥ 1 saturates
-        # once the shift exceeds _MAX_LSHIFT, so the clamp loses nothing.
-        acc = jnp.clip(acc, -(1 << 20), 1 << 20) << min(-shift, _MAX_LSHIFT)
-    return jnp.clip(acc, -Q_MAX, Q_MAX).astype(jnp.int8)
+        # once the shift reaches the activation width, so the clamp (sized to
+        # keep the shifted value inside int32) loses nothing.
+        lsh = min(-shift, bits)
+        acc = jnp.clip(acc, -(1 << (30 - lsh)), 1 << (30 - lsh)) << lsh
+    qm = q_max(bits)
+    return jnp.clip(acc, -qm, qm)
+
+
+def requantize_i32(acc: Any, shift: int, bits: int = 8) -> Any:
+    """:func:`requantize_core` narrowed to the activation dtype — the
+    write-back step of every integer template."""
+    return requantize_core(acc, shift, bits).astype(int_dtype(bits))
 
 
 # --------------------------------------------------------------------- plan
@@ -100,21 +147,24 @@ def requantize_i32(acc: Any, shift: int) -> Any:
 class NodeQuant:
     """Per-node fixed-point formats: one exponent per input (positionally
     matching ``node.inputs``; None = non-quantized value such as an integer
-    index), the output exponent (None = integer output, e.g. argmax), and
-    the int8-quantized static parameters with their exponents."""
+    index), the output exponent (None = integer output, e.g. argmax), the
+    quantized static parameters with their exponents, and the activation
+    width they were quantized at."""
 
     in_exps: tuple[int | None, ...]
     out_exp: int | None
     params_q: dict[str, Any]
     param_exps: dict[str, int]
+    bits: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantPlan:
-    """Everything the executor needs to run a DFG in int8."""
+    """Everything the lowering pipeline needs to run a DFG in fixed point."""
 
     input_exps: dict[str, int]
     nodes: dict[str, NodeQuant]
+    bits: int = 8
 
 
 def calibration_inputs(dfg: DFG, n: int = 64, seed: int = 0) -> dict[str, np.ndarray]:
@@ -135,18 +185,21 @@ def calibrate(
     *,
     n_samples: int = 64,
     seed: int = 0,
+    bits: int = 8,
 ) -> QuantPlan:
     """Walk the DFG over a calibration batch and infer per-tensor scales.
 
     ``calib`` is a dict of graph-input name → ``(N, *shape)`` batch, a bare
     batch array when the DFG has a single input (the classical benchmarks),
     or None to fall back to :func:`calibration_inputs`.  The walk runs the
-    *float* templates — calibration observes the real value ranges the int8
-    program must cover.
+    *float* templates — calibration observes the real value ranges the
+    fixed-point program must cover.  ``bits`` selects the activation width
+    (8 or 16; accumulation stays int32 either way).
     """
     import jax
     import jax.numpy as jnp
 
+    int_dtype(bits)  # validates the width
     if calib is None:
         calib = calibration_inputs(dfg, n=n_samples, seed=seed)
     if not isinstance(calib, Mapping):
@@ -180,7 +233,34 @@ def calibrate(
         if jnp.issubdtype(out.dtype, jnp.floating):
             maxabs[nid] = float(jnp.max(jnp.abs(out)))
 
-    exps = {name: pow2_exp(v) for name, v in maxabs.items()}
+    exps = {name: pow2_exp(v, bits) for name, v in maxabs.items()}
+    # Overflow guard for dynamic-operand reductions (matmul has no static
+    # "matrix" param the per-param cap below can bite on): bound the int32
+    # MAC accumulator by the observed |a|@|b| on the calibration batch and
+    # lower the operand exponents until the bound fits in 2^29.  Exponents
+    # are per-tensor, so this conservatively coarsens every consumer of the
+    # capped operand — correctness over the last fraction of a bit.
+    for node in dfg.nodes.values():
+        if node.op != "matmul":
+            continue
+        a_ref, b_ref = node.inputs
+        e_a, e_b = exps.get(a_ref), exps.get(b_ref)
+        if e_a is None or e_b is None:
+            continue
+        av = np.abs(np.asarray(env[a_ref], np.float64))
+        bv = np.abs(np.asarray(env[b_ref], np.float64))
+        b1 = float((av @ bv).max())
+        if b1 <= 0.0:
+            continue
+        excess = (e_a + e_b) - (29 - math.ceil(math.log2(b1)))
+        while excess > 0 and (e_a > -_EXP_CLAMP or e_b > -_EXP_CLAMP):
+            if e_a >= e_b and e_a > -_EXP_CLAMP:
+                e_a -= 1
+            else:
+                e_b -= 1
+            excess -= 1
+        exps[a_ref], exps[b_ref] = e_a, e_b
+    qm = q_max(bits)
     nodes: dict[str, NodeQuant] = {}
     for nid, node in dfg.nodes.items():
         spec = node_types.get(node.op)
@@ -189,22 +269,42 @@ def calibrate(
         if spec.jax_fn_q is not None:
             if "scalar" in node.params:
                 s = float(node.params["scalar"])
-                e = pow2_exp(abs(s))
-                params_q["scalar"] = int(np.clip(round(s * 2.0**e), -Q_MAX, Q_MAX))
+                e = pow2_exp(abs(s), bits)
+                params_q["scalar"] = int(np.clip(round(s * 2.0**e), -qm, qm))
                 param_exps["scalar"] = e
             for pname in ("matrix", "vec"):
                 if pname in node.params:
                     arr = np.asarray(node.params[pname])
-                    e = pow2_exp(float(np.max(np.abs(arr))) if arr.size else 0.0)
-                    params_q[pname] = quantize_np(arr, e)
+                    e = pow2_exp(float(np.max(np.abs(arr))) if arr.size else 0.0,
+                                 bits)
+                    if pname == "matrix" and node.inputs:
+                        # overflow-aware scale capping (SeeDot's static
+                        # accumulator analysis): the int32 MAC accumulator
+                        # holds partial sums bounded by Σ_j |W_ij·x_j|; cap
+                        # the weight exponent so that bound — observed on
+                        # the calibration batch — stays ≤ 2^29 at the
+                        # quantized scales.  Never binds at int8; protects
+                        # the int16 lane's wide reductions.
+                        e_in = exps.get(node.inputs[0])
+                        if e_in is not None:
+                            xb = np.abs(np.asarray(env[node.inputs[0]],
+                                                   np.float64))
+                            xb = xb.reshape(xb.shape[0], -1)
+                            b1 = float((xb @ np.abs(arr).T).max())
+                            if b1 > 0.0:
+                                e = min(e, 29 - e_in - math.ceil(math.log2(b1)))
+                                e = max(e, -_EXP_CLAMP)
+                    params_q[pname] = quantize_np(arr, e, bits)
                     param_exps[pname] = e
         nodes[nid] = NodeQuant(
             in_exps=tuple(exps.get(s) for s in node.inputs),
             out_exp=exps.get(nid),
             params_q=params_q,
             param_exps=param_exps,
+            bits=bits,
         )
     return QuantPlan(
         input_exps={name: exps[name] for name in dfg.graph_inputs},
         nodes=nodes,
+        bits=bits,
     )

@@ -7,10 +7,19 @@ kernel executes the whole cluster in a single ``pallas_call``: each (bb × bn)
 tile is loaded once, every stage is applied in VMEM/VREGs, and the result is
 stored once — N elementwise ops for the memory traffic of one.
 
-The stage micro-program is specialized at trace time (stages are static
-Python), so the kernel body is straight-line code, exactly like MAFIA's
-generated Verilog pipeline.  Stage vocabulary matches
-:func:`repro.kernels.ref.apply_stage`.
+The stage micro-program is specialized at compile time by the lowering
+pipeline (:mod:`repro.core.lowering`'s chain-decompose pass emits static
+stage tuples), so the kernel body is straight-line code, exactly like
+MAFIA's generated Verilog pipeline.  Two variants share the tiling logic:
+
+* :func:`fused_linear_chain` — float stages
+  (:func:`repro.kernels.ref.apply_stage` vocabulary);
+* :func:`fused_linear_chain_q` — the fixed-point twin the paper's
+  SeeDot-lineage programs actually need: the stream rides an int32 carrier
+  in registers, every stage ends in a static requantizing shift
+  (:func:`repro.kernels.ref.apply_stage_q` vocabulary), and the single
+  write-back saturates to the activation dtype — bitwise identical to
+  per-node integer eval, at one HBM round-trip per chain.
 """
 
 from __future__ import annotations
@@ -22,9 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import Stage
+from repro.kernels.ref import Stage, apply_stage_q
 
-__all__ = ["fused_linear_chain"]
+__all__ = ["fused_linear_chain", "fused_linear_chain_q"]
 
 DEFAULT_BB = 256   # batch tile
 DEFAULT_BN = 512   # feature tile (VPU lane-friendly multiple of 128)
@@ -39,6 +48,51 @@ _UNARY = {
     "relu": lambda x: jnp.maximum(x, jnp.zeros((), x.dtype)),
     "exp": jnp.exp,
 }
+
+
+def _tiled_chain_call(
+    x: jax.Array,
+    vecs: Sequence[jax.Array],
+    arrs: Sequence[jax.Array],
+    kernel,
+    *,
+    bb: int,
+    bn: int,
+    interpret: bool | None,
+) -> jax.Array:
+    """Shared scaffolding of both chain kernels: flatten leading axes onto
+    the batch grid axis, round tiles, pad, launch, crop.  ``vecs`` are
+    (n,)-broadcast operands, ``arrs`` are full arrays shaped like ``x``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    x = jnp.asarray(x)
+    orig_shape = x.shape
+    x = x.reshape(-1, orig_shape[-1]) if x.ndim != 2 else x
+    arrs = [jnp.asarray(a).reshape(x.shape) for a in arrs]
+    vecs = [jnp.asarray(v).reshape(1, -1) for v in vecs]
+    B, n = x.shape
+    bb = min(bb, max(8, 1 << (B - 1).bit_length()))
+    bn = min(bn, max(128, 1 << (n - 1).bit_length()))
+
+    pad_b, pad_n = (-B) % bb, (-n) % bn
+    xp = jnp.pad(x, ((0, pad_b), (0, pad_n)))
+    vecs = [jnp.pad(v, ((0, 0), (0, pad_n))) for v in vecs]
+    arrs = [jnp.pad(a, ((0, pad_b), (0, pad_n))) for a in arrs]
+    grid = (xp.shape[0] // bb, xp.shape[1] // bn)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            *[pl.BlockSpec((1, bn), lambda i, j: (0, j)) for _ in vecs],
+            *[pl.BlockSpec((bb, bn), lambda i, j: (i, j)) for _ in arrs],
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, *vecs, *arrs)
+    return out[:B, :n].reshape(orig_shape)
 
 
 def _chain_kernel(*refs, stages: Sequence[Stage], n_vec: int, n_arr: int):
@@ -84,41 +138,62 @@ def fused_linear_chain(
     by (n,) arrays collected in order; ``*_arr`` operands index into
     ``extras`` (each shaped like ``x``).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    x = jnp.asarray(x)
-    orig_shape = x.shape
-    x = x.reshape(-1, orig_shape[-1]) if x.ndim != 2 else x
-    extras = [jnp.asarray(e).reshape(x.shape) for e in extras]
-    B, n = x.shape
-    bb = min(bb, max(8, 1 << (B - 1).bit_length()))
-    bn = min(bn, max(128, 1 << (n - 1).bit_length()))
-
-    vecs = [jnp.asarray(op[1]).reshape(1, -1) for op in stages if op[0] in _VEC_OPS]
+    vecs = [jnp.asarray(op[1]) for op in stages if op[0] in _VEC_OPS]
     # rewrite vec stages to positional form so the kernel closure is static
-    norm_stages: list[Stage] = []
-    for op, operand in stages:
-        norm_stages.append((op, None if op in _VEC_OPS else operand))
+    norm_stages = tuple(
+        (op, None if op in _VEC_OPS else operand) for op, operand in stages)
     arrs = [extras[op[1]] for op in stages if op[0] in _ARR_OPS]
+    kernel = functools.partial(
+        _chain_kernel, stages=norm_stages, n_vec=len(vecs), n_arr=len(arrs))
+    return _tiled_chain_call(x, vecs, arrs, kernel, bb=bb, bn=bn,
+                             interpret=interpret)
 
-    pad_b, pad_n = (-B) % bb, (-n) % bn
-    xp = jnp.pad(x, ((0, pad_b), (0, pad_n)))
-    vecs = [jnp.pad(v, ((0, 0), (0, pad_n))) for v in vecs]
-    arrs = [jnp.pad(a, ((0, pad_b), (0, pad_n))) for a in arrs]
-    grid = (xp.shape[0] // bb, xp.shape[1] // bn)
 
-    out = pl.pallas_call(
-        functools.partial(
-            _chain_kernel, stages=tuple(norm_stages), n_vec=len(vecs), n_arr=len(arrs)
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
-            *[pl.BlockSpec((1, bn), lambda i, j: (0, j)) for _ in vecs],
-            *[pl.BlockSpec((bb, bn), lambda i, j: (i, j)) for _ in arrs],
-        ],
-        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
-        interpret=interpret,
-    )(xp, *vecs, *arrs)
-    return out[:B, :n].reshape(orig_shape)
+# ------------------------------------------------------- quantized pipeline
+def _chain_kernel_q(*refs, stages: Sequence[Stage], n_vec: int, n_arr: int,
+                    bits: int):
+    """Fixed-point pipeline body: widen the tile to the int32 carrier once,
+    run every stage in-register (each ends in a static requantizing shift),
+    saturate to the activation dtype on the single write — the integer twin
+    of :func:`_chain_kernel`, matching per-node quantized eval bit for bit."""
+    x_ref = refs[0]
+    vec_refs = refs[1 : 1 + n_vec]
+    arr_refs = refs[1 + n_vec : 1 + n_vec + n_arr]
+    out_ref = refs[-1]
+    x = x_ref[...].astype(jnp.int32)
+    vecs = [r[...].astype(jnp.int32) for r in vec_refs]  # (1, bn), broadcast
+    arrs = [r[...].astype(jnp.int32) for r in arr_refs]
+    for stage in stages:
+        x = apply_stage_q(x, stage, vecs, arrs, bits)
+    out_ref[...] = x.astype(out_ref.dtype)
+
+
+def fused_linear_chain_q(
+    x: jax.Array,
+    stages: Sequence[Stage],
+    vecs: Sequence[jax.Array] = (),
+    extras: Sequence[jax.Array] = (),
+    *,
+    bits: int = 8,
+    bb: int = DEFAULT_BB,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Apply a quantized stage chain to the fixed-point stream ``x`` in one
+    fused kernel — the §IV-G super-node at the integer precision MAFIA's
+    SeeDot-lineage programs actually run in.
+
+    ``x`` is int8/int16 (any rank ≥ 1, flattened like the float kernel);
+    ``stages`` use the ``q_*`` vocabulary of :mod:`repro.kernels.ref` with
+    ``*_vec`` operands indexing ``vecs`` (quantized static params) and
+    ``*_arr`` operands indexing ``extras`` (other DFG edges, shaped like
+    ``x``).  All inter-stage values live in int32 registers; the result is
+    saturated to ``x``'s dtype on the single write-back, so the output is
+    bitwise identical to evaluating the chain node-by-node with the integer
+    templates.
+    """
+    kernel = functools.partial(
+        _chain_kernel_q, stages=tuple(stages), n_vec=len(vecs),
+        n_arr=len(extras), bits=bits)
+    return _tiled_chain_call(x, vecs, extras, kernel, bb=bb, bn=bn,
+                             interpret=interpret)

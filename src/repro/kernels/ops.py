@@ -1,36 +1,29 @@
-"""jit'd public wrappers around the Pallas kernels + DFG-cluster fusion glue.
+"""jit'd public wrappers around the Pallas kernels.
 
-Two roles:
+The thin, jit-compiled entry points (`spmv`, `gemv`, `matmul`,
+`linear_chain`, `linear_chain_q`, `decode_attention`, `mamba2_ssd`) that
+examples, the serving engine and the benchmarks call.  Each has a pure-jnp
+oracle in :mod:`repro.kernels.ref` and is validated against it in
+``tests/test_kernels.py`` (interpret mode on CPU).
 
-1.  The thin, jit-compiled entry points (`spmv`, `gemv`, `matmul`,
-    `linear_chain`, `decode_attention`, `mamba2_ssd`) that examples, the
-    serving engine and the benchmarks call.  Each has a pure-jnp oracle in
-    :mod:`repro.kernels.ref` and is validated against it in
-    ``tests/test_kernels.py`` (interpret mode on CPU).
-
-2.  ``try_fuse_linear_cluster`` — the bridge from MAFIA's §IV-G pipelining
-    decision to the fused Pallas kernel: given a connected linear-time
-    cluster chosen by the scheduler, decompose it into stage *chains* and
-    execute each chain in a single ``pallas_call`` (one HBM round-trip per
-    chain instead of one per node).
+The bridge from MAFIA's §IV-G pipelining decision to the fused pipeline
+kernel — decomposing a scheduler-chosen linear-time cluster into stage
+chains — is *compile-time* analysis and lives in the lowering pipeline
+(:mod:`repro.core.lowering`, the chain-decompose pass).  The resulting
+:class:`~repro.core.lowering.ChainStep` programs execute through
+:func:`repro.kernels.linear_pipeline.fused_linear_chain` (float) or
+:func:`~repro.kernels.linear_pipeline.fused_linear_chain_q` (fixed point):
+one ``pallas_call`` — one HBM round-trip — per chain instead of one per node.
 """
 
 from __future__ import annotations
 
-from typing import Any
-
-import jax.numpy as jnp
-
-from repro.core import node_types
-from repro.core.dfg import DFG
 from repro.kernels import gemv as _gemv_mod
 from repro.kernels import spmv as _spmv_mod
-from repro.kernels.linear_pipeline import fused_linear_chain
-from repro.kernels.ref import Stage
+from repro.kernels.linear_pipeline import fused_linear_chain, fused_linear_chain_q
 
 __all__ = [
-    "spmv", "gemv", "matmul", "linear_chain", "try_fuse_linear_cluster",
-    "pack_bcsr",
+    "spmv", "gemv", "matmul", "linear_chain", "linear_chain_q", "pack_bcsr",
 ]
 
 pack_bcsr = _spmv_mod.pack_bcsr
@@ -38,158 +31,4 @@ spmv = _spmv_mod.spmv
 gemv = _gemv_mod.gemv
 matmul = _gemv_mod.matmul
 linear_chain = fused_linear_chain
-
-
-# --------------------------------------------------------------------- fusion
-# DFG ops expressible as fused pipeline stages (elementwise, no reduction).
-_STAGEABLE = {"scalar_mul", "add", "sub", "hadamard", "tanh", "sigmoid", "relu", "exp"}
-_BIN_ARR = {"add": "add_arr", "sub": "sub_arr", "hadamard": "hadamard_arr"}
-_BIN_VEC = {"add": "add_vec", "sub": "sub_vec", "hadamard": "hadamard_vec"}
-
-
-def _value_needed_outside(dfg: DFG, nid: str, chain_next: str | None) -> bool:
-    """True if ``nid``'s value is consumed anywhere other than ``chain_next``."""
-    if nid in dfg.outputs:
-        return True
-    return any(s != chain_next for s in dfg.successors(nid))
-
-
-def try_fuse_linear_cluster(
-    dfg: DFG, members: list[str], env: dict[str, Any], *, batched: bool = False
-) -> dict[str, Any] | None:
-    """Execute a §IV-G linear-time cluster through the fused pipeline kernel.
-
-    Returns ``{node_id: value}`` for every member, or ``None`` when no member
-    can be staged (caller falls back to per-node eval).  Members whose op has
-    a reduction (dot/reduce_sum/argmax — linear-time but not elementwise) are
-    evaluated directly; the elementwise remainder runs as fused chains.
-
-    With ``batched`` every value in ``env`` carries a leading batch axis:
-    direct (non-stageable) members are vmapped over it, while staged chains
-    hand the whole batch to the pipeline kernel — its grid tiles the batch
-    axis, so a bucket of serving requests costs one kernel launch.
-    """
-    import jax
-
-    mset = set(members)
-    topo = [n for n in dfg.topo_order() if n in mset]
-    if not any(dfg.nodes[n].op in _STAGEABLE for n in topo):
-        return None
-    # Quantized (int8) clusters stream integer values whose inter-stage
-    # requantization the float pipeline kernel cannot express — decline so
-    # the caller's quantized per-node path runs instead of miscomputing.
-    if any(
-        jnp.issubdtype(jnp.asarray(env[src]).dtype, jnp.integer)
-        for nid in topo for src in dfg.nodes[nid].inputs if src in env
-    ):
-        return None
-    results: dict[str, Any] = {}
-
-    def get(ref: str) -> Any:
-        return results[ref] if ref in results else env[ref]
-
-    def ready(nid: str) -> bool:
-        return all(
-            (p not in mset) or (p in results) for p in dfg.nodes[nid].inputs
-        )
-
-    def eval_direct(nid: str) -> None:
-        node = dfg.nodes[nid]
-        spec = node_types.get(node.op)
-        args = [get(s) for s in node.inputs]
-        if batched:
-            fn = lambda *a: spec.jax_fn(list(a), node.params, node.dims)
-            results[nid] = jax.vmap(fn)(*args)
-        else:
-            results[nid] = spec.jax_fn(args, node.params, node.dims)
-
-    pending = list(topo)
-    while pending:
-        # next executable member in topo order
-        head = next(n for n in pending if ready(n))
-        pending.remove(n := head)
-        node = dfg.nodes[n]
-        if node.op not in _STAGEABLE:
-            eval_direct(n)
-            continue
-
-        # ---- grow a chain starting at `n`
-        chain = [n]
-        while True:
-            tail = chain[-1]
-            nxts = [
-                s
-                for s in dfg.successors(tail)
-                if s in mset
-                and s in pending
-                and dfg.nodes[s].op in _STAGEABLE
-                and all(
-                    p == tail or (p not in mset) or (p in results)
-                    for p in dfg.nodes[s].inputs
-                )
-            ]
-            if len(nxts) != 1:
-                break
-            nxt = nxts[0]
-            # the tail's value must not be needed anywhere except `nxt`
-            if _value_needed_outside(dfg, tail, chain_next=nxt):
-                break
-            chain.append(nxt)
-            pending.remove(nxt)
-
-        # ---- lower chain to stages
-        first = dfg.nodes[chain[0]]
-        stream_src = first.inputs[0] if first.inputs else None
-        stages: list[Stage] = []
-        extras: list[Any] = []
-        ok = True
-        prev: str | None = None
-        for nid in chain:
-            nd = dfg.nodes[nid]
-            if nd.op == "scalar_mul":
-                stages.append(("scalar_mul", float(nd.params["scalar"])))
-            elif nd.op in ("tanh", "sigmoid", "relu", "exp"):
-                stages.append((nd.op, None))
-            elif nd.op in _BIN_VEC and "vec" in nd.params:
-                stages.append((_BIN_VEC[nd.op], jnp.asarray(nd.params["vec"])))
-            elif nd.op in _BIN_ARR and len(nd.inputs) == 2:
-                stream_in = prev if prev in nd.inputs else nd.inputs[0]
-                other = [i for i in nd.inputs if i != stream_in]
-                if len(other) != 1:
-                    ok = False
-                    break
-                if nid == chain[0]:
-                    stream_src = stream_in
-                # sub is not commutative: stream must be the left operand
-                if nd.op == "sub" and stream_in != nd.inputs[0]:
-                    ok = False
-                    break
-                extras.append(get(other[0]))
-                stages.append((_BIN_ARR[nd.op], len(extras) - 1))
-            else:
-                ok = False
-                break
-            prev = nid
-        if not ok or stream_src is None:
-            # bail out: evaluate the whole chain node-by-node
-            for nid in chain:
-                eval_direct(nid)
-            continue
-
-        # fused_linear_chain handles rank itself: 1-D per-sample vectors,
-        # 2-D batches, and batched matrix values (B, T, D) all flatten onto
-        # the kernel's (batch, feature) grid.
-        val = fused_linear_chain(
-            jnp.asarray(get(stream_src)), stages,
-            [jnp.asarray(e) for e in extras])
-        # every intermediate chain value equals a prefix of the stage program;
-        # only the final value is materialized (that is the point of fusion) —
-        # intermediates were proven unconsumed, publish the terminal only.
-        for i, nid in enumerate(chain[:-1]):
-            # provably never read: growth only extended past `nid` after
-            # checking its sole consumer is the next chain element.
-            assert not _value_needed_outside(dfg, nid, chain_next=chain[i + 1])
-            results[nid] = None
-        results[chain[-1]] = val
-
-    return results
+linear_chain_q = fused_linear_chain_q

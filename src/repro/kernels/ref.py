@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "spmv_ref", "gemv_ref", "matmul_ref", "linear_chain_ref",
+    "apply_stage_q", "linear_chain_q_ref",
     "decode_attention_ref", "mamba2_ssd_ref",
 ]
 
@@ -83,6 +84,88 @@ def linear_chain_ref(
     for stage in stages:
         x = apply_stage(x, stage, extras)
     return x
+
+
+# -------------------------------------------------- quantized linear pipeline
+# The fixed-point twin of the stage vocabulary above: the stream is an int32
+# carrier holding values already saturated to the activation width, and every
+# stage ends in a compile-time requantizing shift (repro.core.quantize
+# semantics, so a fused chain is bit-identical to per-node integer eval).
+# Stage forms (op, operand):
+#   ("q_scalar_mul",   (c, rq))             requantize(x · c, rq)
+#   ("q_add_vec",      (vi, sa, sb, rq))    requantize(sh(x,sa) + sh(v,sb), rq)
+#   ("q_sub_vec",      (vi, sa, sb, rq))    requantize(sh(x,sa) − sh(v,sb), rq)
+#   ("q_hadamard_vec", (vi, rq))            requantize(x · v, rq)
+#   ("q_add_arr"|"q_sub_arr", (ai, sa, sb, rq))   — operand is extras[ai]
+#   ("q_hadamard_arr", (ai, rq))
+#   ("q_unary",        (name, e_in, e_out))  dequantize → float PE → quantize
+# where sh(x, s) is the plain arithmetic align shift (left if s ≥ 0) and rq
+# the rounding requantize shift; vi/ai index the vec/extra operand lists.
+
+# Float formulas of the table-based nonlinear PEs — must match the
+# node_types.OpSpec.jax_fn implementations exactly (bitwise parity with the
+# per-node dequantize → float → requantize path depends on it).
+_UNARY_F = {
+    "tanh": jnp.tanh,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "exp": jnp.exp,
+}
+
+
+def _align(x: jax.Array, s: int) -> jax.Array:
+    """Plain arithmetic align shift (quantize._q_align semantics: no
+    rounding — requantize rounds, align does not)."""
+    return x << s if s >= 0 else x >> (-s)
+
+
+def apply_stage_q(
+    x: jax.Array,
+    stage: Stage,
+    vecs: Sequence[jax.Array],
+    extras: Sequence[jax.Array],
+    bits: int = 8,
+) -> jax.Array:
+    """One quantized pipeline stage on the int32 stream ``x``.  ``vecs`` and
+    ``extras`` are int32-widened operands (quantized params / other edges)."""
+    from repro.core.quantize import quantize_core, requantize_core
+
+    op, operand = stage
+    if op == "q_scalar_mul":
+        c, rq = operand
+        return requantize_core(x * c, rq, bits)
+    if op in ("q_add_vec", "q_sub_vec", "q_add_arr", "q_sub_arr"):
+        idx, sa, sb, rq = operand
+        b = vecs[idx] if op.endswith("_vec") else extras[idx]
+        acc = _align(x, sa) + (1 if "add" in op else -1) * _align(b, sb)
+        return requantize_core(acc, rq, bits)
+    if op in ("q_hadamard_vec", "q_hadamard_arr"):
+        idx, rq = operand
+        b = vecs[idx] if op.endswith("_vec") else extras[idx]
+        return requantize_core(x * b, rq, bits)
+    if op == "q_unary":
+        name, e_in, e_out = operand
+        xf = x.astype(jnp.float32) * (2.0 ** (-e_in))
+        return quantize_core(_UNARY_F[name](xf), e_out, bits)
+    raise ValueError(f"unknown quantized stage op {op!r}")
+
+
+def linear_chain_q_ref(
+    x: jax.Array,
+    stages: Sequence[Stage],
+    vecs: Sequence[jax.Array] = (),
+    extras: Sequence[jax.Array] = (),
+    bits: int = 8,
+) -> jax.Array:
+    """Oracle for the fused quantized pipeline: widen to the int32 carrier,
+    apply each stage, saturate back to the activation dtype on write."""
+    out_dtype = x.dtype
+    x = x.astype(jnp.int32)
+    vecs = [v.astype(jnp.int32) for v in vecs]
+    extras = [e.astype(jnp.int32) for e in extras]
+    for stage in stages:
+        x = apply_stage_q(x, stage, vecs, extras, bits)
+    return x.astype(out_dtype)
 
 
 # ------------------------------------------------------------ decode attention

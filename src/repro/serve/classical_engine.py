@@ -16,11 +16,12 @@ metric, pipelining, use_pallas, precision)`` — repeat engines (and repeat
 benchmark sweeps) never recompile: :func:`configs.classical.build` is
 deterministic in those knobs, so the key fully identifies the program.
 
-``precision="int8"`` serves the fixed-point program the paper's workloads
-actually run: the compiler calibrates power-of-two scales from the
-benchmark's training split and the batched forwards execute in int8 with
-int32 accumulation.  Requests still carry float feature vectors — the
-quantize/dequantize boundary lives inside the compiled callable.
+``precision="int8"`` (or ``"int16"``) serves the fixed-point program the
+paper's workloads actually run: the compiler calibrates power-of-two scales
+from the benchmark's training split and the batched forwards execute in
+narrow integers with int32 accumulation.  Requests still carry float
+feature vectors — the quantize/dequantize boundary lives inside the
+compiled callable.
 """
 
 from __future__ import annotations
@@ -71,7 +72,7 @@ def get_program(
     if prog is None:
         dfg, _, _ = build(bench, trained=trained, seed=seed)
         calib = None
-        if precision == "int8":
+        if precision != "float32":       # fixed-point lanes (int8 / int16)
             Xtr, _ = training_split(bench, seed=seed)
             calib = Xtr[:_CALIB_SAMPLES]
         compiler = MafiaCompiler(

@@ -105,6 +105,85 @@ def test_linear_chain_arr_operands():
                                rtol=1e-5)
 
 
+# ----------------------------------------------- quantized linear pipeline
+_Q_STAGE_POOL = ["q_scalar_mul", "q_unary", "q_add_vec", "q_sub_vec",
+                 "q_hadamard_vec", "q_add_arr", "q_hadamard_arr"]
+
+
+def _random_q_program(ops_list, rng, n, bits):
+    """A well-formed random q-stage program with small scales/shifts."""
+    from repro.kernels.linear_pipeline import fused_linear_chain_q
+
+    qm = (1 << (bits - 1)) - 1
+    stages, vecs, extras = [], [], []
+    for op in ops_list:
+        if op == "q_scalar_mul":
+            stages.append((op, (int(rng.integers(-5, 6)),
+                                int(rng.integers(-2, 4)))))
+        elif op == "q_unary":
+            stages.append((op, (str(rng.choice(["tanh", "sigmoid", "relu",
+                                                "exp"])),
+                                int(rng.integers(3, 7)),
+                                int(rng.integers(3, 7)))))
+        elif op.endswith("_vec"):
+            vecs.append(rng.integers(-qm, qm + 1, size=n).astype(f"int{bits}"))
+            if op == "q_hadamard_vec":
+                stages.append((op, (len(vecs) - 1, int(rng.integers(1, 5)))))
+            else:
+                stages.append((op, (len(vecs) - 1, int(rng.integers(-2, 3)),
+                                    int(rng.integers(-2, 3)),
+                                    int(rng.integers(-1, 3)))))
+        else:
+            extras.append(None)       # placeholder, filled by the caller
+            if op == "q_hadamard_arr":
+                stages.append((op, (len(extras) - 1, int(rng.integers(1, 5)))))
+            else:
+                stages.append((op, (len(extras) - 1, int(rng.integers(-2, 3)),
+                                    int(rng.integers(-2, 3)),
+                                    int(rng.integers(-1, 3)))))
+    return stages, vecs, len(extras)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.sampled_from(_Q_STAGE_POOL), min_size=1, max_size=5),
+    st.integers(0, 2),
+    st.sampled_from([8, 16]),
+)
+def test_linear_chain_q_property(ops_list, bexp, bits):
+    """The fixed-point pipeline kernel must match its pure-jnp oracle
+    bitwise on random stage programs, shapes and both activation widths."""
+    from repro.kernels.linear_pipeline import fused_linear_chain_q
+
+    B, n = 2 ** bexp, 40
+    rng = np.random.default_rng((hash(tuple(ops_list)) ^ bits) % 2**31)
+    qm = (1 << (bits - 1)) - 1
+    dt = f"int{bits}"
+    stages, vecs, n_arr = _random_q_program(ops_list, rng, n, bits)
+    x = jnp.asarray(rng.integers(-qm, qm + 1, size=(B, n)).astype(dt))
+    extras = [jnp.asarray(rng.integers(-qm, qm + 1, size=(B, n)).astype(dt))
+              for _ in range(n_arr)]
+    vecs = [jnp.asarray(v) for v in vecs]
+    out = fused_linear_chain_q(x, stages, vecs, extras, bits=bits,
+                               bb=16, bn=128)
+    expect = ref.linear_chain_q_ref(x, stages, vecs, extras, bits=bits)
+    assert out.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_linear_chain_q_matches_per_node_semantics():
+    """A q-chain program lowered from real NodeQuant shifts must equal the
+    per-node integer templates exactly (scalar_mul → requantize chain)."""
+    from repro.core.quantize import requantize_i32
+    from repro.kernels.linear_pipeline import fused_linear_chain_q
+
+    x = jnp.asarray(np.arange(-64, 64, dtype=np.int8))
+    # x at exp 5, scalar 3 at exp 4, out exp 5  => rq shift = 5 + 4 - 5 = 4
+    out = fused_linear_chain_q(x, [("q_scalar_mul", (3, 4))], bits=8)
+    expect = requantize_i32(x.astype(jnp.int32) * 3, 4, bits=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
 # -------------------------------------------------- decode attention oracle
 def test_decode_attention_ref_vs_plain():
     from repro.models.attention import plain_attention

@@ -1,0 +1,226 @@
+"""Lowering pass pipeline: static ExecutionPlan structure, pruning/folding,
+cluster cycle-split fallback, chain None-publish invariants, plan-vs-oracle
+parity across the Table-I benchmarks, and the compile(assignment=...) fixes."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+from repro.core.lowering import ChainStep, NodeStep, lower
+
+
+def _chain_dfg():
+    """x → t0(tanh) → t1(relu) → t2(exp), output t2."""
+    g = DFG("chain")
+    g.add_input("x", (8,))
+    t0 = g.add("tanh", "x", id="t0")
+    t1 = g.add("relu", t0, id="t1")
+    t2 = g.add("exp", t1, id="t2")
+    g.mark_output(t2)
+    return g
+
+
+# ------------------------------------------------------------ plan structure
+def test_plan_covers_live_graph_once():
+    dfg, _, _ = build(BENCHMARKS[3])
+    plan = lower(dfg)
+    produced = [s.nid for s in plan.node_steps]
+    for c in plan.chain_steps:
+        produced.extend(c.members)
+    assert len(produced) == len(set(produced))
+    assert set(produced) | set(plan.pruned) | set(plan.alias) == set(dfg.nodes)
+    plan.verify()          # idempotent
+    assert "ExecutionPlan" in plan.summary()
+
+
+def test_compiled_program_carries_plan():
+    dfg, _, _ = build(BENCHMARKS[0])
+    prog = MafiaCompiler(strategy="none").compile(dfg)
+    assert prog.plan is not None and prog.plan.precision == "float32"
+    # batched lanes interpret the same plan object — no re-lowering
+    assert prog.batch(4, mode="map").program.plan is prog.plan
+
+
+def test_dead_node_pruned():
+    g = _chain_dfg()
+    g.add("sigmoid", "t0", id="orphan")          # never reaches an output
+    plan = lower(g)
+    assert plan.pruned == ("orphan",)
+    assert all("orphan" not in getattr(s, "nid", "") for s in plan.node_steps)
+    x = np.linspace(-1, 1, 8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t2"]),
+                                  np.asarray(execute(g, x=x)["t2"]))
+
+
+def test_identity_scalar_mul_folded_bitwise():
+    g = DFG("fold")
+    g.add_input("x", (6,))
+    m = g.add("scalar_mul", "x", id="m", scalar=1.0)
+    r = g.add("relu", m, id="r")
+    g.mark_output(r)
+    plan = lower(g)
+    assert plan.alias == {"m": "x"}
+    (step,) = plan.node_steps
+    assert step.nid == "r" and step.inputs == ("x",)
+    x = np.linspace(-2, 2, 6).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["r"]),
+                                  np.asarray(execute(g, x=x)["r"]))
+
+
+def test_identity_fold_skipped_at_fixed_point():
+    """Integer lanes keep scalar_mul ×1.0: its requantize can change scale."""
+    from repro.core import quantize
+
+    g = DFG("foldq")
+    g.add_input("x", (6,))
+    m = g.add("scalar_mul", "x", id="m", scalar=1.0)
+    g.add("relu", m, id="r")
+    g.mark_output("r")
+    qp = quantize.calibrate(g)
+    plan = lower(g, precision="int8", qplan=qp)
+    assert plan.alias == {}
+    assert {s.nid for s in plan.node_steps} == {"m", "r"}
+
+
+# ----------------------------------------------- cluster cycle-split fallback
+def test_cluster_split_on_cycle_through_cluster():
+    """A path leaving the cluster and re-entering it makes the §IV-G start
+    condition unsatisfiable — the cluster pass splits it back into nodes
+    (what the old executor re-derived at trace time on every build)."""
+    rng = np.random.default_rng(0)
+    g = DFG("cyc")
+    g.add_input("x", (8,))
+    a = g.add("relu", "x", id="a")
+    gm = g.add("gemv", a, id="g", matrix=rng.normal(size=(8, 8)).astype(np.float32))
+    b = g.add("add", a, gm, id="b")
+    g.mark_output(b)
+    plan = lower(g, fused_clusters=[["a", "b"]], use_pallas=True)
+    assert plan.cluster_splits == 1
+    x = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    ref = execute(g, x=x)
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(ref["b"]),
+                               rtol=2e-3, atol=2e-4)
+
+
+# --------------------------------------------------- None-publish invariants
+def test_chain_intermediates_suppressed_only_when_unconsumed():
+    g = _chain_dfg()
+    plan = lower(g, fused_clusters=[["t0", "t1", "t2"]], use_pallas=True)
+    (chain,) = plan.chain_steps
+    assert chain.members == ("t0", "t1", "t2")
+    assert chain.dead == ("t0", "t1") and chain.terminal == "t2"
+
+
+def test_chain_stops_at_externally_consumed_intermediate():
+    g = _chain_dfg()
+    g.add("sigmoid", "t1", id="side")
+    g.mark_output("side")
+    plan = lower(g, fused_clusters=[["t0", "t1", "t2"]], use_pallas=True)
+    dead = {n for c in plan.chain_steps for n in c.dead}
+    assert "t1" not in dead          # t1 is consumed by `side` — never None
+    x = np.linspace(-1, 1, 8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    ref = execute(g, x=x)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_chain_output_intermediate_stays_published():
+    g = _chain_dfg()
+    g.mark_output("t1")              # intermediate is itself an output
+    plan = lower(g, fused_clusters=[["t0", "t1", "t2"]], use_pallas=True)
+    dead = {n for c in plan.chain_steps for n in c.dead}
+    assert "t1" not in dead
+    x = np.linspace(-1, 1, 8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    assert out["t1"] is not None
+    np.testing.assert_allclose(np.asarray(out["t1"]),
+                               np.asarray(execute(g, x=x)["t1"]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_verify_rejects_consumed_suppression():
+    """Corrupting a plan to suppress a consumed intermediate must not pass
+    verification — the invariant the old executor asserted per trace."""
+    g = _chain_dfg()
+    g.add("sigmoid", "t1", id="side")
+    g.mark_output("side")
+    plan = lower(g, fused_clusters=[["t0", "t1", "t2"]], use_pallas=True)
+    bad_steps = []
+    for s in plan.steps:
+        if isinstance(s, ChainStep) and s.members == ("t0", "t1"):
+            s = dataclasses.replace(s, members=("t0", "t1", "t2"),
+                                    dead=("t0", "t1"), terminal="t2")
+        elif isinstance(s, (NodeStep, ChainStep)) and "t2" in getattr(
+                s, "members", (getattr(s, "nid", ""),)):
+            continue                 # t2 now produced by the corrupted chain
+        bad_steps.append(s)
+    bad = dataclasses.replace(plan, steps=tuple(bad_steps))
+    with pytest.raises(AssertionError, match="suppresses"):
+        bad.verify()
+
+
+# ------------------------------------------------------ plan-vs-oracle parity
+def test_plan_matches_oracle_every_benchmark():
+    """The planned program (fused, Pallas) must match the unplanned per-node
+    oracle on all 20 Table-I benchmarks; the unfused plan matches bitwise."""
+    rng = np.random.default_rng(0)
+    for bench in BENCHMARKS:
+        dfg, _, _ = build(bench)
+        x = rng.normal(size=dfg.graph_inputs["x"].shape).astype(np.float32)
+        ref = execute(dfg, x=x)
+        plain = build_callable(dfg, jit=False)(x=x)
+        fused = build_callable(
+            dfg, jit=False, use_pallas=True,
+            fused_clusters=[c for c in
+                            [list(m) for m in _linear_clusters(dfg)] if len(c) > 1],
+        )(x=x)
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(plain[k]), np.asarray(ref[k]),
+                err_msg=f"{bench.name}:{k} unfused plan not bitwise")
+            np.testing.assert_allclose(
+                np.asarray(fused[k]), np.asarray(ref[k]), rtol=2e-3, atol=2e-4,
+                err_msg=f"{bench.name}:{k} fused plan off oracle")
+
+
+def _linear_clusters(dfg):
+    from repro.core import node_types
+
+    return dfg.subgraph_of_connected(
+        lambda n: node_types.get(n.op).linear_time)
+
+
+# ------------------------------------------------- compile(assignment=...) fix
+def test_partial_assignment_defaults_to_pf1():
+    dfg, _, _ = build(BENCHMARKS[0])
+    some = next(iter(dfg.nodes))
+    prog = MafiaCompiler().compile(dfg, assignment={some: 2})
+    assert prog.assignment[some] == 2
+    assert all(pf == 1 for nid, pf in prog.assignment.items() if nid != some)
+    assert set(prog.assignment) == set(dfg.nodes)   # lut_true summed over all
+
+
+def test_unknown_assignment_id_raises():
+    dfg, _, _ = build(BENCHMARKS[0])
+    with pytest.raises(ValueError, match="unknown nodes"):
+        MafiaCompiler().compile(dfg, assignment={"not_a_node": 2})
+
+
+def test_vivado_baseline_partial_assignment_path():
+    """The mechanism runner imposes external PFs; a partial dict (as an
+    external Vivado report would produce) must compile, not KeyError."""
+    dfg, _, _ = build(BENCHMARKS[0])
+    spmv_only = {nid: 10 for nid, n in dfg.nodes.items() if n.op == "spmv"}
+    prog = MafiaCompiler(order="sequential", pipelining=False).compile(
+        dfg, assignment=spmv_only)
+    assert prog.latency_cycles > 0

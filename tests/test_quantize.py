@@ -1,6 +1,7 @@
-"""Int8 fixed-point compilation path (the paper's SeeDot-lineage workload
-class): scale/requantize helpers, float-vs-int8 parity on every classical
-benchmark, bitwise map/vmap agreement, Pallas fusion decline, serving."""
+"""Fixed-point compilation lanes (the paper's SeeDot-lineage workload class,
+int8 and int16): scale/requantize helpers, float-vs-int parity on every
+classical benchmark, bitwise map/vmap agreement, fused Pallas pipeline
+bitwise-vs-per-node, serving."""
 
 import numpy as np
 import pytest
@@ -126,24 +127,120 @@ def test_int8_map_vmap_bitwise(bench):
             assert np.array_equal(np.asarray(om[k][i]), np.asarray(ref[k]))
 
 
-def test_int8_pallas_cluster_declined_not_miscomputed():
-    """use_pallas must not push int8 clusters through the float pipeline
-    kernel: the fusion glue declines them and the quantized per-node path
-    runs — results bitwise-identical to the non-Pallas int8 program."""
-    bench = BENCHMARKS[13]                        # protonn: has a fused cluster
+@pytest.mark.parametrize("bench,mod", [(BENCHMARKS[3], bonsai),
+                                       (BENCHMARKS[13], protonn)])
+def test_int8_pallas_cluster_fused_bitwise(bench, mod):
+    """use_pallas now executes int8 clusters *through* the fixed-point
+    pipeline kernel (no decline-to-per-node fallback): the plan carries
+    quantized ChainSteps and results stay bitwise-identical to the
+    non-Pallas int8 program (per-node integer eval)."""
     Xtr, _, Xte, _ = make_dataset(bench.dataset, n_train=64, n_test=5)
-    cfg = protonn.from_spec(bench.dataset)
-    params = protonn.init_params(cfg, 0)
+    cfg = mod.from_spec(bench.dataset)
+    params = mod.init_params(cfg, 0)
     progs = []
     for use_pallas in (False, True):
-        dfg = protonn.build_dfg(params, cfg)
+        dfg = mod.build_dfg(params, cfg)
         progs.append(MafiaCompiler(precision="int8", use_pallas=use_pallas)
                      .compile(dfg, calib=Xtr))
-    assert progs[1].fused_clusters                # there was a cluster to decline
+    assert progs[1].fused_clusters                # there was a cluster to fuse
+    qchains = [s for s in progs[1].plan.chain_steps if s.quantized]
+    assert qchains, "int8 clusters must lower to fused pipeline chains"
+    fused_nodes = {n for s in qchains for n in s.members}
+    cluster_nodes = {n for c in progs[1].fused_clusters for n in c}
+    assert fused_nodes == cluster_nodes           # fused end-to-end, no decline
+    assert not progs[0].plan.chain_steps          # non-Pallas plan is per-node
     for i in range(5):
         a, b = progs[0](x=Xte[i]), progs[1](x=Xte[i])
         for k in a:
             assert np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ------------------------------------------------------------- int16 lane
+def test_int16_helpers():
+    assert quantize.q_max(8) == 127 and quantize.q_max(16) == 32767
+    assert quantize.pow2_exp(1.0, bits=16) == 14   # 32767·2^-15 < 1 ≤ ·2^-14
+    q = quantize.quantize_np(np.linspace(-3, 3, 32), quantize.pow2_exp(3.0, 16),
+                             bits=16)
+    assert q.dtype == np.int16 and np.abs(q).max() <= 32767
+    # finer lane quantizes tighter: reconstruction error shrinks vs int8
+    e8, e16 = quantize.pow2_exp(3.0, 8), quantize.pow2_exp(3.0, 16)
+    x = np.linspace(-3, 3, 64).astype(np.float32)
+    err8 = np.abs(np.asarray(quantize.dequantize(
+        quantize.quantize_np(x, e8, 8), e8)) - x).max()
+    err16 = np.abs(np.asarray(quantize.dequantize(q := quantize.quantize_np(
+        x, e16, 16), e16)) - x).max()
+    assert err16 < err8 / 64
+    out = np.asarray(quantize.requantize_i32(np.array([1 << 20, -3], np.int32),
+                                             2, bits=16))
+    assert out.dtype == np.int16 and out.tolist() == [32767, -1]
+
+
+def test_compiler_accepts_int16_rejects_others():
+    MafiaCompiler(precision="int16")
+    with pytest.raises(ValueError, match="precision"):
+        MafiaCompiler(precision="int4")
+
+
+@pytest.mark.parametrize("bench", [BENCHMARKS[0], BENCHMARKS[3], BENCHMARKS[13]])
+def test_int16_accuracy_parity(bench):
+    """SeeDot's other activation width: the int16 lane must track float32
+    essentially exactly (finer scales, same int32 accumulation)."""
+    Xtr, ytr, Xte, yte = make_dataset(bench.dataset, n_train=256, n_test=64)
+    mod = bonsai if bench.algo == "bonsai" else protonn
+    cfg = mod.from_spec(bench.dataset)
+    params = (mod.init_params(cfg, 0, Xtr, ytr) if bench.algo == "protonn"
+              else mod.init_params(cfg, 0))
+    f32 = MafiaCompiler(strategy="none").compile(mod.build_dfg(params, cfg))
+    i16 = MafiaCompiler(strategy="none", precision="int16").compile(
+        mod.build_dfg(params, cfg), calib=Xtr)
+    assert i16.qplan.bits == 16 and i16.plan.bits == 16
+    acc_f = float((_preds(f32, Xte) == yte).mean())
+    acc_q = float((_preds(i16, Xte) == yte).mean())
+    assert acc_q >= acc_f - 0.02, f"{bench.name}: int16 {acc_q} vs f32 {acc_f}"
+
+
+def test_int16_fused_pallas_bitwise_and_lanes():
+    """int16 clusters also run fused through the fixed-point pipeline kernel,
+    bitwise-identical to per-node eval and across map/vmap lanes."""
+    bench = BENCHMARKS[3]
+    Xtr, _, Xte, _ = make_dataset(bench.dataset, n_train=64, n_test=9)
+    progs = []
+    for use_pallas in (False, True):
+        dfg, _, _ = build(bench)
+        progs.append(MafiaCompiler(precision="int16", use_pallas=use_pallas)
+                     .compile(dfg, calib=Xtr))
+    assert any(s.quantized for s in progs[1].plan.chain_steps)
+    for i in range(3):
+        a, b = progs[0](x=Xte[i]), progs[1](x=Xte[i])
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    om = progs[1].batch(max_batch=4, mode="map")(x=Xte)
+    ov = progs[1].batch(max_batch=4, mode="vmap")(x=Xte)
+    for k in om:
+        assert np.array_equal(np.asarray(om[k]), np.asarray(ov[k]))
+
+
+def test_int16_matmul_accumulator_guard():
+    """matmul has two dynamic operands, so the static-param scale cap cannot
+    protect it — calibration must cap the *input* exponents instead.  At
+    int16 with large inputs the unguarded int32 accumulator wraps and the
+    program silently returns garbage (regression: returned 0.0 for 128.0)."""
+    from repro.core.dfg import DFG
+    from repro.core.executor import execute
+
+    g = DFG("mm")
+    g.add_input("a", (8, 32))
+    g.add_input("b", (32, 8))
+    g.add("matmul", "a", "b", id="mm")
+    g.mark_output("mm")
+    calib = {"a": np.full((4, 8, 32), 2.0, np.float32),
+             "b": np.full((4, 32, 8), 2.0, np.float32)}
+    prog = MafiaCompiler(strategy="none", precision="int16").compile(
+        g, calib=calib)
+    a, b = calib["a"][0], calib["b"][0]
+    out = np.asarray(prog(a=a, b=b)["mm"])
+    ref = np.asarray(execute(g, a=a, b=b)["mm"])       # 128.0 everywhere
+    np.testing.assert_allclose(out, ref, rtol=0.01)
 
 
 # ----------------------------------------------------------------- serving

@@ -146,3 +146,20 @@ def test_engine_accepts_prebuilt_program():
     assert len(done) == 1 and done[0].done
     with pytest.raises(TypeError):
         ClassicalServeEngine(prog, use_pallas=True)
+
+
+def test_batched_program_rejects_unknown_inputs():
+    """Extras must fail loudly (mirroring the per-sample path), not be
+    silently dropped — a typo'd input name is a caller bug."""
+    dfg, _, _ = build(BENCHES[0])
+    from repro.core import MafiaCompiler
+
+    prog = MafiaCompiler(strategy="none").compile(dfg)
+    X = np.stack(_requests("usps-b", 3))
+    batched = prog.batch(4)
+    with pytest.raises(TypeError, match="unknown graph inputs"):
+        batched(x=X, bogus=X)
+    with pytest.raises(TypeError, match="unknown graph inputs"):
+        prog(x=X[0], bogus=X[0])
+    out = batched(x=X)                       # exact inputs still fine
+    assert next(iter(out.values())).shape[0] == 3
