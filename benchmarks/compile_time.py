@@ -1,38 +1,51 @@
-"""Callable-construction time: per-build re-analysis (old) vs static plan.
+"""Compile-time benchmark: per-pass timings + old-vs-plan lane construction.
 
-Before the lowering pipeline, every ``build_callable`` re-derived atom
-ordering and cluster chain decomposition inside the traced callable — once
-per execution lane (per-sample, vmap, map), so compiling a program's serving
-stack paid the graph analysis three times.  Now
-:meth:`repro.core.compiler.MafiaCompiler.compile` lowers once to a static
-:class:`~repro.core.lowering.ExecutionPlan` and every lane interprets the
-same plan.
+Two sections:
 
-This benchmark quantifies that on the largest Table-I benchmark (by node
-count): ``old`` re-runs the lowering pass pipeline for each of the three
-lanes (what per-build analysis cost); ``plan`` lowers once and builds the
-three lanes from the shared plan.  Construction only — no jit, no forward.
+* **Per-pass timings** — the PassManager behind ``lower()`` times every
+  front-end (validate → prune → constant-fold → cse) and back-end
+  (quantize-rewrite → cluster → chain-decompose → plan) pass; this reports
+  the mean per-pass milliseconds over the largest Table-I benchmark.
+
+* **Lane construction** — before the lowering pipeline, every
+  ``build_callable`` re-derived atom ordering and cluster chain
+  decomposition once per execution lane (per-sample, vmap, map); now the
+  compiler lowers once and every lane interprets the same static plan.
+  ``old`` re-runs the pipeline per lane, ``plan`` lowers once.
+
+CI integration: ``--json PATH`` writes the timings as JSON (the nightly job
+uploads it as an artifact); ``--baseline PATH`` compares against a
+checked-in baseline and exits non-zero if total lowering time regressed
+more than ``_MAX_REGRESSION``× (2×).  The comparison is machine-normalized:
+both runs divide lowering time by a fixed numpy probe workload timed in the
+same process, so a slower CI runner does not trip the gate and a faster one
+cannot mask a real regression.
 
     PYTHONPATH=src python benchmarks/compile_time.py
+    PYTHONPATH=src python benchmarks/compile_time.py \
+        --json pass_timings.json --baseline benchmarks/compile_time_baseline.json
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 from repro.configs.classical import BENCHMARKS, build
 from repro.core.compiler import MafiaCompiler
 from repro.core.executor import build_callable
-from repro.core.lowering import lower
+from repro.core.lowering import PASS_NAMES, lower
 
-__all__ = ["run"]
+__all__ = ["run", "collect"]
 
 _REPEATS = 20
+_MAX_REGRESSION = 2.0
 _LANES = (dict(jit=False), dict(jit=False, batch=True), dict(jit=False))
 
 
 def _largest_benchmark():
-    best, best_n = None, -1
+    best, best_n, best_dfg = None, -1, None
     for bench in BENCHMARKS:
         dfg, _, _ = build(bench)
         if len(dfg.nodes) > best_n:
@@ -41,17 +54,38 @@ def _largest_benchmark():
 
 
 def _time(fn, repeats: int = _REPEATS) -> float:
+    """Min-of-repeats wall time in ms — the noise-robust estimator (GC and
+    scheduler spikes only ever add time, never subtract)."""
     fn()                                   # warm caches (imports, validate)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(repeats):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / repeats * 1e3   # ms
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
 
 
-def run() -> list[str]:
+def _probe_once() -> None:
+    """Machine-speed probe body: fixed single-threaded work (pure Python +
+    numpy elementwise — deliberately no BLAS, whose thread pool state varies
+    run to run) whose wall time scales with host speed the same way the
+    lowering does.  Timed *interleaved* with the lowering measurement so
+    both sample the same machine state; normalizing by it makes the
+    checked-in baseline portable across machines."""
+    import numpy as np
+
+    a = np.linspace(-1.0, 1.0, 65536)
+    for _ in range(8):
+        (np.abs(a) + a * a).sum()
+        sorted(range(20000), key=lambda i: -i)
+
+
+def collect() -> dict:
+    """Measure everything once; returns the JSON-serializable payload."""
     bench, dfg = _largest_benchmark()
     prog = MafiaCompiler(use_pallas=True).compile(dfg)
     fused = prog.fused_clusters
+    rdfg = prog.dfg
 
     def old() -> None:
         # pre-plan behaviour: each lane re-derives the full graph analysis
@@ -59,22 +93,82 @@ def run() -> list[str]:
             build_callable(dfg, fused_clusters=fused, use_pallas=True, **kw)
 
     def planned() -> None:
-        plan = lower(dfg, fused_clusters=fused, use_pallas=True)
+        plan = lower(rdfg, fused_clusters=fused, use_pallas=True)
         for kw in _LANES:
-            build_callable(dfg, plan=plan, **kw)
+            build_callable(rdfg, plan=plan, **kw)
 
     t_old = _time(old)
     t_plan = _time(planned)
-    t_lower = _time(lambda: lower(dfg, fused_clusters=fused, use_pallas=True))
-    return [
+
+    # per-pass timings: min over repeated lowers, with the machine-speed
+    # probe interleaved so both sample identical machine conditions
+    per_pass: dict[str, float] = {name: float("inf") for name in PASS_NAMES}
+    lower(dfg, fused_clusters=fused, use_pallas=True)   # warm
+    _probe_once()                                       # warm
+    t_lower = probe = float("inf")
+    for _ in range(_REPEATS):
+        t0 = time.perf_counter()
+        plan = lower(dfg, fused_clusters=fused, use_pallas=True)
+        t_lower = min(t_lower, (time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        _probe_once()
+        probe = min(probe, (time.perf_counter() - t0) * 1e3)
+        for name, secs in plan.pass_timings:
+            per_pass[name] = min(per_pass[name], secs * 1e3)
+
+    return {
+        "benchmark": bench.name,
+        "nodes": len(dfg.nodes),
+        "rewritten_nodes": len(rdfg.nodes),
+        "lanes_ms": {"old": t_old, "plan": t_plan},
+        "lower_total_ms": t_lower,
+        "probe_ms": probe,
+        "passes_ms": per_pass,
+    }
+
+
+def run(payload: dict | None = None) -> list[str]:
+    p = payload or collect()
+    out = [
         "compile_time.benchmark,nodes,variant,ms_per_3_lanes,speedup",
-        f"compile_time.{bench.name},{len(dfg.nodes)},old,{t_old:.3f},1.00",
-        f"compile_time.{bench.name},{len(dfg.nodes)},plan,{t_plan:.3f},"
-        f"{t_old / t_plan:.2f}",
-        f"compile_time.{bench.name},{len(dfg.nodes)},lower_once,{t_lower:.3f},"
-        f"{t_old / t_lower:.2f}",
+        f"compile_time.{p['benchmark']},{p['nodes']},old,"
+        f"{p['lanes_ms']['old']:.3f},1.00",
+        f"compile_time.{p['benchmark']},{p['nodes']},plan,"
+        f"{p['lanes_ms']['plan']:.3f},"
+        f"{p['lanes_ms']['old'] / p['lanes_ms']['plan']:.2f}",
+        "compile_time.pass,name,ms",
     ]
+    for name, ms in p["passes_ms"].items():
+        out.append(f"compile_time.pass,{name},{ms:.3f}")
+    out.append(f"compile_time.pass,total,{p['lower_total_ms']:.3f}")
+    return out
+
+
+def check_baseline(payload: dict, baseline_path: str) -> bool:
+    """True iff probe-normalized lowering time is within _MAX_REGRESSION× of
+    the checked-in baseline's normalized time (machine speed cancels)."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    measured = payload["lower_total_ms"] / payload["probe_ms"]
+    limit = base["lower_total_ms"] / base["probe_ms"] * _MAX_REGRESSION
+    ok = measured <= limit
+    verdict = "OK" if ok else "REGRESSION"
+    print(f"compile_time.check,{verdict},measured_x_probe={measured:.3f},"
+          f"limit_x_probe={limit:.3f},raw_ms={payload['lower_total_ms']:.3f},"
+          f"probe_ms={payload['probe_ms']:.3f}")
+    return ok
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    args = sys.argv[1:]
+    payload = collect()
+    print("\n".join(run(payload)))
+    if "--json" in args:
+        path = args[args.index("--json") + 1]
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"compile_time.json,{path}")
+    if "--baseline" in args:
+        base_path = args[args.index("--baseline") + 1]
+        if not check_baseline(payload, base_path):
+            sys.exit(1)

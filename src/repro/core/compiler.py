@@ -1,7 +1,15 @@
-"""MafiaCompiler — the end-to-end flow of Fig. 1.
+"""MafiaCompiler — the end-to-end flow of Fig. 1, rewrite-first.
 
-input DFG → PF-1 profiler → Best-PF estimator → scheduler generator →
-"Verilog" (JAX callable) + simulated latency/resource report.
+input DFG → **front-end rewrite** (prune → constant-fold → CSE) →
+PF-1 profiler → Best-PF estimator → scheduler generator → back-end plan
+pipeline → "Verilog" (JAX callable) + simulated latency/resource report.
+
+The front-end runs *first*: the profiler, optimizer, scheduler and
+quantizer all consume the canonical rewritten graph, so PF assignments,
+schedules and LUT/DSP reports refer only to nodes that actually execute —
+and every estimator query shrinks with the graph.  A DFG carrying dead
+nodes or duplicate subexpressions compiles to exactly the same assignment
+and schedule as its hand-canonicalized equivalent.
 
 The compiler also exposes the ablation knobs needed to reconstruct the
 paper's comparison mechanisms (§V-B): execution order (dataflow vs the
@@ -21,7 +29,14 @@ from repro.core.cost_model import EstimatorBank, default_bank
 from repro.core.dfg import DFG
 from repro.core.executor import build_callable
 from repro.core.fpga_model import ARTY_A7, FpgaBudget
-from repro.core.lowering import ExecutionPlan, lower
+from repro.core.lowering import (
+    DEFAULT_CHAIN_SPLIT_BYTES,
+    ExecutionPlan,
+    RewriteResult,
+    _resolve,
+    lower,
+    rewrite,
+)
 from repro.core.optimizer import (
     CostContext,
     PFResult,
@@ -37,9 +52,9 @@ __all__ = ["MafiaCompiler", "CompiledProgram", "BatchedProgram"]
 
 @dataclasses.dataclass
 class CompiledProgram:
-    dfg: DFG
+    dfg: DFG                     # canonical rewritten graph (what executes)
     fn: Callable[..., dict[str, Any]]
-    assignment: dict[str, int]
+    assignment: dict[str, int]   # PFs over the rewritten graph's nodes only
     pf_result: PFResult | None
     schedule: Schedule
     lut_true: float
@@ -51,6 +66,8 @@ class CompiledProgram:
     precision: str = "float32"
     qplan: Any | None = None     # QuantPlan on the fixed-point lanes
     plan: ExecutionPlan | None = None  # static plan every lane interprets
+    source_dfg: DFG | None = None      # the pre-rewrite graph, for reference
+    rewrite_result: RewriteResult | None = None
 
     @property
     def latency_cycles(self) -> float:
@@ -184,6 +201,8 @@ class MafiaCompiler:
         bank: EstimatorBank | None = None,
         precision: str = "float32",
         calib_samples: int = 64,
+        per_channel: bool = False,
+        chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -192,7 +211,15 @@ class MafiaCompiler:
         (from its ``calib`` batch, or ``calib_samples`` synthetic
         standard-normal samples) and the emitted callable computes in narrow
         integers with int32 accumulation — interface stays float in / float
-        out."""
+        out.  ``per_channel=True`` additionally gives gemv/spmv weight
+        matrices one scale per output row (still plain shifts).
+
+        ``chain_split_bytes`` bounds the live footprint of each fused stage
+        chain: a maximal chain over the budget is split at the cheapest
+        edge (see :func:`repro.core.lowering.split_chain`); the scheduler's
+        pipelined-cluster model prices the same cuts, so estimated and
+        simulated latency stay consistent with the plan the executor
+        interprets.  ``None`` keeps chains maximal."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
@@ -207,6 +234,8 @@ class MafiaCompiler:
         self.bank = bank or default_bank()
         self.precision = precision
         self.calib_samples = calib_samples
+        self.per_channel = per_channel
+        self.chain_split_bytes = chain_split_bytes
 
     # ----------------------------------------------------------------- stages
     def optimize(self, dfg: DFG) -> tuple[PFResult, PFGroups]:
@@ -247,9 +276,14 @@ class MafiaCompiler:
         calibration falls back to synthetic standardized samples, matching
         the zero-mean/unit-variance preprocessing the datasets ship with.
         """
+        # the front-end rewrite pipeline runs FIRST: profiler, optimizer,
+        # scheduler and quantizer all consume the canonical rewritten graph,
+        # so their outputs refer only to nodes that actually execute.
+        rw = rewrite(dfg, precision=self.precision)
+        rdfg = rw.dfg
         pf_result: PFResult | None = None
         if assignment is None:
-            pf_result, groups = self.optimize(dfg)
+            pf_result, groups = self.optimize(rdfg)
             assignment = pf_result.assignment
         else:
             unknown = set(assignment) - set(dfg.nodes)
@@ -257,44 +291,59 @@ class MafiaCompiler:
                 raise ValueError(
                     f"assignment names unknown nodes: {sorted(unknown)}")
             # external assignments (Vivado-baseline paths) may be partial:
-            # unmentioned nodes run at PF=1, the template default.
-            assignment = {nid: int(assignment.get(nid, 1)) for nid in dfg.nodes}
-            profile_pf1(dfg, backend=self.backend)
-            groups = PFGroups.build(dfg)
+            # unmentioned nodes run at PF=1, the template default.  Ids that
+            # the rewrite merged resolve to their canonical node; ids it
+            # removed (dead code, folded constants) impose nothing.
+            eff: dict[str, int] = {}
             for nid, pf in assignment.items():
-                dfg.nodes[nid].pf = pf
+                rid = _resolve(rw.alias, nid)
+                if rid in rdfg.nodes:
+                    eff[rid] = max(eff.get(rid, 1), int(pf))
+            assignment = {nid: eff.get(nid, 1) for nid in rdfg.nodes}
+            profile_pf1(rdfg, backend=self.backend)
+            groups = PFGroups.build(rdfg)
+            for nid, pf in assignment.items():
+                rdfg.nodes[nid].pf = pf
+        # with the fused Pallas path active, price pipelined clusters through
+        # the same chain decomposition (and cost-guided splits) the plan will
+        # execute — simulated latency then matches the chain-split plan.
+        sim_kw: dict[str, Any] = dict(order=self.order, groups=groups)
+        if self.use_pallas:
+            sim_kw.update(decompose_chains=True,
+                          chain_split_bytes=self.chain_split_bytes)
         if self.pipelining == "auto":
-            sched_p = simulate(dfg, assignment, order=self.order,
-                               pipelining=True, groups=groups)
-            sched_n = simulate(dfg, assignment, order=self.order,
-                               pipelining=False, groups=groups)
+            sched_p = simulate(rdfg, assignment, pipelining=True, **sim_kw)
+            sched_n = simulate(rdfg, assignment, pipelining=False, **sim_kw)
             use_pipe = sched_p.total_cycles <= sched_n.total_cycles
             sched = sched_p if use_pipe else sched_n
         else:
             use_pipe = bool(self.pipelining)
-            sched = simulate(dfg, assignment, order=self.order,
-                             pipelining=use_pipe, groups=groups)
-        fused = pipeline_clusters(dfg, groups, assignment) if use_pipe else []
+            sched = simulate(rdfg, assignment, pipelining=use_pipe, **sim_kw)
+        fused = pipeline_clusters(rdfg, groups, assignment) if use_pipe else []
         qplan = None
         if self.precision != "float32":
             from repro.core import quantize as quantize_mod
 
             qplan = quantize_mod.calibrate(
-                dfg, calib, n_samples=self.calib_samples,
-                bits=quantize_mod.PRECISION_BITS[self.precision])
-        # the lowering pass pipeline runs ONCE here; every execution lane
+                rdfg, calib, n_samples=self.calib_samples,
+                bits=quantize_mod.PRECISION_BITS[self.precision],
+                per_channel=self.per_channel)
+        # the back-end plan pipeline runs ONCE here; every execution lane
         # (per-sample, vmap, map) interprets the resulting static plan.
-        plan = lower(dfg, fused_clusters=fused, use_pallas=self.use_pallas,
-                     precision=self.precision, qplan=qplan)
-        fn = build_callable(dfg, plan=plan)
+        plan = lower(rdfg, fused_clusters=fused, use_pallas=self.use_pallas,
+                     precision=self.precision, qplan=qplan, rewritten=rw,
+                     chain_split_bytes=self.chain_split_bytes)
+        fn = build_callable(rdfg, plan=plan)
         lut_true = sum(
-            node_types.get(n.op).lut(n.dims, assignment[n.id]) for n in dfg.nodes.values()
+            node_types.get(n.op).lut(n.dims, assignment[n.id])
+            for n in rdfg.nodes.values()
         )
         dsp_true = sum(
-            node_types.get(n.op).dsp(assignment[n.id]) for n in dfg.nodes.values()
+            node_types.get(n.op).dsp(assignment[n.id])
+            for n in rdfg.nodes.values()
         )
         return CompiledProgram(
-            dfg=dfg,
+            dfg=rdfg,
             fn=fn,
             assignment=assignment,
             pf_result=pf_result,
@@ -308,4 +357,6 @@ class MafiaCompiler:
             precision=self.precision,
             qplan=qplan,
             plan=plan,
+            source_dfg=dfg,
+            rewrite_result=rw,
         )

@@ -29,7 +29,35 @@ import numpy as np
 
 from repro.core import node_types
 
-__all__ = ["OpEstimator", "EstimatorBank", "train_estimators", "default_bank"]
+__all__ = ["OpEstimator", "EstimatorBank", "train_estimators", "default_bank",
+           "chain_live_bytes"]
+
+
+def chain_live_bytes(dfg, chain: list[str] | tuple[str, ...]) -> float:
+    """Peak live footprint of one fused stage chain, in bytes — the
+    VMEM/live-extras model behind cost-guided chain splitting.
+
+    A fused chain holds, simultaneously resident: the streaming tile, the
+    output tile, one full tile per ``*_arr`` extra edge (a second DFG input
+    to a binary stage) and one broadcast row per ``*_vec`` static operand.
+    The byte model mirrors the actual tiling of the pipeline kernel
+    (:func:`repro.kernels.linear_pipeline.chain_vmem_bytes`), so the budget
+    is stated in the same units the launch really occupies.
+    """
+    from repro.kernels.linear_pipeline import chain_vmem_bytes
+
+    n_vec = n_arr = 0
+    for nid in chain:
+        node = dfg.nodes[nid]
+        if node.op in ("add", "sub", "hadamard"):
+            if "vec" in node.params:
+                n_vec += 1
+            elif len(node.inputs) == 2:
+                n_arr += 1
+    n = 1
+    for s in dfg.out_shape(chain[-1]):
+        n *= int(s)
+    return float(chain_vmem_bytes(n, n_vec, n_arr))
 
 
 # Representative dimension sets per op family used for model training
@@ -56,6 +84,7 @@ _TRAIN_DIMS: dict[str, list[dict[str, int]]] = {
     "dot": [{"n": 64}, {"n": 400}, {"n": 1024}],
     "reduce_sum": [{"n": 64}, {"n": 400}],
     "argmax": [{"n": 8}, {"n": 64}],
+    "const": [{"n": 64}, {"n": 400}],
 }
 
 _PF_SWEEP_POINTS = 24

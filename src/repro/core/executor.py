@@ -27,7 +27,13 @@ import jax.numpy as jnp
 
 from repro.core import node_types
 from repro.core.dfg import DFG
-from repro.core.lowering import ChainStep, ExecutionPlan, NodeStep, lower
+from repro.core.lowering import (
+    ChainStep,
+    ExecutionPlan,
+    NodeStep,
+    _resolve,
+    lower,
+)
 
 __all__ = ["build_callable", "execute"]
 
@@ -93,6 +99,10 @@ def _interpret(
         )
     allowed = set(plan.dfg.graph_inputs)
     bits = plan.bits or 8
+    # output name -> env ref, resolved through the rewrite alias once here;
+    # plan.verify() already guaranteed every ref is produced (a dangling
+    # alias raises a ValueError at compile time, not a KeyError here).
+    out_refs = {out: _resolve(plan.alias, out) for out in plan.outputs}
 
     def run(**inputs: Any) -> dict[str, Any]:
         unknown = set(inputs) - allowed
@@ -109,12 +119,20 @@ def _interpret(
             }
         else:
             env = {k: jnp.asarray(v) for k, v in inputs.items()}
+        bdim = next((v.shape[0] for v in env.values()), None) if batch else None
 
         for step in plan.steps:
             if isinstance(step, NodeStep):
                 args = [env[r] for r in step.inputs]
-                env[step.nid] = (jax.vmap(step.fn)(*args) if batch
-                                 else step.fn(*args))
+                if batch and not step.inputs:
+                    # zero-input node (const): one value, broadcast over the
+                    # bucket so downstream vmapped templates see a batch axis.
+                    val = step.fn()
+                    env[step.nid] = (val if bdim is None
+                                     else jnp.broadcast_to(val, (bdim,) + val.shape))
+                else:
+                    env[step.nid] = (jax.vmap(step.fn)(*args) if batch
+                                     else step.fn(*args))
             else:  # pre-lowered fused chain: one pipeline kernel launch.
                 x = jnp.asarray(env[step.stream])
                 extras = [jnp.asarray(env[r]) for r in step.extras]
@@ -132,11 +150,11 @@ def _interpret(
 
         if quantized:
             return {
-                out: env[out] if plan.output_exps[out] is None
-                else quantize_mod.dequantize(env[out], plan.output_exps[out])
-                for out in plan.outputs
+                out: env[ref] if plan.output_exps[out] is None
+                else quantize_mod.dequantize(env[ref], plan.output_exps[out])
+                for out, ref in out_refs.items()
             }
-        return {out: env[out] for out in plan.outputs}
+        return {out: env[ref] for out, ref in out_refs.items()}
 
     return jax.jit(run) if jit else run
 

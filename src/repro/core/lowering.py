@@ -1,58 +1,77 @@
-"""Compile-time lowering pipeline: DFG → passes → static :class:`ExecutionPlan`.
+"""Compile-time lowering: front-end graph rewrite + back-end plan pipeline.
 
 MAFIA's pitch (paper §IV, Fig. 1) is that ML-specific *compile-time* analysis
 — not runtime dispatch — is what beats general HLS.  This module is that
-spine for the executor: a small pass pipeline
+spine, split in two so every later stage consumes one canonical graph:
 
-    validate → prune (dead-node / identity-fold) → quantize-rewrite →
-    cluster → chain-decompose → plan
+**Front-end rewrite pipeline** (:func:`rewrite`) — runs *before* the PF-1
+profiler, Best-PF optimizer and scheduler, and materializes the canonical
+rewritten DFG those stages score::
 
-runs **once** in :meth:`repro.core.compiler.MafiaCompiler.compile` and emits a
-static :class:`ExecutionPlan` — an ordered list of steps where each step is
-either a :class:`NodeStep` (resolved template fn with pre-bound quantization
-info) or a :class:`ChainStep` (a §IV-G linear-time chain fully pre-lowered to
-a fused-pipeline stage program, including the requantize shifts of the
-fixed-point lane).  :func:`repro.core.executor.build_callable` is then a thin
-interpreter over the plan: no atom re-sorting, no trace-time chain growth,
-no runtime dtype sniffing.
-
-Pass responsibilities:
+    validate → prune (dead-node / identity-fold) → constant-fold → CSE
 
 * **validate** — structural DFG validation (shapes, acyclicity).
-* **prune** — dead-node elimination (nodes unreachable from the outputs are
-  never executed) and identity folding (``scalar_mul`` by exactly 1.0
-  forwards its input; float lanes only, where ``x * 1.0`` is bitwise ``x``).
-  The DFG itself is untouched — scheduling and resource reports still see
-  every node; only the emitted plan shrinks.
-* **quantize-rewrite** — binds each live node to its execution mode:
-  ``float`` (float32 lane), ``q`` (integer template ``OpSpec.jax_fn_q``,
-  int32 accumulate + requantize-on-write) or ``dq`` (dequantize → float
-  template → requantize, MAFIA's table-based PEs).
+* **prune** — dead-node elimination (nodes unreachable from the outputs)
+  and identity folding (``scalar_mul`` by exactly 1.0 forwards its input;
+  float lanes only, where ``x * 1.0`` is bitwise ``x``).
+* **constant-fold** — evaluates any node whose inputs are all ``const``
+  nodes at compile time (static-param subgraphs collapse to one ``const``
+  per needed value; interior constants die).
+* **cse** — common-subexpression elimination: nodes with identical
+  ``(op, inputs, params, dims)`` merge into one (first in topo order wins;
+  output nodes are never merged away so output names survive).
+
+The result is a *new* DFG containing only nodes that execute — PF
+assignments, schedules and LUT/DSP reports refer to nothing else, and every
+estimator query shrinks with the graph.
+
+**Back-end plan pipeline** (the rest of :func:`lower`) — consumes the
+rewritten graph plus the scheduler's decisions and emits the static
+:class:`ExecutionPlan` the executor interprets::
+
+    quantize-rewrite → cluster → chain-decompose → plan
+
+* **quantize-rewrite** — binds each node to its execution mode: ``float``,
+  ``q`` (integer template ``OpSpec.jax_fn_q``, int32 accumulate +
+  requantize-on-write) or ``dq`` (dequantize → float template → requantize,
+  MAFIA's table-based PEs).
 * **cluster** — collapses the scheduler's §IV-G pipeline clusters into atoms
   and fixes the atom execution order (a cluster fires once all external
-  inputs are ready; a cycle *through* a cluster splits it back into nodes —
-  the start condition could never be met).
+  inputs are ready; a cycle *through* a cluster splits it back into nodes).
 * **chain-decompose** — decomposes each fused atom into stage *chains* (one
-  ``pallas_call`` each) plus direct member steps, entirely at compile time.
-  Quantized chains lower to the ``q_*`` stage vocabulary with static
-  requantize shifts, so fixed-point clusters run fused end-to-end instead of
-  declining to per-node eval.
+  ``pallas_call`` each) plus direct member steps, via the same structural
+  decomposition (:func:`cluster_chains`) the scheduler's pipelined-latency
+  model uses — estimated and simulated latency therefore agree with what
+  executes.  **Cost-guided chain splitting**: a VMEM/live-extras model
+  (:func:`repro.core.cost_model.chain_live_bytes`, built on the pipeline
+  kernel's actual tiling) bounds each chain's footprint; a chain over the
+  ``chain_split_bytes`` budget is split at the cheapest edge (the cut that
+  best balances the two halves' footprints), recursively.
 * **plan** — flattens atoms into the final step list and checks the plan
-  invariants (every live node produced exactly once; chain intermediates are
-  suppressed only when provably unconsumed).
+  invariants (every node produced exactly once; chain intermediates
+  suppressed only when provably unconsumed; every output resolvable).
+
+Both pipelines run under a :class:`PassManager` that records per-pass wall
+time (``ExecutionPlan.pass_timings``) and, with ``debug=True``, a per-pass
+dump of the evolving graph (``ExecutionPlan.dump``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
+import numpy as np
+
 from repro.core import node_types
-from repro.core.dfg import DFG
+from repro.core.dfg import DFG, Node
 
 __all__ = [
-    "NodeStep", "ChainStep", "ExecutionPlan", "lower", "PASS_NAMES",
-    "STAGEABLE_OPS",
+    "NodeStep", "ChainStep", "ExecutionPlan", "RewriteResult", "PassManager",
+    "rewrite", "lower", "cluster_chains", "split_chain",
+    "FRONTEND_PASSES", "BACKEND_PASSES", "PASS_NAMES", "STAGEABLE_OPS",
+    "DEFAULT_CHAIN_SPLIT_BYTES",
 ]
 
 # DFG ops expressible as fused pipeline stages (elementwise, no reduction).
@@ -64,8 +83,34 @@ _Q_BIN_ARR = {"add": "q_add_arr", "sub": "q_sub_arr", "hadamard": "q_hadamard_ar
 _Q_BIN_VEC = {"add": "q_add_vec", "sub": "q_sub_vec", "hadamard": "q_hadamard_vec"}
 _UNARY_OPS = ("tanh", "sigmoid", "relu", "exp")
 
-PASS_NAMES = ("validate", "prune", "quantize-rewrite", "cluster",
-              "chain-decompose", "plan")
+FRONTEND_PASSES = ("validate", "prune", "constant-fold", "cse")
+BACKEND_PASSES = ("quantize-rewrite", "cluster", "chain-decompose", "plan")
+PASS_NAMES = FRONTEND_PASSES + BACKEND_PASSES
+
+# Default per-chain footprint budget for cost-guided splitting: a quarter of
+# a ~16 MB VMEM, leaving room for double buffering and the matvec operands
+# that share the core.  None disables splitting.
+DEFAULT_CHAIN_SPLIT_BYTES: float = 4 * 1024 * 1024
+
+
+# ------------------------------------------------------------- pass manager
+class PassManager:
+    """Tiny orchestrator: runs named passes, records per-pass wall time and
+    (optionally) a one-line debug dump of the state after each pass."""
+
+    def __init__(self, debug: bool = False) -> None:
+        self.debug = debug
+        self.timings: list[tuple[str, float]] = []
+        self.dumps: list[str] = []
+
+    def run(self, name: str, fn: Callable[[Any], Any], state: Any) -> Any:
+        t0 = time.perf_counter()
+        out = fn(state)
+        self.timings.append((name, time.perf_counter() - t0))
+        if self.debug:
+            desc = getattr(state, "describe", lambda: "")()
+            self.dumps.append(f"{name}: {desc}")
+        return out
 
 
 # ------------------------------------------------------------------- steps
@@ -80,7 +125,7 @@ class NodeStep:
     """
 
     nid: str
-    inputs: tuple[str, ...]          # resolved env refs (post identity-fold)
+    inputs: tuple[str, ...]          # env refs (graph inputs or node ids)
     fn: Callable[..., Any]
     mode: str = "float"              # float | q | dq
 
@@ -110,22 +155,28 @@ class ChainStep:
 class ExecutionPlan:
     """Static execution plan: everything the interpreter needs, resolved.
 
-    The plan is per (DFG, fused_clusters, use_pallas, precision) — the
-    per-sample, vmap and map lanes all interpret the same plan, which is what
-    makes them agree (bitwise at fixed point)."""
+    ``dfg`` is the canonical *rewritten* graph — the same graph the
+    optimizer and scheduler scored.  The plan is per (DFG, fused_clusters,
+    use_pallas, precision) — the per-sample, vmap and map lanes all
+    interpret the same plan, which is what makes them agree (bitwise at
+    fixed point)."""
 
-    dfg: DFG
+    dfg: DFG                         # canonical rewritten graph
     steps: tuple[NodeStep | ChainStep, ...]
-    outputs: tuple[str, ...]
+    outputs: tuple[str, ...]         # original output names (pre-rewrite)
     precision: str
     bits: int | None                 # activation width (int lanes), else None
     qplan: Any | None
     use_pallas: bool
     input_exps: dict[str, int] | None     # input quantization (int lanes)
     output_exps: dict[str, int | None] | None  # None exp = integer passthrough
-    alias: dict[str, str]            # folded node id -> forwarded env ref
+    alias: dict[str, str]            # rewritten-away node id -> env ref
     pruned: tuple[str, ...]          # dead node ids never executed
     cluster_splits: int              # clusters split by the cycle fallback
+    folded: tuple[str, ...] = ()     # nodes evaluated away at compile time
+    chain_splits: int = 0            # chains cut by the cost-guided splitter
+    pass_timings: tuple[tuple[str, float], ...] = ()
+    dump: tuple[str, ...] = ()       # per-pass debug dump (debug=True only)
 
     @property
     def chain_steps(self) -> list[ChainStep]:
@@ -141,12 +192,16 @@ class ExecutionPlan:
                 f"steps, {len(ch)} fused chains "
                 f"({sum(len(c.members) for c in ch)} nodes), "
                 f"{len(self.pruned)} pruned, {len(self.alias)} folded, "
+                f"{len(self.folded)} const-folded, "
+                f"{self.chain_splits} chain splits, "
                 f"precision={self.precision})")
 
     def verify(self) -> None:
         """Assert the compile-time invariants the old executor re-derived at
-        trace time: complete single-assignment coverage of the live graph,
-        and chain intermediates suppressed only when provably unconsumed."""
+        trace time: complete single-assignment coverage of the rewritten
+        graph, chain intermediates suppressed only when provably unconsumed,
+        and — the one a pass bug would otherwise turn into a KeyError deep
+        in the executor — every output resolving to a produced value."""
         produced: list[str] = []
         for step in self.steps:
             if isinstance(step, NodeStep):
@@ -156,20 +211,32 @@ class ExecutionPlan:
         dup = {n for n in produced if produced.count(n) > 1}
         if dup:
             raise AssertionError(f"plan produces nodes twice: {sorted(dup)}")
-        live = set(self.dfg.nodes) - set(self.pruned) - set(self.alias)
+        live = set(self.dfg.nodes)
         if set(produced) != live:
             raise AssertionError(
                 f"plan covers {sorted(set(produced))} but live set is {sorted(live)}")
-        # consumers over resolved edges, dead edges excluded
+        # every output must resolve (through the rewrite alias) to a value
+        # the interpreter will hold: a produced node or a graph input.
+        dangling = sorted(
+            out for out in self.outputs
+            if _resolve(self.alias, out) not in live
+            and _resolve(self.alias, out) not in self.dfg.graph_inputs)
+        if dangling:
+            raise ValueError(
+                f"outputs {dangling} resolve to values the plan never "
+                f"produces (alias chain ends outside the rewritten graph) — "
+                f"a rewrite pass dropped a node an output depends on")
+        # consumers over the rewritten graph's edges
         consumers: dict[str, set[str]] = {}
         for nid in live:
             for src in self.dfg.nodes[nid].inputs:
-                consumers.setdefault(_resolve(self.alias, src), set()).add(nid)
+                consumers.setdefault(src, set()).add(nid)
+        out_refs = {_resolve(self.alias, out) for out in self.outputs}
         for step in self.chain_steps:
             for i, nid in enumerate(step.dead):
                 nxt = step.members[step.members.index(nid) + 1]
                 outside = consumers.get(nid, set()) - {nxt}
-                if nid in self.outputs or outside:
+                if nid in out_refs or outside:
                     raise AssertionError(
                         f"chain suppresses {nid!r} but it is consumed by "
                         f"{sorted(outside) or 'outputs'}")
@@ -181,58 +248,71 @@ def _resolve(alias: dict[str, str], ref: str) -> str:
     return ref
 
 
-# ---------------------------------------------------------------- lowering
-class _Lowering:
-    """Mutable pass-pipeline state; each pass reads the previous one's
-    fields and fills its own."""
+# ================================================================ front-end
+@dataclasses.dataclass
+class RewriteResult:
+    """Outcome of the front-end rewrite pipeline.
 
-    def __init__(self, dfg: DFG, fused_clusters, use_pallas: bool,
-                 precision: str, qplan) -> None:
-        self.dfg = dfg
-        self.fused_clusters = [list(c) for c in (fused_clusters or [])]
-        self.use_pallas = use_pallas
+    ``dfg`` is the canonical graph every later stage consumes; node ids are
+    preserved from ``source`` (constant-folding rewrites a node in place to
+    ``const``, it never invents ids), so external PF assignments and the
+    quant plan remain addressable."""
+
+    source: DFG
+    dfg: DFG
+    alias: dict[str, str]            # removed node id -> surviving env ref
+    pruned: tuple[str, ...]          # dead code (unreachable from outputs)
+    folded: tuple[str, ...]          # evaluated away at compile time
+    timings: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+    dumps: list[str] = dataclasses.field(default_factory=list)
+
+
+class _Rewrite:
+    """Mutable front-end state; the source DFG is never modified — const
+    rewrites live in ``repl`` until materialization."""
+
+    def __init__(self, dfg: DFG, precision: str) -> None:
+        self.source = dfg
         self.precision = precision
-        self.qplan = qplan
-        self.bits: int | None = None
+        self.repl: dict[str, Node] = {}      # const-fold rewrites, by id
         self.alias: dict[str, str] = {}
         self.live: set[str] = set()
-        self.mode: dict[str, str] = {}
         self.topo: list[str] = []
-        self.succ: dict[str, list[str]] = {}
-        self.atoms: list[tuple[str, ...]] = []
-        self.cluster_splits = 0
-        self.steps: list[NodeStep | ChainStep] = []
+        self.pruned: set[str] = set()
+        self.folded: set[str] = set()
 
-    # -------------------------------------------------------------- helpers
+    def node(self, nid: str) -> Node:
+        return self.repl.get(nid) or self.source.nodes[nid]
+
     def ref(self, src: str) -> str:
         return _resolve(self.alias, src)
 
     def rinputs(self, nid: str) -> list[str]:
-        return [self.ref(s) for s in self.dfg.nodes[nid].inputs]
+        return [self.ref(s) for s in self.node(nid).inputs]
 
-    def deps(self, nid: str) -> set[str]:
-        """Live node-dependencies of ``nid`` (graph inputs excluded)."""
-        return {r for r in self.rinputs(nid) if r in self.dfg.nodes}
+    def recompute_live(self) -> None:
+        live: set[str] = set()
+        stack = [self.ref(o) for o in self.source.outputs]
+        while stack:
+            nid = stack.pop()
+            if nid in live or nid not in self.source.nodes:
+                continue
+            live.add(nid)
+            stack.extend(self.rinputs(nid))
+        self.live = live
+        self.topo = [n for n in self.source.topo_order() if n in live]
 
-
-# pass 1 ------------------------------------------------------------------
-def _pass_validate(st: _Lowering) -> None:
-    st.dfg.validate()
-    if st.precision != "float32":
-        from repro.core import quantize as qm
-
-        if st.precision not in qm.PRECISION_BITS:
-            raise ValueError(f"unknown precision {st.precision!r}")
-        if st.qplan is None:
-            raise ValueError(
-                f"precision={st.precision!r} requires a QuantPlan — see "
-                "repro.core.quantize.calibrate")
-        st.bits = getattr(st.qplan, "bits", qm.PRECISION_BITS[st.precision])
+    def describe(self) -> str:
+        return (f"{len(self.live)} live / {len(self.source.nodes)} nodes, "
+                f"{len(self.alias)} aliased, {len(self.folded)} folded")
 
 
-# pass 2 ------------------------------------------------------------------
-def _pass_prune(st: _Lowering) -> None:
-    dfg = st.dfg
+def _fe_validate(st: _Rewrite) -> None:
+    st.source.validate()
+
+
+def _fe_prune(st: _Rewrite) -> None:
+    dfg = st.source
     if st.precision == "float32":
         # identity fold: x * 1.0 is bitwise x in float32 — forward the input.
         # (Fixed-point lanes keep the node: its requantize can change scale.)
@@ -240,41 +320,274 @@ def _pass_prune(st: _Lowering) -> None:
             if (node.op == "scalar_mul" and nid not in dfg.outputs
                     and float(node.params["scalar"]) == 1.0):
                 st.alias[nid] = node.inputs[0]
-    live: set[str] = set()
-    stack = [st.ref(o) for o in dfg.outputs]
-    while stack:
-        nid = stack.pop()
-        if nid in live or nid not in dfg.nodes:
-            continue
-        live.add(nid)
-        stack.extend(st.rinputs(nid))
-    st.live = live
-    st.topo = [n for n in dfg.topo_order() if n in live]
-    st.succ = {}
+    st.recompute_live()
+    st.pruned = set(dfg.nodes) - st.live - set(st.alias)
+
+
+def _fe_constant_fold(st: _Rewrite) -> None:
+    """Evaluate static-param subgraphs at compile time: any node whose
+    (resolved) inputs are all ``const`` nodes becomes a ``const`` holding
+    its value; interior constants lose their last consumer and die.  The
+    evaluation runs the same jnp templates the executor would, so folding
+    is bitwise-neutral."""
+    import jax.numpy as jnp
+
+    before = set(st.live)
     for nid in st.topo:
-        for r in st.rinputs(nid):
-            st.succ.setdefault(r, []).append(nid)
+        node = st.node(nid)
+        if node.op == "const" or not node.inputs:
+            continue
+        rin = st.rinputs(nid)
+        if not all(r in st.source.nodes and st.node(r).op == "const"
+                   for r in rin):
+            continue
+        spec = node_types.get(node.op)
+        vals = [jnp.asarray(st.node(r).params["value"]) for r in rin]
+        out = np.asarray(spec.jax_fn(vals, node.params, node.dims))
+        st.repl[nid] = Node(id=nid, op="const", dims={"n": int(out.size)},
+                            inputs=[], params={"value": out})
+    st.recompute_live()
+    # constants consumed into a fold are *folded*, not dead code
+    st.folded = before - st.live
 
 
-# pass 3 ------------------------------------------------------------------
+def _fe_cse(st: _Rewrite) -> None:
+    """Value-number the live graph: nodes computing the identical
+    ``(op, inputs, params, dims)`` merge into the first occurrence.  Output
+    nodes are never merged away (their names must survive)."""
+    seen: dict[Any, str] = {}
+    outputs = set(st.source.outputs)
+    for nid in st.topo:
+        node = st.node(nid)
+        key = (node.op, tuple(st.rinputs(nid)),
+               tuple(sorted(node.dims.items())), _fingerprint(node.params))
+        rep = seen.get(key)
+        if rep is not None and nid not in outputs:
+            st.alias[nid] = rep
+        elif rep is None:
+            seen[key] = nid
+    st.recompute_live()
+
+
+def _fingerprint(params: dict[str, Any]) -> tuple:
+    items: list[tuple] = []
+    for k in sorted(params):
+        v = params[k]
+        if isinstance(v, (int, float, bool, str)):
+            items.append((k, type(v).__name__, v))
+        else:
+            a = np.asarray(v)
+            items.append((k, a.dtype.str, a.shape, a.tobytes()))
+    return tuple(items)
+
+
+def _fe_materialize(st: _Rewrite) -> DFG:
+    """Build the canonical rewritten DFG: live nodes only, inputs resolved
+    through the alias map, profiler/optimizer tags reset."""
+    new = DFG(st.source.name)
+    new.graph_inputs = dict(st.source.graph_inputs)
+    for nid in st.topo:
+        node = st.node(nid)
+        new.nodes[nid] = dataclasses.replace(
+            node, dims=dict(node.dims), inputs=[st.ref(s) for s in node.inputs],
+            latency1=None, lut1=None, pf=1)
+    new.outputs = list(st.source.outputs)
+    return new
+
+
+def rewrite(dfg: DFG, *, precision: str = "float32",
+            pm: PassManager | None = None) -> RewriteResult:
+    """Run the front-end rewrite pipeline and materialize the canonical
+    graph.  This is the *first* thing :meth:`MafiaCompiler.compile` does —
+    the profiler, optimizer, scheduler and quantizer all consume the
+    result, so their PF assignments, schedules and resource reports refer
+    only to nodes that actually execute."""
+    pm = pm or PassManager()
+    st = _Rewrite(dfg, precision)
+    pm.run("validate", _fe_validate, st)
+    pm.run("prune", _fe_prune, st)
+    pm.run("constant-fold", _fe_constant_fold, st)
+    pm.run("cse", _fe_cse, st)
+    new = _fe_materialize(st)
+    # pruned = original nodes gone for any reason except alias/fold
+    pruned = set(dfg.nodes) - set(new.nodes) - set(st.alias) - st.folded
+    return RewriteResult(
+        source=dfg, dfg=new, alias=dict(st.alias),
+        pruned=tuple(sorted(pruned)), folded=tuple(sorted(st.folded)),
+        timings=list(pm.timings), dumps=list(pm.dumps))
+
+
+# ===================================================== structural chains
+def _needed_outside(dfg: DFG, succ: dict[str, list[str]], nid: str,
+                    chain_next: str | None) -> bool:
+    """True if ``nid``'s value is consumed anywhere other than ``chain_next``
+    (outputs always count)."""
+    if nid in dfg.outputs:
+        return True
+    return any(s != chain_next for s in succ.get(nid, []))
+
+
+def split_chain(dfg: DFG, chain: list[str],
+                budget: float | None) -> list[list[str]]:
+    """Cost-guided chain splitting: while a chain's modeled live footprint
+    (:func:`repro.core.cost_model.chain_live_bytes`) exceeds ``budget``,
+    cut it at the cheapest edge — the cut that minimizes the larger half's
+    footprint (ties to the earliest edge) — and recurse.  ``budget=None``
+    keeps chains maximal (the pre-split behaviour)."""
+    if budget is None or len(chain) < 2:
+        return [chain]
+    from repro.core.cost_model import chain_live_bytes
+
+    if chain_live_bytes(dfg, chain) <= budget:
+        return [chain]
+    best_i, best_cost = 1, None
+    for i in range(1, len(chain)):
+        cost = max(chain_live_bytes(dfg, chain[:i]),
+                   chain_live_bytes(dfg, chain[i:]))
+        if best_cost is None or cost < best_cost:
+            best_i, best_cost = i, cost
+    return (split_chain(dfg, chain[:best_i], budget)
+            + split_chain(dfg, chain[best_i:], budget))
+
+
+def cluster_chains(
+    dfg: DFG,
+    members: list[str] | tuple[str, ...],
+    *,
+    succ: dict[str, list[str]],
+    topo_idx: dict[str, int],
+    split_bytes: float | None = None,
+) -> list[tuple[str, tuple[tuple[str, ...], ...]]]:
+    """Structural §IV-G decomposition of one fused cluster into pipeline
+    chains and direct nodes, in data-ready order.
+
+    Shared by the back-end chain-decompose pass (which lowers each chain to
+    a stage program) and the scheduler's pipelined-latency model (which
+    costs each unit) — the single source of truth that keeps estimated and
+    executed latency consistent.  Returns units:
+
+    * ``("node", ((nid,),))`` — a direct (non-stageable) member;
+    * ``("chain", (sub1, sub2, ...))`` — one maximal grown chain, already
+      cut into sub-chains by cost-guided splitting (``split_bytes``); an
+      unsplit chain has exactly one sub-chain.  Each sub-chain is one
+      kernel launch; ``sub_k+1`` streams from ``sub_k``'s terminal.
+    """
+    mset = set(members)
+    topo = sorted(members, key=topo_idx.__getitem__)
+    units: list[tuple[str, tuple[tuple[str, ...], ...]]] = []
+    produced: set[str] = set()
+
+    def deps(nid: str) -> list[str]:
+        return [p for p in dfg.nodes[nid].inputs if p in dfg.nodes]
+
+    def ready(nid: str) -> bool:
+        return all((p not in mset) or (p in produced) for p in deps(nid))
+
+    pending = list(topo)
+    while pending:
+        head = next(n for n in pending if ready(n))
+        pending.remove(n := head)
+        if dfg.nodes[n].op not in STAGEABLE_OPS:
+            units.append(("node", ((n,),)))
+            produced.add(n)
+            continue
+        # ---- grow a maximal chain starting at `n` (static: order only)
+        chain = [n]
+        while True:
+            tail = chain[-1]
+            nxts = [
+                s
+                for s in succ.get(tail, [])
+                if s in mset
+                and s in pending
+                and dfg.nodes[s].op in STAGEABLE_OPS
+                and all(
+                    p == tail or (p not in mset) or (p in produced)
+                    for p in dfg.nodes[s].inputs
+                )
+            ]
+            if len(set(nxts)) != 1:
+                break
+            nxt = nxts[0]
+            # the tail's value must not be needed anywhere except `nxt`
+            if _needed_outside(dfg, succ, tail, chain_next=nxt):
+                break
+            chain.append(nxt)
+            pending.remove(nxt)
+        subs = tuple(tuple(s) for s in split_chain(dfg, chain, split_bytes))
+        units.append(("chain", subs))
+        produced.update(chain)
+    return units
+
+
+# ================================================================= back-end
+class _Lowering:
+    """Mutable back-end state over the canonical rewritten graph; each pass
+    reads the previous one's fields and fills its own."""
+
+    def __init__(self, rw: RewriteResult, fused_clusters, use_pallas: bool,
+                 precision: str, qplan, chain_split_bytes: float | None) -> None:
+        self.rw = rw
+        self.dfg = rw.dfg
+        self.fused_clusters = [list(c) for c in (fused_clusters or [])]
+        self.use_pallas = use_pallas
+        self.precision = precision
+        self.qplan = qplan
+        self.chain_split_bytes = chain_split_bytes
+        self.bits: int | None = None
+        self.mode: dict[str, str] = {}
+        self.topo: list[str] = self.dfg.topo_order()
+        self.succ: dict[str, list[str]] = {}
+        for nid in self.topo:
+            for r in self.dfg.nodes[nid].inputs:
+                self.succ.setdefault(r, []).append(nid)
+        self.atoms: list[tuple[str, ...]] = []
+        self.cluster_splits = 0
+        self.chain_splits = 0
+        self.steps: list[NodeStep | ChainStep] = []
+
+    def rinputs(self, nid: str) -> list[str]:
+        return list(self.dfg.nodes[nid].inputs)
+
+    def deps(self, nid: str) -> set[str]:
+        """Node-dependencies of ``nid`` (graph inputs excluded)."""
+        return {r for r in self.rinputs(nid) if r in self.dfg.nodes}
+
+    def describe(self) -> str:
+        ch = [s for s in self.steps if isinstance(s, ChainStep)]
+        return (f"{len(self.atoms)} atoms, {len(self.steps)} steps "
+                f"({len(ch)} chains), {self.chain_splits} chain splits")
+
+
+# pass: quantize-rewrite --------------------------------------------------
 def _pass_quantize_rewrite(st: _Lowering) -> None:
     if st.precision == "float32":
-        st.mode = {nid: "float" for nid in st.live}
+        st.mode = {nid: "float" for nid in st.topo}
         return
+    from repro.core import quantize as qm
+
+    if st.precision not in qm.PRECISION_BITS:
+        raise ValueError(f"unknown precision {st.precision!r}")
+    if st.qplan is None:
+        raise ValueError(
+            f"precision={st.precision!r} requires a QuantPlan — see "
+            "repro.core.quantize.calibrate")
+    st.bits = getattr(st.qplan, "bits", qm.PRECISION_BITS[st.precision])
     for nid in st.topo:
         spec = node_types.get(st.dfg.nodes[nid].op)
         st.mode[nid] = "q" if spec.jax_fn_q is not None else "dq"
 
 
-# pass 4 ------------------------------------------------------------------
+# pass: cluster -----------------------------------------------------------
 def _pass_cluster(st: _Lowering) -> None:
     """Fix the atom execution order: a fused cluster fires only once all of
     its external inputs are available (§IV-G pipeline start condition); a
     cycle *through* a cluster splits it back into per-node atoms."""
+    alias = st.rw.alias
     clusters: list[list[str]] = []
     topo_idx = {nid: i for i, nid in enumerate(st.topo)}
     for mem in st.fused_clusters:
-        mem_live = sorted((n for n in mem if n in st.live),
+        mem_live = sorted({_resolve(alias, n) for n in mem} & set(st.dfg.nodes),
                           key=topo_idx.__getitem__)
         if len(mem_live) >= 2:
             clusters.append(mem_live)
@@ -311,7 +624,7 @@ def _pass_cluster(st: _Lowering) -> None:
     st.atoms = atoms
 
 
-# pass 5 ------------------------------------------------------------------
+# pass: chain-decompose ---------------------------------------------------
 def _node_step(st: _Lowering, nid: str) -> NodeStep:
     node = st.dfg.nodes[nid]
     spec = node_types.get(node.op)
@@ -337,14 +650,6 @@ def _node_step(st: _Lowering, nid: str) -> NodeStep:
             return qm.quantize_jnp(out, nq.out_exp, bits)
 
     return NodeStep(nid=nid, inputs=tuple(st.rinputs(nid)), fn=fn, mode=mode)
-
-
-def _needed_outside(st: _Lowering, nid: str, chain_next: str | None) -> bool:
-    """True if ``nid``'s value is consumed anywhere other than ``chain_next``
-    (dead consumers were pruned; outputs always count)."""
-    if nid in st.dfg.outputs:
-        return True
-    return any(s != chain_next for s in st.succ.get(nid, []))
 
 
 def _lower_stage_float(st: _Lowering, nid: str, prev: str | None,
@@ -435,109 +740,94 @@ def _lower_stage_q(st: _Lowering, nid: str, prev: str | None,
     return None
 
 
-def _decompose_atom(st: _Lowering, atom: tuple[str, ...]) -> list[NodeStep | ChainStep]:
-    """Compile-time twin of the old trace-time ``try_fuse_linear_cluster``:
-    decompose a fused cluster into stage chains (one kernel launch each) plus
-    direct steps for reduction-flavoured members, in data-ready order."""
-    mset = set(atom)
-    topo_idx = {nid: i for i, nid in enumerate(st.topo)}
-    topo = sorted(atom, key=topo_idx.__getitem__)
+def _lower_chain(st: _Lowering, chain: tuple[str, ...],
+                 hint: str | None) -> ChainStep | None:
+    """Lower one structural chain to a static stage program.  ``hint`` is
+    the env ref feeding the chain when it continues a split predecessor
+    (the previous sub-chain's terminal); None for a chain head."""
     quantized = st.precision != "float32"
-    if not any(st.dfg.nodes[n].op in STAGEABLE_OPS for n in topo):
-        return [_node_step(st, nid) for nid in topo]
-
-    steps: list[NodeStep | ChainStep] = []
-    produced: set[str] = set()
-
-    def ready(nid: str) -> bool:
-        return all((p not in mset) or (p in produced) for p in st.deps(nid))
-
-    pending = list(topo)
-    while pending:
-        head = next(n for n in pending if ready(n))
-        pending.remove(n := head)
-        node = st.dfg.nodes[n]
-        if node.op not in STAGEABLE_OPS:
-            steps.append(_node_step(st, n))
-            produced.add(n)
-            continue
-
-        # ---- grow a chain starting at `n` (static: only order matters)
-        chain = [n]
-        while True:
-            tail = chain[-1]
-            nxts = [
-                s
-                for s in st.succ.get(tail, [])
-                if s in mset
-                and s in pending
-                and st.dfg.nodes[s].op in STAGEABLE_OPS
-                and all(
-                    p == tail or (p not in mset) or (p in produced)
-                    for p in st.rinputs(s)
-                )
-            ]
-            if len(set(nxts)) != 1:
-                break
-            nxt = nxts[0]
-            # the tail's value must not be needed anywhere except `nxt`
-            if _needed_outside(st, tail, chain_next=nxt):
-                break
-            chain.append(nxt)
-            pending.remove(nxt)
-
-        # ---- lower the chain to a static stage program
-        first = st.dfg.nodes[chain[0]]
+    first = st.dfg.nodes[chain[0]]
+    if hint is not None:
+        stream_src: str | None = hint
+        prev: str | None = hint
+    else:
         stream_src = st.rinputs(chain[0])[0] if first.inputs else None
-        stages: list[Any] = []
-        extras: list[str] = []
-        vecs: list[Any] = []
-        ok = True
-        prev: str | None = None
-        for nid in chain:
-            lowered = (
-                _lower_stage_q(st, nid, prev, stream_src, extras, vecs)
-                if quantized else
-                _lower_stage_float(st, nid, prev, stream_src, extras))
-            if lowered is None:
-                ok = False
-                break
-            stage, stream_src = lowered
-            stages.append(stage)
-            prev = nid
-        if not ok or stream_src is None or len(chain) < 1:
-            # bail out: evaluate the whole chain node-by-node
-            for nid in chain:
-                steps.append(_node_step(st, nid))
-                produced.add(nid)
+        prev = None
+    stages: list[Any] = []
+    extras: list[str] = []
+    vecs: list[Any] = []
+    for nid in chain:
+        lowered = (
+            _lower_stage_q(st, nid, prev, stream_src, extras, vecs)
+            if quantized else
+            _lower_stage_float(st, nid, prev, stream_src, extras))
+        if lowered is None:
+            return None
+        stage, stream_src = lowered
+        stages.append(stage)
+        prev = nid
+    if stream_src is None:
+        return None
+    dead = tuple(chain[:-1])
+    for i, nid in enumerate(dead):
+        # provably never read: growth only extended past `nid` after
+        # checking its sole consumer is the next chain element, and
+        # splitting always publishes sub-chain terminals.
+        assert not _needed_outside(st.dfg, st.succ, nid, chain_next=chain[i + 1])
+    return ChainStep(
+        members=tuple(chain), stream=stream_src, stages=tuple(stages),
+        extras=tuple(extras), vecs=tuple(vecs), terminal=chain[-1],
+        dead=dead, quantized=quantized)
+
+
+def _decompose_atom(st: _Lowering, atom: tuple[str, ...],
+                    topo_idx: dict[str, int]) -> list[NodeStep | ChainStep]:
+    """Decompose a fused cluster into stage chains (one kernel launch each)
+    plus direct steps, using the structural decomposition shared with the
+    scheduler's latency model (:func:`cluster_chains`)."""
+    if not any(st.dfg.nodes[n].op in STAGEABLE_OPS for n in atom):
+        topo = sorted(atom, key=topo_idx.__getitem__)
+        return [_node_step(st, nid) for nid in topo]
+    units = cluster_chains(st.dfg, atom, succ=st.succ, topo_idx=topo_idx,
+                           split_bytes=st.chain_split_bytes)
+    steps: list[NodeStep | ChainStep] = []
+    for kind, subs in units:
+        if kind == "node":
+            steps.append(_node_step(st, subs[0][0]))
             continue
-        dead = tuple(chain[:-1])
-        for i, nid in enumerate(dead):
-            # provably never read: growth only extended past `nid` after
-            # checking its sole consumer is the next chain element.
-            assert not _needed_outside(st, nid, chain_next=chain[i + 1])
-        steps.append(ChainStep(
-            members=tuple(chain), stream=stream_src, stages=tuple(stages),
-            extras=tuple(extras), vecs=tuple(vecs), terminal=chain[-1],
-            dead=dead, quantized=quantized))
-        produced.update(chain)
+        st.chain_splits += len(subs) - 1
+        hint: str | None = None          # sub_k+1 streams from sub_k's tail
+        for sub in subs:
+            chain_step = _lower_chain(st, sub, hint)
+            if chain_step is None:
+                # bail out: evaluate the whole sub-chain node-by-node
+                steps.extend(_node_step(st, nid) for nid in sub)
+            else:
+                steps.append(chain_step)
+            hint = sub[-1]
     return steps
 
 
 def _pass_chain_decompose(st: _Lowering) -> None:
+    topo_idx = {nid: i for i, nid in enumerate(st.topo)}
     for atom in st.atoms:
         if len(atom) > 1 and st.use_pallas:
-            st.steps.extend(_decompose_atom(st, atom))
+            st.steps.extend(_decompose_atom(st, atom, topo_idx))
         else:
-            st.steps.extend(_node_step(st, nid) for nid in atom)
+            for nid in sorted(atom, key=topo_idx.__getitem__):
+                st.steps.append(_node_step(st, nid))
 
 
-# pass 6 ------------------------------------------------------------------
+# pass: plan --------------------------------------------------------------
 def _pass_plan(st: _Lowering) -> ExecutionPlan:
     input_exps = output_exps = None
+    alias = st.rw.alias
     if st.precision != "float32":
         input_exps = dict(st.qplan.input_exps)
-        output_exps = {o: st.qplan.nodes[o].out_exp for o in st.dfg.outputs}
+        output_exps = {
+            o: st.qplan.nodes[_resolve(alias, o)].out_exp
+            for o in st.dfg.outputs
+        }
     plan = ExecutionPlan(
         dfg=st.dfg,
         steps=tuple(st.steps),
@@ -548,9 +838,11 @@ def _pass_plan(st: _Lowering) -> ExecutionPlan:
         use_pallas=st.use_pallas,
         input_exps=input_exps,
         output_exps=output_exps,
-        alias=dict(st.alias),
-        pruned=tuple(sorted(set(st.dfg.nodes) - st.live - set(st.alias))),
+        alias=dict(alias),
+        pruned=tuple(st.rw.pruned),
         cluster_splits=st.cluster_splits,
+        folded=tuple(st.rw.folded),
+        chain_splits=st.chain_splits,
     )
     plan.verify()
     return plan
@@ -564,17 +856,36 @@ def lower(
     use_pallas: bool = False,
     precision: str = "float32",
     qplan: Any | None = None,
+    rewritten: RewriteResult | None = None,
+    chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
+    debug: bool = False,
 ) -> ExecutionPlan:
-    """Run the pass pipeline once and return the static execution plan."""
+    """Run the full pass pipeline and return the static execution plan.
+
+    ``rewritten`` short-circuits the front-end when the caller (the
+    compiler) already ran :func:`rewrite` — the optimizer and scheduler
+    consumed that exact graph, so re-running the front-end here could only
+    disagree.  Direct callers (tests, ``build_callable`` without a plan)
+    get the front-end implicitly.
+    """
     if precision != "float32":
         from repro.core import quantize as qm
 
         if precision not in qm.PRECISION_BITS:
             raise ValueError(f"unknown precision {precision!r}")
-    st = _Lowering(dfg, fused_clusters, use_pallas, precision, qplan)
-    _pass_validate(st)
-    _pass_prune(st)
-    _pass_quantize_rewrite(st)
-    _pass_cluster(st)
-    _pass_chain_decompose(st)
-    return _pass_plan(st)
+    pm = PassManager(debug=debug)
+    if rewritten is None:
+        rewritten = rewrite(dfg, precision=precision, pm=pm)
+    st = _Lowering(rewritten, fused_clusters, use_pallas, precision, qplan,
+                   chain_split_bytes)
+    pm.run("quantize-rewrite", _pass_quantize_rewrite, st)
+    pm.run("cluster", _pass_cluster, st)
+    pm.run("chain-decompose", _pass_chain_decompose, st)
+    plan = pm.run("plan", _pass_plan, st)
+    # front-end timings come first, whether run here or by the compiler
+    fe = [t for t in rewritten.timings if t[0] in FRONTEND_PASSES]
+    be = [t for t in pm.timings if t[0] in BACKEND_PASSES]
+    plan.pass_timings = tuple(fe + be)
+    plan.dump = tuple(rewritten.dumps + [d for d in pm.dumps
+                                         if d.split(":")[0] in BACKEND_PASSES])
+    return plan

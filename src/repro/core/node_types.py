@@ -172,18 +172,46 @@ def _q_scalar_mul(inputs, params, dims, nq):
 
 def _q_matvec(inputs, params, dims, nq):
     """Integer gemv/spmv: narrow×narrow MACs accumulated in int32 (the widened
-    accumulator of the fixed-point MAC PE), one requantize per output row."""
+    accumulator of the fixed-point MAC PE), one requantize per output row.
+
+    With per-channel scales (``calibrate(per_channel=True)``) the matrix
+    exponent is an array of one exponent per output row; each row's
+    accumulator then takes its own static requantizing shift — still plain
+    arithmetic shifts, just one constant per row instead of one per tensor."""
     jnp = _jnp()
     Wq = jnp.asarray(nq.params_q["matrix"], jnp.int32)
     acc = Wq @ jnp.asarray(inputs[0], jnp.int32).ravel()
-    return _requantize(acc, nq.param_exps["matrix"] + nq.in_exps[0] - nq.out_exp,
-                       nq.bits)
+    e_w = nq.param_exps["matrix"]
+    if np.ndim(e_w):                       # per-channel (per-output-row)
+        from repro.core.quantize import requantize_rows
+
+        shifts = np.asarray(e_w, np.int64) + nq.in_exps[0] - nq.out_exp
+        return requantize_rows(acc, shifts, nq.bits)
+    return _requantize(acc, e_w + nq.in_exps[0] - nq.out_exp, nq.bits)
 
 
 def _q_matmul(inputs, params, dims, nq):
     jnp = _jnp()
     acc = jnp.asarray(inputs[0], jnp.int32) @ jnp.asarray(inputs[1], jnp.int32)
     return _requantize(acc, nq.in_exps[0] + nq.in_exps[1] - nq.out_exp, nq.bits)
+
+
+def _q_const(inputs, params, dims, nq):
+    """Fixed-point constant: the pre-quantized value, aligned to the node's
+    calibrated output format (the two exponents coincide in practice — both
+    derive from the same max-abs — so this is usually a zero shift).  When
+    the quant plan predates constant-folding (it was calibrated against the
+    node's original op), quantize the folded value at the node's calibrated
+    output scale instead."""
+    jnp = _jnp()
+    if nq.out_exp is None:                 # integer constant passes through
+        return jnp.asarray(params["value"])
+    if "value" in nq.params_q:
+        q = jnp.asarray(nq.params_q["value"], jnp.int32)
+        return _requantize(q, nq.param_exps["value"] - nq.out_exp, nq.bits)
+    from repro.core.quantize import quantize_jnp
+
+    return quantize_jnp(jnp.asarray(params["value"]), nq.out_exp, nq.bits)
 
 
 # ----------------------------------------------------------------- elementwise family
@@ -296,6 +324,36 @@ def _scalar_mul_spec() -> OpSpec:
 
 
 _scalar_mul_spec()
+
+
+def _const_spec() -> OpSpec:
+    """Compile-time constant (``params['value']``): a ROM the controller
+    streams out at PF elements per cycle.  Emitted by the constant-fold pass
+    when a whole static-param subgraph evaluates at compile time; has no
+    inputs, so it fires immediately in data-flow order."""
+
+    def jax_fn(inputs, params, dims):
+        return _jnp().asarray(params["value"])
+
+    return register(
+        OpSpec(
+            name="const",
+            linear_time=True,
+            dsp_per_pe=0,
+            infer_dims=lambda dfg, node: {"n": int(np.asarray(node.params["value"]).size)},
+            out_shape=lambda dfg, node: tuple(np.shape(node.params["value"])),
+            jax_fn=jax_fn,
+            flops=lambda d: 0.0,
+            mem_bytes=lambda d: d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + _FILL,
+            lut=lambda d, pf: 40 + 2 * pf,    # ROM address FSM + output mux
+            max_pf=lambda d: max(1, d["n"]),
+            jax_fn_q=_q_const,
+        )
+    )
+
+
+_const_spec()
 
 
 # ----------------------------------------------------------- reduction-flavoured ops

@@ -4,6 +4,13 @@ Both strategies optimize over PF *groups* (see :mod:`repro.core.constraints`)
 using the fitted estimation models of :mod:`repro.core.cost_model` — never the
 ground truth — mirroring the paper, where the optimizer only sees regression
 estimates and the final numbers come from synthesis/simulation.
+
+The compiler invokes both strategies on the *canonical rewritten* graph
+(:func:`repro.core.lowering.rewrite` has already pruned dead code, folded
+constants and merged duplicate subexpressions), so no LUT budget is ever
+spent parallelizing a node the executor would never run, the critical path
+never threads through a to-be-deleted duplicate, and the black-box
+formulation's path/constraint matrices shrink with the graph.
 """
 
 from __future__ import annotations

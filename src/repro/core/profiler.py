@@ -9,6 +9,11 @@ HBM-resident parameter footprint.
 
 The profiler *tags the DFG in place* (``node.latency1``, ``node.lut1``) and
 returns it, exactly mirroring the paper's pipeline stage.
+
+Since the rewrite-first compile flow, the compiler hands this stage the
+*canonical rewritten* graph (dead code pruned, constants folded, duplicate
+subexpressions merged — see :func:`repro.core.lowering.rewrite`), so every
+profile entry corresponds to a node that actually executes.
 """
 
 from __future__ import annotations

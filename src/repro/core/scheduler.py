@@ -100,6 +100,33 @@ def _pipelined_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int]) 
     return max(stage) + _FILL * len(cluster)
 
 
+def _decomposed_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int],
+                       split_bytes: float | None,
+                       topo_idx: dict[str, int],
+                       succ: dict[str, list[str]]) -> float:
+    """Pipelined-cluster latency under the *same* structural decomposition
+    the chain-decompose pass lowers (``decompose_chains=True``): each grown
+    chain — after cost-guided splitting — is one pipeline (bottleneck
+    streaming time + per-stage fill), reduction-flavoured members run as
+    direct nodes, and the units execute back to back (one kernel launch
+    each).  Estimated and executed latency therefore agree on the plan the
+    executor actually interprets."""
+    from repro.core.lowering import cluster_chains
+
+    units = cluster_chains(dfg, cluster, succ=succ, topo_idx=topo_idx,
+                           split_bytes=split_bytes)
+    total = 0.0
+    for kind, subs in units:
+        if kind == "node":
+            total += _node_cycles(dfg, subs[0][0], assignment)
+            continue
+        for sub in subs:
+            stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL)
+                     for nid in sub]
+            total += max(stage) + _FILL * len(sub)
+    return total
+
+
 def simulate(
     dfg: DFG,
     assignment: dict[str, int],
@@ -107,7 +134,17 @@ def simulate(
     order: str = "dataflow",
     pipelining: bool = True,
     groups: PFGroups | None = None,
+    decompose_chains: bool = False,
+    chain_split_bytes: float | None = None,
 ) -> Schedule:
+    """Cycle-level discrete-event model of the data-flow controller.
+
+    ``decompose_chains=True`` prices each pipelined cluster through the same
+    structural chain decomposition — including cost-guided splitting at
+    ``chain_split_bytes`` — that the lowering pipeline emits for the
+    executor, so the simulated latency matches the chain-split plan (the
+    compiler sets this whenever the fused Pallas path is active).  The
+    default keeps the paper's single-pipeline §IV-G model."""
     groups = groups or PFGroups.build(dfg)
     clusters = pipeline_clusters(dfg, groups, assignment) if pipelining else []
     cluster_of: dict[str, int] = {}
@@ -133,9 +170,20 @@ def simulate(
             atoms.append((nid, [nid]))
             atom_of[nid] = len(atoms) - 1
 
+    if decompose_chains:
+        # one topo/successor map, shared by every cluster decomposition
+        _topo_idx = {nid: i for i, nid in enumerate(dfg.topo_order())}
+        _succ: dict[str, list[str]] = {}
+        for nid in _topo_idx:
+            for r in dfg.nodes[nid].inputs:
+                _succ.setdefault(r, []).append(nid)
+
     def atom_cycles(ai: int) -> float:
         aid, mem = atoms[ai]
         if len(mem) > 1:
+            if decompose_chains:
+                return _decomposed_cycles(dfg, mem, assignment,
+                                          chain_split_bytes, _topo_idx, _succ)
             return _pipelined_cycles(dfg, mem, assignment)
         return _node_cycles(dfg, mem[0], assignment)
 

@@ -33,10 +33,23 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.ref import Stage, apply_stage_q
 
-__all__ = ["fused_linear_chain", "fused_linear_chain_q"]
+__all__ = ["fused_linear_chain", "fused_linear_chain_q", "chain_vmem_bytes"]
 
 DEFAULT_BB = 256   # batch tile
 DEFAULT_BN = 512   # feature tile (VPU lane-friendly multiple of 128)
+
+
+def chain_vmem_bytes(n: int, n_vec: int, n_arr: int, *, bb: int = DEFAULT_BB,
+                     bn: int = DEFAULT_BN, itemsize: int = 4) -> int:
+    """Peak VMEM bytes one fused-chain launch keeps resident, mirroring
+    :func:`_tiled_chain_call`'s tiling: the stream tile, the output tile and
+    one ``(bb, bn)`` tile per ``*_arr`` extra, plus one ``(1, bn)`` row per
+    ``*_vec`` operand.  ``bb`` is the serving-path tile (per-sample launches
+    use fewer rows; the splitter budgets for the worst case).  This is the
+    unit the cost-guided chain splitter's ``chain_split_bytes`` budget is
+    expressed in."""
+    bn_eff = min(bn, max(128, 1 << max(0, int(n) - 1).bit_length()))
+    return (2 + n_arr) * bb * bn_eff * itemsize + n_vec * bn_eff * itemsize
 
 # stages whose operand is a (n,)-vector broadcast over the batch tile
 _VEC_OPS = {"add_vec": jnp.add, "sub_vec": jnp.subtract, "hadamard_vec": jnp.multiply}

@@ -56,18 +56,20 @@ def get_program(
     pipelining: bool | str = True,
     use_pallas: bool = False,
     precision: str = "float32",
+    per_channel: bool = False,
 ) -> CompiledProgram:
     """Compile (or fetch from cache) one classical benchmark program.
 
     ``build()`` is deterministic given ``(bench, trained, seed)`` and the
-    compiler is deterministic given its knobs, so the tuple of all nine
+    compiler is deterministic given its knobs, so the tuple of all the
     arguments keys the cache exactly — a repeat call is a dict hit, not a
     recompile.  With ``precision="int8"`` the int8 scales are calibrated
-    from the benchmark's (deterministic, seeded) training split.
+    from the benchmark's (deterministic, seeded) training split
+    (``per_channel=True`` adds per-output-row weight scales).
     """
     name = bench if isinstance(bench, str) else bench.name
     key = (name, trained, seed, backend, strategy, metric, pipelining,
-           use_pallas, precision)
+           use_pallas, precision, per_channel)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         dfg, _, _ = build(bench, trained=trained, seed=seed)
@@ -77,7 +79,8 @@ def get_program(
             calib = Xtr[:_CALIB_SAMPLES]
         compiler = MafiaCompiler(
             backend=backend, strategy=strategy, metric=metric,
-            pipelining=pipelining, use_pallas=use_pallas, precision=precision)
+            pipelining=pipelining, use_pallas=use_pallas, precision=precision,
+            per_channel=per_channel)
         prog = compiler.compile(dfg, calib=calib)
         _PROGRAM_CACHE[key] = prog
     return prog

@@ -203,11 +203,13 @@ def _linear_clusters(dfg):
 # ------------------------------------------------- compile(assignment=...) fix
 def test_partial_assignment_defaults_to_pf1():
     dfg, _, _ = build(BENCHMARKS[0])
-    some = next(iter(dfg.nodes))
+    some = next(nid for nid, n in dfg.nodes.items() if n.op == "spmv")
     prog = MafiaCompiler().compile(dfg, assignment={some: 2})
     assert prog.assignment[some] == 2
     assert all(pf == 1 for nid, pf in prog.assignment.items() if nid != some)
-    assert set(prog.assignment) == set(dfg.nodes)   # lut_true summed over all
+    # assignments cover exactly the rewritten graph (what executes)
+    assert set(prog.assignment) == set(prog.dfg.nodes)
+    assert set(prog.dfg.nodes) | set(prog.plan.alias) == set(dfg.nodes)
 
 
 def test_unknown_assignment_id_raises():

@@ -1,0 +1,489 @@
+"""Front-end rewrite pipeline (validate → prune → constant-fold → CSE),
+cost-guided chain splitting, per-channel quantization scales, and the
+rewrite-first compile flow: optimizer/scheduler score the canonical graph
+and the scheduler's pipelined model agrees with the chain-split plan."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+from repro.core.lowering import (
+    BACKEND_PASSES,
+    FRONTEND_PASSES,
+    ChainStep,
+    NodeStep,
+    PassManager,
+    lower,
+    rewrite,
+)
+
+
+# ------------------------------------------------------------ constant-fold
+def _const_dfg():
+    """x ⊙ relu(c1 + c2): the (c1, c2, add, relu) subgraph is fully static."""
+    g = DFG("cf")
+    g.add_input("x", (8,))
+    c1 = g.add("const", id="c1", value=np.linspace(0.0, 1.0, 8).astype(np.float32))
+    c2 = g.add("const", id="c2", value=np.linspace(-1.0, 1.0, 8).astype(np.float32))
+    s = g.add("add", c1, c2, id="s")
+    r = g.add("relu", s, id="r")
+    m = g.add("hadamard", "x", r, id="m")
+    g.mark_output(m)
+    return g
+
+
+def test_constant_fold_bitwise_matches_unfolded():
+    g = _const_dfg()
+    plan = lower(g)
+    # the static subgraph cascades into one surviving const node
+    assert plan.dfg.nodes["r"].op == "const"
+    assert set(plan.folded) == {"c1", "c2", "s"}
+    assert set(plan.dfg.nodes) == {"r", "m"}
+    x = np.random.default_rng(0).normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["m"]),
+                                  np.asarray(execute(g, x=x)["m"]))
+
+
+def test_constant_fold_through_static_param_subgraph():
+    """scalar_mul / vec-param binary stages over a const also fold."""
+    g = DFG("cf2")
+    g.add_input("x", (4,))
+    c = g.add("const", id="c", value=np.ones(4, np.float32))
+    sm = g.add("scalar_mul", c, id="sm", scalar=2.5)
+    t = g.add("tanh", sm, id="t")
+    y = g.add("add", "x", t, id="y")
+    g.mark_output(y)
+    plan = lower(g)
+    assert plan.dfg.nodes["t"].op == "const"
+    assert set(plan.folded) == {"c", "sm"}
+    x = np.random.default_rng(1).normal(size=4).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["y"]),
+                                  np.asarray(execute(g, x=x)["y"]))
+
+
+def test_constant_output_survives():
+    """An output node that folds to a const keeps its id and value."""
+    g = DFG("cf3")
+    g.add_input("x", (4,))
+    c = g.add("const", id="c", value=np.arange(4, dtype=np.float32))
+    r = g.add("relu", c, id="r")
+    d = g.add("relu", "x", id="d")
+    g.mark_output(r, d)
+    plan = lower(g)
+    assert plan.dfg.nodes["r"].op == "const"
+    x = np.zeros(4, np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["r"]),
+                                  np.asarray(execute(g, x=x)["r"]))
+
+
+# ---------------------------------------------------------------------- CSE
+def _dup_dfg(W):
+    """Two bitwise-identical gemv→tanh branches summed."""
+    g = DFG("dup")
+    g.add_input("x", (8,))
+    a1 = g.add("gemv", "x", id="a1", matrix=W)
+    a2 = g.add("gemv", "x", id="a2", matrix=W.copy())
+    t1 = g.add("tanh", a1, id="t1")
+    t2 = g.add("tanh", a2, id="t2")
+    y = g.add("add", t1, t2, id="y")
+    g.mark_output(y)
+    return g
+
+
+def test_cse_merges_identical_subexpressions():
+    W = np.random.default_rng(0).normal(size=(8, 8)).astype(np.float32)
+    g = _dup_dfg(W)
+    plan = lower(g)
+    assert plan.alias == {"a2": "a1", "t2": "t1"}
+    assert set(plan.dfg.nodes) == {"a1", "t1", "y"}
+    assert list(plan.dfg.nodes["y"].inputs) == ["t1", "t1"]
+    x = np.random.default_rng(1).normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["y"]),
+                                  np.asarray(execute(g, x=x)["y"]))
+
+
+def test_cse_respects_param_differences():
+    rng = np.random.default_rng(0)
+    g = DFG("nodup")
+    g.add_input("x", (8,))
+    a1 = g.add("gemv", "x", id="a1", matrix=rng.normal(size=(8, 8)).astype(np.float32))
+    a2 = g.add("gemv", "x", id="a2", matrix=rng.normal(size=(8, 8)).astype(np.float32))
+    y = g.add("add", a1, a2, id="y")
+    g.mark_output(y)
+    plan = lower(g)
+    assert plan.alias == {}
+    assert set(plan.dfg.nodes) == {"a1", "a2", "y"}
+
+
+def test_cse_never_merges_output_nodes():
+    """Duplicate *output* nodes both survive — their names are the API."""
+    g = DFG("outdup")
+    g.add_input("x", (8,))
+    t1 = g.add("tanh", "x", id="t1")
+    t2 = g.add("tanh", "x", id="t2")
+    g.mark_output(t1, t2)
+    plan = lower(g)
+    assert set(plan.dfg.nodes) == {"t1", "t2"}
+    x = np.random.default_rng(0).normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=plan)(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t1"]), np.asarray(out["t2"]))
+
+
+@pytest.mark.parametrize("precision", ["float32", "int8", "int16"])
+def test_cse_lanes_bitwise_at_every_precision(precision):
+    """The CSE'd program's per-sample / map / vmap lanes agree bitwise at
+    fixed point (map always; vmap too — integer accumulation has no
+    reassociation error), and match the hand-canonicalized program."""
+    W = (np.random.default_rng(2).normal(size=(8, 8)) * 0.4).astype(np.float32)
+    g = _dup_dfg(W)
+    comp = MafiaCompiler(strategy="none", precision=precision, use_pallas=True)
+    prog = comp.compile(g)
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(6, 8)).astype(np.float32)
+    per_sample = np.stack([np.asarray(prog(x=X[i])["y"]) for i in range(6)])
+    mapped = np.asarray(prog.batch(8, mode="map")(x=X)["y"])
+    np.testing.assert_array_equal(per_sample, mapped)
+    if precision != "float32":
+        vmapped = np.asarray(prog.batch(8, mode="vmap")(x=X)["y"])
+        np.testing.assert_array_equal(per_sample, vmapped)
+    # canonical twin: single branch scaled by 2 is the hand-merged program
+    g1 = DFG("canon")
+    g1.add_input("x", (8,))
+    a1 = g1.add("gemv", "x", id="a1", matrix=W)
+    t1 = g1.add("tanh", a1, id="t1")
+    y = g1.add("add", t1, t1, id="y")
+    g1.mark_output(y)
+    canon = MafiaCompiler(strategy="none", precision=precision,
+                          use_pallas=True).compile(g1)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(prog(x=X[i])["y"]),
+                                      np.asarray(canon(x=X[i])["y"]))
+
+
+# ------------------------------------------- rewrite-first optimizer/scheduler
+def _doped(bench):
+    """The benchmark graph plus dead code and a duplicated subexpression,
+    and its hand-canonicalized twin — both with one extra tanh output so
+    the duplicate is live."""
+    dfg_canon, _, _ = build(bench)
+    dfg_doped, _, _ = build(bench)
+    anchor = next(nid for nid, n in dfg_canon.nodes.items()
+                  if n.op in ("spmv", "gemv"))
+    dfg_canon.add("tanh", anchor, id="probe")
+    dfg_canon.mark_output("probe")
+    node = dfg_doped.nodes[anchor]
+    dfg_doped.add(node.op, *node.inputs, id="dup_anchor", **node.params)
+    dfg_doped.add("tanh", "dup_anchor", id="probe")
+    dfg_doped.add("sigmoid", anchor, id="dead_a")   # dead code
+    dfg_doped.add("exp", "dead_a", id="dead_b")
+    dfg_doped.mark_output("probe")
+    return dfg_canon, dfg_doped
+
+
+@pytest.mark.parametrize("bench", [BENCHMARKS[0], BENCHMARKS[4], BENCHMARKS[12]],
+                         ids=lambda b: b.name)
+def test_doped_graph_optimizes_like_canonical(bench):
+    """A DFG with dead nodes and duplicate subexpressions must yield the
+    *identical* PF assignment and schedule as its hand-canonicalized
+    equivalent — the optimizer and scheduler see only the rewritten graph."""
+    dfg_canon, dfg_doped = _doped(bench)
+    p1 = MafiaCompiler().compile(dfg_canon)
+    p2 = MafiaCompiler().compile(dfg_doped)
+    assert set(p2.plan.pruned) == {"dead_a", "dead_b"}
+    assert p2.plan.alias.get("dup_anchor") is not None
+    assert p1.assignment == p2.assignment
+    assert p1.schedule.total_cycles == p2.schedule.total_cycles
+    assert p1.schedule.start == p2.schedule.start
+    assert p1.lut_true == p2.lut_true and p1.dsp_true == p2.dsp_true
+    if p1.pf_result is not None:
+        assert p1.pf_result.est_latency == p2.pf_result.est_latency
+        assert p1.pf_result.est_lut == p2.pf_result.est_lut
+    x = np.random.default_rng(0).normal(
+        size=dfg_canon.graph_inputs["x"].shape).astype(np.float32)
+    o1, o2 = p1(x=x), p2(x=x)
+    for k in o1:
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+
+
+# ------------------------------------------------------ dangling output alias
+def test_verify_dangling_output_alias_raises_value_error():
+    """A pass bug that leaves an output alias pointing at nothing must fail
+    plan verification with a clear ValueError naming the output — not a
+    KeyError deep in the executor."""
+    g = DFG("dangle")
+    g.add_input("x", (4,))
+    r = g.add("relu", "x", id="r")
+    g.mark_output(r)
+    plan = lower(g)
+    bad = dataclasses.replace(plan, alias={"r": "ghost"})
+    with pytest.raises(ValueError, match=r"\['r'\].*never produces"):
+        bad.verify()
+
+
+def test_verify_output_dropped_from_steps_raises():
+    g = _const_dfg()
+    plan = lower(g)
+    no_m = tuple(s for s in plan.steps
+                 if getattr(s, "nid", None) != "m")
+    # dropping the output-producing step violates coverage first
+    bad = dataclasses.replace(plan, steps=no_m)
+    with pytest.raises(AssertionError, match="live set"):
+        bad.verify()
+
+
+# ------------------------------------------------------- chain splitting
+def _chainy_dfg(n=64):
+    g = DFG("chainy")
+    g.add_input("x", (n,))
+    g.add_input("e1", (n,))
+    g.add_input("e2", (n,))
+    t0 = g.add("tanh", "x", id="t0")
+    b1 = g.add("add", t0, "e1", id="b1")
+    t1 = g.add("relu", b1, id="t1")
+    b2 = g.add("add", t1, "e2", id="b2")
+    t2 = g.add("exp", b2, id="t2")
+    g.mark_output(t2)
+    return g, [["t0", "b1", "t1", "b2", "t2"]]
+
+
+def test_chain_split_plans_match_unsplit_bitwise():
+    g, clusters = _chainy_dfg()
+    p_max = lower(g, fused_clusters=clusters, use_pallas=True,
+                  chain_split_bytes=None)
+    p_cut = lower(g, fused_clusters=clusters, use_pallas=True,
+                  chain_split_bytes=1)       # force a cut at every edge
+    (one,) = p_max.chain_steps
+    assert one.members == ("t0", "b1", "t1", "b2", "t2")
+    assert p_max.chain_splits == 0 and p_cut.chain_splits == 4
+    # the cuts partition the original chain, in order
+    cut_members = [c.members for c in p_cut.chain_steps]
+    assert tuple(n for mem in cut_members for n in mem) == one.members
+    rng = np.random.default_rng(0)
+    ins = {k: rng.normal(size=64).astype(np.float32) for k in ("x", "e1", "e2")}
+    out_max = build_callable(g, jit=False, plan=p_max)(**ins)
+    out_cut = build_callable(g, jit=False, plan=p_cut)(**ins)
+    np.testing.assert_array_equal(np.asarray(out_max["t2"]),
+                                  np.asarray(out_cut["t2"]))
+
+
+def test_chain_split_bitwise_at_int8():
+    g, clusters = _chainy_dfg()
+    from repro.core import quantize
+
+    rng = np.random.default_rng(1)
+    calib = {k: rng.normal(size=(32, 64)).astype(np.float32)
+             for k in ("x", "e1", "e2")}
+    g_max, _ = _chainy_dfg()
+    qp = quantize.calibrate(g, calib)
+    p_cut = lower(g, fused_clusters=clusters, use_pallas=True,
+                  precision="int8", qplan=qp, chain_split_bytes=1)
+    qp2 = quantize.calibrate(g_max, calib)
+    p_max = lower(g_max, fused_clusters=clusters, use_pallas=True,
+                  precision="int8", qplan=qp2, chain_split_bytes=None)
+    assert p_cut.chain_splits > 0
+    ins = {k: rng.normal(size=64).astype(np.float32) for k in ("x", "e1", "e2")}
+    out_cut = build_callable(g, jit=False, plan=p_cut)(**ins)
+    out_max = build_callable(g_max, jit=False, plan=p_max)(**ins)
+    np.testing.assert_array_equal(np.asarray(out_cut["t2"]),
+                                  np.asarray(out_max["t2"]))
+
+
+def test_chain_split_respects_budget_model():
+    """Splitting is cost-guided: with a budget at half the chain's modeled
+    footprint, every emitted sub-chain fits the budget."""
+    from repro.core.cost_model import chain_live_bytes
+
+    g, clusters = _chainy_dfg()
+    whole = chain_live_bytes(g, clusters[0])
+    budget = whole / 2
+    plan = lower(g, fused_clusters=clusters, use_pallas=True,
+                 chain_split_bytes=budget)
+    assert plan.chain_splits >= 1
+    for c in plan.chain_steps:
+        # every sub-chain fits the budget, or is already a single stage
+        # (a lone binary stage has an irreducible stream+out+extra floor)
+        assert (chain_live_bytes(g, list(c.members)) <= budget
+                or len(c.members) == 1)
+
+
+# ------------------------------------- scheduler agrees with chain-split plan
+def _plan_cluster_cycles(prog, cluster):
+    """Recompute a pipelined cluster's latency from the plan the executor
+    interprets — the §IV-G model the scheduler must agree with."""
+    from repro.core.scheduler import _FILL, _node_cycles
+
+    mem = set(cluster)
+    total = 0.0
+    for step in prog.plan.steps:
+        if isinstance(step, ChainStep) and set(step.members) <= mem:
+            stage = [max(0.0, _node_cycles(prog.dfg, nid, prog.assignment) - _FILL)
+                     for nid in step.members]
+            total += max(stage) + _FILL * len(step.members)
+        elif isinstance(step, NodeStep) and step.nid in mem:
+            total += _node_cycles(prog.dfg, step.nid, prog.assignment)
+    return total
+
+
+@pytest.mark.parametrize("bench", [BENCHMARKS[0], BENCHMARKS[5], BENCHMARKS[11]],
+                         ids=lambda b: b.name)
+def test_simulated_latency_agrees_with_plan(bench):
+    """simulate()'s pipelined-cluster latency equals the latency of the
+    chain decomposition the executor actually interprets (per cluster,
+    from the plan's ChainStep/NodeStep structure)."""
+    dfg, _, _ = build(bench)
+    prog = MafiaCompiler(use_pallas=True).compile(dfg)
+    assert prog.fused_clusters, f"{bench.name} grew no pipeline clusters"
+    for cluster in prog.fused_clusters:
+        nid = cluster[0]
+        atom_cycles = prog.schedule.end[nid] - prog.schedule.start[nid]
+        expected = _plan_cluster_cycles(prog, cluster)
+        assert atom_cycles == pytest.approx(expected), cluster
+
+
+def test_split_chains_priced_by_scheduler():
+    """Forcing chain splits changes the simulated schedule exactly as the
+    plan changes — the scheduler prices the same cuts."""
+    g, clusters = _chainy_dfg()
+    g2, _ = _chainy_dfg()
+    whole = MafiaCompiler(use_pallas=True, strategy="none",
+                          chain_split_bytes=None).compile(g)
+    cut = MafiaCompiler(use_pallas=True, strategy="none",
+                        chain_split_bytes=1).compile(g2)
+    assert cut.plan.chain_splits > 0
+    for prog in (whole, cut):
+        for cluster in prog.fused_clusters:
+            nid = cluster[0]
+            atom = prog.schedule.end[nid] - prog.schedule.start[nid]
+            assert atom == pytest.approx(_plan_cluster_cycles(prog, cluster))
+    # a cut chain pays one extra fill per cut stage-pipeline
+    assert cut.schedule.total_cycles > whole.schedule.total_cycles
+
+
+# ------------------------------------------------------------- pass manager
+def test_pass_timings_cover_both_pipelines():
+    dfg, _, _ = build(BENCHMARKS[1])
+    prog = MafiaCompiler(use_pallas=True).compile(dfg)
+    names = [n for n, _ in prog.plan.pass_timings]
+    assert names == list(FRONTEND_PASSES) + list(BACKEND_PASSES)
+    assert all(t >= 0.0 for _, t in prog.plan.pass_timings)
+
+
+def test_debug_dump_records_pass_states():
+    g = _const_dfg()
+    plan = lower(g, debug=True)
+    assert plan.dump                      # one line per pass
+    assert any(d.startswith("constant-fold:") for d in plan.dump)
+    quiet = lower(g)
+    assert quiet.dump == ()
+
+
+def test_rewrite_is_standalone_and_id_preserving():
+    g = _const_dfg()
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) <= set(g.nodes)      # never invents ids
+    assert rw.source is g
+    assert [n for n, _ in rw.timings] == list(FRONTEND_PASSES)
+    # the source graph is untouched
+    assert g.nodes["s"].op == "add" and g.nodes["r"].op == "relu"
+
+
+# ------------------------------------------------------- const in batch lanes
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+def test_const_batch_lanes_bitwise(precision):
+    g = DFG("cbatch")
+    g.add_input("x", (8,))
+    c = g.add("const", id="c", value=np.linspace(-1, 1, 8).astype(np.float32))
+    y = g.add("add", "x", c, id="y")
+    g.mark_output(y)
+    prog = MafiaCompiler(strategy="none", precision=precision).compile(g)
+    X = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    per_sample = np.stack([np.asarray(prog(x=X[i])["y"]) for i in range(5)])
+    for mode in ("map", "vmap"):
+        batched = np.asarray(prog.batch(8, mode=mode)(x=X)["y"])
+        np.testing.assert_array_equal(per_sample, batched)
+
+
+# --------------------------------------------------- per-channel quantization
+def _skewed_gemv():
+    """Rows of wildly different magnitude — the per-tensor worst case."""
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(10, 32)).astype(np.float32)
+    W *= np.logspace(-3, 0, 10)[:, None].astype(np.float32)
+    g = DFG("skew")
+    g.add_input("x", (32,))
+    m = g.add("gemv", "x", id="m", matrix=W)
+    g.mark_output(m)
+    return g, W
+
+
+def test_per_channel_scales_are_per_row():
+    from repro.core import quantize
+
+    g, W = _skewed_gemv()
+    calib = np.random.default_rng(1).normal(size=(64, 32)).astype(np.float32)
+    qp_pt = quantize.calibrate(g, calib)
+    qp_pc = quantize.calibrate(g, calib, per_channel=True)
+    e_pt = qp_pt.nodes["m"].param_exps["matrix"]
+    e_pc = qp_pc.nodes["m"].param_exps["matrix"]
+    assert np.ndim(e_pt) == 0 and np.ndim(e_pc) == 1
+    assert len(set(np.asarray(e_pc).tolist())) > 1   # skewed rows → many scales
+    # small rows get finer scales than the tensor-wide exponent
+    assert int(np.asarray(e_pc).max()) > int(e_pt)
+
+
+def test_per_channel_reduces_quantization_error():
+    g, W = _skewed_gemv()
+    g2, _ = _skewed_gemv()
+    rng = np.random.default_rng(2)
+    calib = rng.normal(size=(128, 32)).astype(np.float32)
+    pt = MafiaCompiler(strategy="none", precision="int8").compile(g, calib=calib)
+    pc = MafiaCompiler(strategy="none", precision="int8",
+                       per_channel=True).compile(g2, calib=calib)
+    X = rng.normal(size=(256, 32)).astype(np.float32)
+    ref = X @ W.T
+    err_pt = np.abs(np.asarray(pt.batch(64, mode="map")(x=X)["m"]) - ref).mean()
+    err_pc = np.abs(np.asarray(pc.batch(64, mode="map")(x=X)["m"]) - ref).mean()
+    assert err_pc < err_pt
+
+
+def test_per_channel_lanes_bitwise():
+    g, _ = _skewed_gemv()
+    rng = np.random.default_rng(3)
+    calib = rng.normal(size=(64, 32)).astype(np.float32)
+    prog = MafiaCompiler(strategy="none", precision="int8",
+                         per_channel=True).compile(g, calib=calib)
+    X = rng.normal(size=(6, 32)).astype(np.float32)
+    per_sample = np.stack([np.asarray(prog(x=X[i])["m"]) for i in range(6)])
+    for mode in ("map", "vmap"):
+        batched = np.asarray(prog.batch(8, mode=mode)(x=X)["m"])
+        np.testing.assert_array_equal(per_sample, batched)
+
+
+def test_per_channel_uniform_rows_bitwise_matches_per_tensor():
+    """When every row shares one exponent, per-channel degenerates to the
+    per-tensor program bit for bit."""
+    rng = np.random.default_rng(4)
+    W = rng.uniform(0.5, 0.99, size=(6, 16)).astype(np.float32)
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+
+    def prog(per_channel):
+        g = DFG("uni")
+        g.add_input("x", (16,))
+        g.add("gemv", "x", id="m", matrix=W)
+        g.mark_output("m")
+        return MafiaCompiler(strategy="none", precision="int8",
+                             per_channel=per_channel).compile(g, calib=calib)
+
+    X = rng.normal(size=(8, 16)).astype(np.float32)
+    a = np.asarray(prog(False).batch(8, mode="map")(x=X)["m"])
+    b = np.asarray(prog(True).batch(8, mode="map")(x=X)["m"])
+    np.testing.assert_array_equal(a, b)

@@ -128,6 +128,9 @@ def test_intervals_sorted_and_complete():
     dfg = _bonsai()
     prog = MafiaCompiler().compile(dfg)
     iv = prog.schedule.as_intervals()
-    assert len(iv) == len(dfg.nodes)
+    # the schedule covers exactly the canonical rewritten graph — bonsai's
+    # two identity scalar_mul (sigma = 1.0) nodes fold away before scheduling
+    assert len(iv) == len(prog.dfg.nodes)
+    assert len(prog.dfg.nodes) == len(dfg.nodes) - len(prog.plan.alias)
     starts = [s for _, s, _ in iv]
     assert starts == sorted(starts)
