@@ -8,8 +8,12 @@ The front-end runs *first*: the profiler, optimizer, scheduler and
 quantizer all consume the canonical rewritten graph, so PF assignments,
 schedules and LUT/DSP reports refer only to nodes that actually execute —
 and every estimator query shrinks with the graph.  A DFG carrying dead
-nodes or duplicate subexpressions compiles to exactly the same assignment
-and schedule as its hand-canonicalized equivalent.
+nodes, duplicate subexpressions, foldable scalar_muls or add-of-const
+chains compiles to exactly the same assignment and schedule as its
+hand-canonicalized equivalent — and, via the rewrite-aware PF warm-start
+cache (keyed on the canonical graph's structural hash), a *recompile* of
+anything that canonicalizes to a seen graph reuses the prior Best-PF
+result instead of searching again.
 
 The compiler also exposes the ablation knobs needed to reconstruct the
 paper's comparison mechanisms (§V-B): execution order (dataflow vs the
@@ -68,6 +72,11 @@ class CompiledProgram:
     plan: ExecutionPlan | None = None  # static plan every lane interprets
     source_dfg: DFG | None = None      # the pre-rewrite graph, for reference
     rewrite_result: RewriteResult | None = None
+    # how the PF assignment was obtained: "cold" (fresh search), "near"
+    # (search seeded by a cached result for the same wiring), "exact"
+    # (cache hit on the canonical graph's structural hash — no search ran),
+    # or "external" (caller-imposed assignment)
+    pf_source: str = "cold"
 
     @property
     def latency_cycles(self) -> float:
@@ -203,6 +212,7 @@ class MafiaCompiler:
         calib_samples: int = 64,
         per_channel: bool = False,
         chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
+        warm_start: bool = True,
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -219,7 +229,18 @@ class MafiaCompiler:
         edge (see :func:`repro.core.lowering.split_chain`); the scheduler's
         pipelined-cluster model prices the same cuts, so estimated and
         simulated latency stay consistent with the plan the executor
-        interprets.  ``None`` keeps chains maximal."""
+        interprets.  ``None`` keeps chains maximal.
+
+        ``warm_start`` enables the rewrite-aware PF warm-start cache: each
+        :meth:`compile` keys its :class:`PFResult` on the *canonical
+        rewritten* graph's structural hash, so recompiling a doped/edited
+        variant that canonicalizes to a seen graph reuses the prior search
+        result — an exact hit (same ids/ops/edges/dims) short-circuits the
+        Best-PF search entirely and returns the identical ``PFResult``; a
+        near hit (same wiring, different dims) seeds the greedy/black-box
+        search at the prior solution.  The cache is per compiler instance;
+        every optimizer-relevant knob is fixed per instance, so the graph
+        hash alone is a complete key."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
@@ -236,16 +257,34 @@ class MafiaCompiler:
         self.calib_samples = calib_samples
         self.per_channel = per_channel
         self.chain_split_bytes = chain_split_bytes
+        self.warm_start = warm_start
+        # rewrite-aware PF warm-start caches, keyed on the canonical
+        # rewritten graph's structural hash (exact: ids+ops+edges+dims;
+        # near: dims-blind).  Per instance — all optimizer knobs are fixed.
+        self._pf_cache: dict[str, PFResult] = {}
+        self._near_cache: dict[str, PFResult] = {}
 
     # ----------------------------------------------------------------- stages
-    def optimize(self, dfg: DFG) -> tuple[PFResult, PFGroups]:
+    def optimize(
+        self, dfg: DFG, warm_assignment: dict[str, int] | None = None
+    ) -> tuple[PFResult, PFGroups]:
+        """Run the Best-PF search.  ``warm_assignment`` (node id → PF, from
+        a near-hit in the warm-start cache) seeds the search at the prior
+        solution — group start PFs are derived per node id, so the seeding
+        is robust to group renumbering."""
         profile_pf1(dfg, backend=self.backend)
         groups = PFGroups.build(dfg)
         ctx = CostContext(dfg, groups, self.budget, backend=self.backend, bank=self.bank)
+        warm: list[int] | None = None
+        if warm_assignment is not None:
+            warm = [max((int(warm_assignment.get(nid, 1)) for nid in mem),
+                        default=1)
+                    for mem in groups.members]
         if self.strategy == "greedy":
-            res = greedy_best_pf(ctx, metric=self.metric)  # type: ignore[arg-type]
+            res = greedy_best_pf(ctx, metric=self.metric,  # type: ignore[arg-type]
+                                 warm_start=warm)
         elif self.strategy == "blackbox":
-            res = blackbox_best_pf(ctx)
+            res = blackbox_best_pf(ctx, warm_start=warm)
         elif self.strategy == "none":
             pfs = [1] * len(groups.members)
             res = PFResult(pfs, groups.assignment(pfs), ctx.critical(pfs)[1],
@@ -282,9 +321,45 @@ class MafiaCompiler:
         rw = rewrite(dfg, precision=self.precision)
         rdfg = rw.dfg
         pf_result: PFResult | None = None
+        pf_source = "external"
         if assignment is None:
-            pf_result, groups = self.optimize(rdfg)
-            assignment = pf_result.assignment
+            exact_key = near_key = None
+            cached: PFResult | None = None
+            if self.warm_start:
+                exact_key = rdfg.structural_hash()
+                near_key = rdfg.structural_hash(include_dims=False)
+                cached = self._pf_cache.get(exact_key)
+            if cached is not None:
+                # exact hit: identical canonical structure (ids, ops,
+                # edges, dims) → the Best-PF problem is identical; reuse
+                # the prior PFResult without running the search.  The
+                # profiler and groups still run (the scheduler needs the
+                # tagged graph), but they are cheap closed-form sweeps.
+                pf_source = "exact"
+                pf_result = cached
+                profile_pf1(rdfg, backend=self.backend)
+                groups = PFGroups.build(rdfg)
+                # defensive copy: prog.assignment is a public, mutable
+                # field (the ablation baselines tweak it) — it must never
+                # alias the cached PFResult's dict
+                assignment = dict(pf_result.assignment)
+                # tag the graph in place like groups.apply does on the
+                # search paths — Node.pf is documentation/debug metadata
+                # (the scheduler consumes the assignment dict), kept
+                # consistent across all three compile paths
+                for nid in rdfg.nodes:
+                    rdfg.nodes[nid].pf = assignment[nid]
+            else:
+                near = (self._near_cache.get(near_key)
+                        if self.warm_start else None)
+                pf_source = "near" if near is not None else "cold"
+                pf_result, groups = self.optimize(
+                    rdfg,
+                    warm_assignment=near.assignment if near else None)
+                assignment = dict(pf_result.assignment)
+                if self.warm_start:
+                    self._pf_cache[exact_key] = pf_result
+                    self._near_cache[near_key] = pf_result
         else:
             unknown = set(assignment) - set(dfg.nodes)
             if unknown:
@@ -359,4 +434,5 @@ class MafiaCompiler:
             plan=plan,
             source_dfg=dfg,
             rewrite_result=rw,
+            pf_source=pf_source,
         )

@@ -33,27 +33,44 @@ __all__ = ["OpEstimator", "EstimatorBank", "train_estimators", "default_bank",
            "chain_live_bytes"]
 
 
-def chain_live_bytes(dfg, chain: list[str] | tuple[str, ...]) -> float:
+def chain_live_bytes(dfg, chain: list[str] | tuple[str, ...],
+                     *, prev: str | None = None) -> float:
     """Peak live footprint of one fused stage chain, in bytes — the
     VMEM/live-extras model behind cost-guided chain splitting.
 
     A fused chain holds, simultaneously resident: the streaming tile, the
     output tile, one full tile per ``*_arr`` extra edge (a second DFG input
-    to a binary stage) and one broadcast row per ``*_vec`` static operand.
-    The byte model mirrors the actual tiling of the pipeline kernel
+    to a binary stage) and one broadcast row per ``*_vec`` static operand —
+    including ``const``-node operands, which the lowering embeds as static
+    vec rows rather than streaming them as full extras.  The byte model
+    mirrors the actual tiling of the pipeline kernel
     (:func:`repro.kernels.linear_pipeline.chain_vmem_bytes`), so the budget
-    is stated in the same units the launch really occupies.
+    is stated in the same units the launch really occupies.  ``prev`` is
+    the element streaming into the chain's head when it continues a split
+    predecessor (the previous sub-chain's terminal — the splitter passes
+    it), None for a true chain head.
     """
     from repro.kernels.linear_pipeline import chain_vmem_bytes
 
     n_vec = n_arr = 0
-    for nid in chain:
+    for idx, nid in enumerate(chain):
         node = dfg.nodes[nid]
         if node.op in ("add", "sub", "hadamard"):
             if "vec" in node.params:
                 n_vec += 1
             elif len(node.inputs) == 2:
-                n_arr += 1
+                # the non-stream operand: the chain predecessor streams in;
+                # at a true chain head the first input does (matching
+                # lowering._lower_stage_float's stream selection)
+                p = chain[idx - 1] if idx else prev
+                rin = list(node.inputs)
+                stream = p if p in rin else rin[0]
+                other = [r for r in rin if r != stream]
+                cnode = dfg.nodes.get(other[0]) if len(other) == 1 else None
+                if cnode is not None and cnode.op == "const":
+                    n_vec += 1     # embedded as a static vec row
+                else:
+                    n_arr += 1
     n = 1
     for s in dfg.out_shape(chain[-1]):
         n *= int(s)

@@ -193,6 +193,38 @@ class DFG:
         return paths
 
     # ------------------------------------------------------------- utilities
+    def structural_hash(self, *, include_dims: bool = True) -> str:
+        """Deterministic digest of the graph *structure*: node ids, ops,
+        edges, dims (optional), graph-input signatures and the output list.
+
+        Static parameter *values* are deliberately excluded — every quantity
+        the PF search consumes (template cycle/LUT models, PF caps, path
+        structure) derives from ops, edges and dims alone, so two graphs
+        with equal hashes are guaranteed the same Best-PF problem.  This is
+        what the compiler's rewrite-aware warm-start cache keys on: a doped
+        or edited variant that canonicalizes to a seen graph hashes equal
+        and reuses the prior :class:`~repro.core.optimizer.PFResult`.
+        ``include_dims=False`` gives the coarser *near-hit* key (same ids,
+        ops and wiring; node dims and graph-input shapes may differ) used
+        to seed the search instead of short-circuiting it."""
+        import hashlib
+
+        h = hashlib.sha256()
+        # repr of tuples, not joined strings: ids are arbitrary, so naive
+        # ':'/',' delimiters would let differently-structured graphs
+        # collide (an input literally named "a,b" vs two inputs a and b)
+        for name in sorted(self.graph_inputs):
+            gi = self.graph_inputs[name]
+            sig = (gi.shape, gi.dtype) if include_dims else ()
+            h.update(repr(("in", name, sig)).encode())
+        for nid in sorted(self.nodes):
+            node = self.nodes[nid]
+            dims = tuple(sorted(node.dims.items())) if include_dims else ()
+            h.update(repr(("n", nid, node.op, tuple(node.inputs),
+                           dims)).encode())
+        h.update(repr(("out", tuple(self.outputs))).encode())
+        return h.hexdigest()
+
     def validate(self) -> None:
         from repro.core import node_types
 

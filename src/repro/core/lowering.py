@@ -8,18 +8,37 @@ spine, split in two so every later stage consumes one canonical graph:
 profiler, Best-PF optimizer and scheduler, and materializes the canonical
 rewritten DFG those stages score::
 
-    validate → prune (dead-node / identity-fold) → constant-fold → CSE
+    validate → prune → constant-fold → algebraic → CSE → hoist
 
 * **validate** — structural DFG validation (shapes, acyclicity).
 * **prune** — dead-node elimination (nodes unreachable from the outputs)
-  and identity folding (``scalar_mul`` by exactly 1.0 forwards its input;
-  float lanes only, where ``x * 1.0`` is bitwise ``x``).
+  and identity folding: ``scalar_mul`` by exactly 1.0, ``add``/``sub`` of
+  an all-zero constant and ``hadamard`` by an all-ones constant forward
+  their input (float lanes only, where each is bitwise the identity —
+  modulo the usual IEEE ``-0.0 + 0.0 = +0.0`` corner of add-of-zero).
 * **constant-fold** — evaluates any node whose inputs are all ``const``
   nodes at compile time (static-param subgraphs collapse to one ``const``
   per needed value; interior constants die).
+* **algebraic** — strength reduction over the op registry's rewrite
+  legality metadata (:class:`repro.core.node_types.OpSpec.scale_param` /
+  ``bias_foldable``): a ``scalar_mul`` by an exact power of two folds into
+  an adjacent node's static param (producer *or* consumer side — the
+  weight matrix of a gemv/spmv, the vec of a hadamard, the scalar of
+  another scalar_mul), and an ``add``/``sub`` of a constant following a
+  matvec folds into that matvec's write-back as a ``bias`` param — on the
+  int lanes this lands the constant on the int32 accumulator *before* the
+  requantizing shift (one adder per PE instead of a whole add node).
+  Power-of-two scaling is exact in IEEE arithmetic and a fused bias is the
+  same jnp add, so every fold is bitwise-neutral at float32; the fixed
+  point lanes re-calibrate the folded params (per-channel included).
 * **cse** — common-subexpression elimination: nodes with identical
   ``(op, inputs, params, dims)`` merge into one (first in topo order wins;
   output nodes are never merged away so output names survive).
+* **hoist** — common-*chain* hoisting across outputs: an output node that
+  duplicates an existing node *and* sits at the tail of a CSE-merged run
+  (≥ 2 duplicated nodes) aliases into the computed-once chain — its name
+  still publishes, via the alias map, but the duplicate chain is gone.
+  Lone duplicated outputs keep their own node (their names are the API).
 
 The result is a *new* DFG containing only nodes that execute — PF
 assignments, schedules and LUT/DSP reports refer to nothing else, and every
@@ -59,6 +78,7 @@ dump of the evolving graph (``ExecutionPlan.dump``).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable
 
@@ -83,7 +103,8 @@ _Q_BIN_ARR = {"add": "q_add_arr", "sub": "q_sub_arr", "hadamard": "q_hadamard_ar
 _Q_BIN_VEC = {"add": "q_add_vec", "sub": "q_sub_vec", "hadamard": "q_hadamard_vec"}
 _UNARY_OPS = ("tanh", "sigmoid", "relu", "exp")
 
-FRONTEND_PASSES = ("validate", "prune", "constant-fold", "cse")
+FRONTEND_PASSES = ("validate", "prune", "constant-fold", "algebraic", "cse",
+                   "hoist")
 BACKEND_PASSES = ("quantize-rewrite", "cluster", "chain-decompose", "plan")
 PASS_NAMES = FRONTEND_PASSES + BACKEND_PASSES
 
@@ -177,6 +198,8 @@ class ExecutionPlan:
     chain_splits: int = 0            # chains cut by the cost-guided splitter
     pass_timings: tuple[tuple[str, float], ...] = ()
     dump: tuple[str, ...] = ()       # per-pass debug dump (debug=True only)
+    algebraic: tuple[str, ...] = ()  # nodes eliminated by algebraic rewrites
+    hoisted: tuple[str, ...] = ()    # output dups merged by chain hoisting
 
     @property
     def chain_steps(self) -> list[ChainStep]:
@@ -191,8 +214,10 @@ class ExecutionPlan:
         return (f"ExecutionPlan({self.dfg.name!r}: {len(self.node_steps)} node "
                 f"steps, {len(ch)} fused chains "
                 f"({sum(len(c.members) for c in ch)} nodes), "
-                f"{len(self.pruned)} pruned, {len(self.alias)} folded, "
+                f"{len(self.pruned)} pruned, {len(self.alias)} aliased, "
                 f"{len(self.folded)} const-folded, "
+                f"{len(self.algebraic)} algebraic, "
+                f"{len(self.hoisted)} hoisted, "
                 f"{self.chain_splits} chain splits, "
                 f"precision={self.precision})")
 
@@ -265,6 +290,8 @@ class RewriteResult:
     folded: tuple[str, ...]          # evaluated away at compile time
     timings: list[tuple[str, float]] = dataclasses.field(default_factory=list)
     dumps: list[str] = dataclasses.field(default_factory=list)
+    algebraic: tuple[str, ...] = ()  # nodes eliminated by algebraic rewrites
+    hoisted: tuple[str, ...] = ()    # output dups merged by chain hoisting
 
 
 class _Rewrite:
@@ -280,6 +307,9 @@ class _Rewrite:
         self.topo: list[str] = []
         self.pruned: set[str] = set()
         self.folded: set[str] = set()
+        self.algebraic: set[str] = set()
+        self.cse: set[str] = set()       # nodes merged away by the CSE pass
+        self.hoisted: set[str] = set()
 
     def node(self, nid: str) -> Node:
         return self.repl.get(nid) or self.source.nodes[nid]
@@ -311,15 +341,52 @@ def _fe_validate(st: _Rewrite) -> None:
     st.source.validate()
 
 
+def _const_value(dfg: DFG, ref: str) -> np.ndarray | None:
+    """The value of ``ref`` if it is a ``const`` node of ``dfg``, else None."""
+    node = dfg.nodes.get(ref)
+    if node is not None and node.op == "const":
+        return np.asarray(node.params["value"])
+    return None
+
+
+def _identity_fold_target(dfg: DFG, node: Node) -> str | None:
+    """Env ref an identity node forwards to, or None if not an identity.
+
+    Covered identities (all bitwise in float32, with the one IEEE corner
+    that ``x + (±0.0)`` maps an input of ``-0.0`` to ``+0.0``):
+    ``scalar_mul`` by 1.0; ``add``/``sub`` of an all-zero constant (const
+    node or ``vec`` param; for sub only the right operand); ``hadamard``
+    by an all-ones constant (either operand)."""
+    if node.op == "scalar_mul":
+        return node.inputs[0] if float(node.params["scalar"]) == 1.0 else None
+    if node.op not in ("add", "sub", "hadamard"):
+        return None
+    neutral = 1.0 if node.op == "hadamard" else 0.0
+    if "vec" in node.params and len(node.inputs) == 1:
+        vec = np.asarray(node.params["vec"])
+        return node.inputs[0] if np.all(vec == neutral) else None
+    if len(node.inputs) != 2:
+        return None
+    # sub is not commutative: only x - 0 folds, 0 - x negates
+    positions = (0, 1) if node.op in ("add", "hadamard") else (1,)
+    for pos in positions:
+        val = _const_value(dfg, node.inputs[pos])
+        if val is not None and np.all(val == neutral):
+            return node.inputs[1 - pos]
+    return None
+
+
 def _fe_prune(st: _Rewrite) -> None:
     dfg = st.source
     if st.precision == "float32":
-        # identity fold: x * 1.0 is bitwise x in float32 — forward the input.
-        # (Fixed-point lanes keep the node: its requantize can change scale.)
+        # identity folds: forward the untouched input (float lanes only —
+        # fixed-point lanes keep the node: its requantize can change scale).
         for nid, node in dfg.nodes.items():
-            if (node.op == "scalar_mul" and nid not in dfg.outputs
-                    and float(node.params["scalar"]) == 1.0):
-                st.alias[nid] = node.inputs[0]
+            if nid in dfg.outputs:
+                continue
+            tgt = _identity_fold_target(dfg, node)
+            if tgt is not None:
+                st.alias[nid] = tgt
     st.recompute_live()
     st.pruned = set(dfg.nodes) - st.live - set(st.alias)
 
@@ -351,6 +418,185 @@ def _fe_constant_fold(st: _Rewrite) -> None:
     st.folded = before - st.live
 
 
+def _pow2_rescale(value: Any, c: float) -> Any | None:
+    """``value * c`` if ``c`` is a finite, nonzero power of two and the
+    rescale is lossless (every element scales exactly — no overflow, no
+    precision loss in the subnormal range), else None.
+
+    Power-of-two scaling is the legality gate that keeps the algebraic
+    folds bitwise-neutral at float32: multiplying by 2^k only moves IEEE
+    exponents, so it is exact on each element and distributes exactly over
+    the sums and products inside a matvec."""
+    if not math.isfinite(c) or c == 0.0 or math.frexp(abs(c))[0] != 0.5:
+        return None
+    if isinstance(value, (int, float)):
+        out = float(value) * c
+        return out if math.isfinite(out) and out / c == float(value) else None
+    arr = np.asarray(value)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return None
+    cc = arr.dtype.type(c)
+    out = arr * cc
+    if not np.all(np.isfinite(out)) or not np.array_equal(out / cc, arr):
+        return None
+    return out
+
+
+def _rw_const_value(st: _Rewrite, ref: str) -> np.ndarray | None:
+    """Value of ``ref`` if it resolves to a ``const`` node (including nodes
+    the constant-fold pass rewrote in place), else None."""
+    if ref in st.source.nodes:
+        node = st.node(ref)
+        if node.op == "const":
+            return np.asarray(node.params["value"])
+    return None
+
+
+def _fe_algebraic(st: _Rewrite) -> None:
+    """Algebraic strength reduction over the op registry's rewrite-legality
+    metadata, run to a fixpoint (each fold can expose the next — e.g.
+    Bonsai's per-level ``spmv → +1 → ×0.5`` collapses into one biased,
+    rescaled spmv in two steps):
+
+    * **scalar sink** — ``scalar_mul`` by an exact power of two whose sole
+      producer has a ``scale_param`` (gemv/spmv matrix, hadamard vec,
+      another scalar_mul's scalar) folds into that param; the producer's
+      rescaled output *is* the scalar_mul's old value, so the node aliases
+      away (its bias, if already folded, rescales too).
+    * **scalar hoist** — ``scalar_mul`` feeding a sole ``scale_param``
+      consumer with one dynamic input folds forward: ``W @ (c·x) ≡
+      (c·W) @ x`` bitwise for pow2 ``c``; the consumer rewires past it.
+    * **bias fold** — ``add``/``sub`` of a constant (a ``vec`` param or a
+      ``const`` node) whose other operand is a sole-consumer
+      ``bias_foldable`` matvec becomes that matvec's ``bias`` param — at
+      float32 the same jnp add; on the int lanes the constant lands on the
+      int32 accumulator *before* the requantizing shift (the "following
+      requantize's bias stage"), re-calibrated with the folded weights.
+
+    Every fold is gated so it is bitwise-neutral at float32; targets that
+    would change a published output (output nodes, shared consumers) are
+    left alone."""
+    bias_consts: set[str] = set()
+
+    def consumers() -> dict[str, list[str]]:
+        cons: dict[str, list[str]] = {}
+        for nid in st.topo:
+            for r in st.rinputs(nid):
+                cons.setdefault(r, []).append(nid)
+        return cons
+
+    def scale_node(pid: str, c: float, *, scale_bias: bool) -> bool:
+        """Rescale ``pid``'s scale_param by ``c``.  ``scale_bias`` says
+        whether an existing folded bias scales too: sinking a scalar_mul
+        that consumes the node scales its whole output, bias included
+        (c·(W@x + b) = (cW)@x + c·b); hoisting one that feeds it scales
+        only the matvec term (W@(c·x) + b = (cW)@x + b), so the bias must
+        stay untouched."""
+        p = st.node(pid)
+        spec = node_types.get(p.op)
+        if spec.scale_param is None or spec.scale_param not in p.params:
+            return False
+        new_params = dict(p.params)
+        scaled = _pow2_rescale(p.params[spec.scale_param], c)
+        if scaled is None:
+            return False
+        new_params[spec.scale_param] = scaled
+        if scale_bias and "bias" in p.params:
+            scaled_b = _pow2_rescale(p.params["bias"], c)
+            if scaled_b is None:
+                return False
+            new_params["bias"] = scaled_b
+        st.repl[pid] = dataclasses.replace(
+            p, params=new_params, dims=dict(p.dims), inputs=list(p.inputs))
+        return True
+
+    def try_scalar(nid: str, cons, outputs) -> bool:
+        node = st.node(nid)
+        if node.op != "scalar_mul":
+            return False
+        c = float(node.params["scalar"])
+        src = st.ref(node.inputs[0])
+        # sink into the producer (nid may be an output: it aliases to the
+        # rescaled producer, whose value is exactly nid's old value)
+        if (src in st.source.nodes and src not in outputs
+                and set(cons.get(src, ())) == {nid}
+                and scale_node(src, c, scale_bias=True)):
+            st.alias[nid] = src
+            st.algebraic.add(nid)
+            return True
+        # hoist into the sole consumer (nid's value vanishes, so it must
+        # not be an output itself)
+        users = cons.get(nid, [])
+        if nid not in outputs and len(set(users)) == 1:
+            q = users[0]
+            qn = st.node(q)
+            if len(qn.inputs) == 1 and scale_node(q, c, scale_bias=False):
+                st.repl[q].inputs[0] = node.inputs[0]
+                st.folded.add(nid)
+                st.algebraic.add(nid)
+                return True
+        return False
+
+    def try_bias(nid: str, cons, outputs) -> bool:
+        node = st.node(nid)
+        if node.op not in ("add", "sub"):
+            return False
+        # (target ref, bias vector, const-node ref or None)
+        cand: tuple[str, np.ndarray, str | None] | None = None
+        if "vec" in node.params and len(node.inputs) == 1:
+            vec = np.asarray(node.params["vec"])
+            cand = (st.ref(node.inputs[0]),
+                    np.negative(vec) if node.op == "sub" else vec, None)
+        elif len(node.inputs) == 2:
+            rin = [st.ref(s) for s in node.inputs]
+            # sub is not commutative: only the right operand is a bias
+            for pos in ((1, 0) if node.op == "add" else (1,)):
+                val = _rw_const_value(st, rin[pos])
+                if val is not None and np.issubdtype(val.dtype, np.floating):
+                    cand = (rin[1 - pos],
+                            np.negative(val) if node.op == "sub" else val,
+                            rin[pos])
+                    break
+        if cand is None:
+            return False
+        tgt, bias, cref = cand
+        if tgt not in st.source.nodes or tgt in outputs:
+            return False
+        p = st.node(tgt)
+        spec = node_types.get(p.op)
+        if (not spec.bias_foldable or "bias" in p.params
+                or set(cons.get(tgt, ())) != {nid}):
+            return False
+        st.repl[tgt] = dataclasses.replace(
+            p, params={**p.params, "bias": bias},
+            dims={**p.dims, "bias": 1}, inputs=list(p.inputs))
+        st.alias[nid] = tgt
+        st.algebraic.add(nid)
+        if cref is not None:
+            bias_consts.add(cref)
+        return True
+
+    # One fold per sweep, maps rebuilt in between: the sole-consumer and
+    # output-ref checks then never run against stale state.  Quadratic in
+    # fold count, but Table-I graphs are tens of nodes and the whole pass
+    # stays ~1 ms — correctness over a micro-optimization here.
+    changed = True
+    while changed:
+        changed = False
+        st.recompute_live()
+        cons = consumers()
+        outputs = {st.ref(o) for o in st.source.outputs}
+        for nid in st.topo:
+            if try_scalar(nid, cons, outputs) or try_bias(nid, cons, outputs):
+                changed = True
+                break
+    # a const consumed into a bias (and nothing else) was folded, not dead
+    for cref in bias_consts:
+        if cref not in st.live:
+            st.folded.add(cref)
+            st.algebraic.add(cref)
+
+
 def _fe_cse(st: _Rewrite) -> None:
     """Value-number the live graph: nodes computing the identical
     ``(op, inputs, params, dims)`` merge into the first occurrence.  Output
@@ -364,8 +610,39 @@ def _fe_cse(st: _Rewrite) -> None:
         rep = seen.get(key)
         if rep is not None and nid not in outputs:
             st.alias[nid] = rep
+            st.cse.add(nid)
         elif rep is None:
             seen[key] = nid
+    st.recompute_live()
+
+
+def _fe_hoist(st: _Rewrite) -> None:
+    """Common-*chain* hoisting across outputs.  CSE cascades through
+    duplicated interior nodes but never merges output nodes (their names
+    are the API), so two outputs at the tails of identical chains each kept
+    a private copy of the final node.  This pass merges exactly those: an
+    *output* node that (a) duplicates another *output* node and (b) sits at
+    the tail of a CSE-merged run (one of its raw inputs was merged away *by
+    the CSE pass specifically* — i.e. the duplicated region is a chain of
+    ≥ 2 nodes, not a lone node whose input merely resolved through a
+    prune/algebraic alias)
+    aliases into the computed-once chain.  Its name still publishes through
+    the alias map; the duplicate chain is gone.  The representative must
+    itself be an output so the back-end's needed-outside analysis (which
+    consults ``dfg.outputs``) keeps treating the shared tail as live."""
+    seen: dict[Any, str] = {}
+    outputs = set(st.source.outputs)
+    for nid in st.topo:
+        node = st.node(nid)
+        key = (node.op, tuple(st.rinputs(nid)),
+               tuple(sorted(node.dims.items())), _fingerprint(node.params))
+        rep = seen.get(key)
+        if rep is None:
+            seen[key] = nid
+        elif (nid in outputs and rep in outputs
+              and any(s in st.cse for s in node.inputs)):
+            st.alias[nid] = rep
+            st.hoisted.add(nid)
     st.recompute_live()
 
 
@@ -407,14 +684,18 @@ def rewrite(dfg: DFG, *, precision: str = "float32",
     pm.run("validate", _fe_validate, st)
     pm.run("prune", _fe_prune, st)
     pm.run("constant-fold", _fe_constant_fold, st)
+    pm.run("algebraic", _fe_algebraic, st)
     pm.run("cse", _fe_cse, st)
+    pm.run("hoist", _fe_hoist, st)
     new = _fe_materialize(st)
     # pruned = original nodes gone for any reason except alias/fold
     pruned = set(dfg.nodes) - set(new.nodes) - set(st.alias) - st.folded
     return RewriteResult(
         source=dfg, dfg=new, alias=dict(st.alias),
         pruned=tuple(sorted(pruned)), folded=tuple(sorted(st.folded)),
-        timings=list(pm.timings), dumps=list(pm.dumps))
+        timings=list(pm.timings), dumps=list(pm.dumps),
+        algebraic=tuple(sorted(st.algebraic)),
+        hoisted=tuple(sorted(st.hoisted)))
 
 
 # ===================================================== structural chains
@@ -427,27 +708,30 @@ def _needed_outside(dfg: DFG, succ: dict[str, list[str]], nid: str,
     return any(s != chain_next for s in succ.get(nid, []))
 
 
-def split_chain(dfg: DFG, chain: list[str],
-                budget: float | None) -> list[list[str]]:
+def split_chain(dfg: DFG, chain: list[str], budget: float | None,
+                *, prev: str | None = None) -> list[list[str]]:
     """Cost-guided chain splitting: while a chain's modeled live footprint
     (:func:`repro.core.cost_model.chain_live_bytes`) exceeds ``budget``,
     cut it at the cheapest edge — the cut that minimizes the larger half's
     footprint (ties to the earliest edge) — and recurse.  ``budget=None``
-    keeps chains maximal (the pre-split behaviour)."""
+    keeps chains maximal (the pre-split behaviour).  ``prev`` is the
+    element streaming into this chain's head when it continues a split
+    predecessor, threaded through the recursion so each sub-chain is
+    costed with the same stream selection the lowering will use."""
     if budget is None or len(chain) < 2:
         return [chain]
     from repro.core.cost_model import chain_live_bytes
 
-    if chain_live_bytes(dfg, chain) <= budget:
+    if chain_live_bytes(dfg, chain, prev=prev) <= budget:
         return [chain]
     best_i, best_cost = 1, None
     for i in range(1, len(chain)):
-        cost = max(chain_live_bytes(dfg, chain[:i]),
-                   chain_live_bytes(dfg, chain[i:]))
+        cost = max(chain_live_bytes(dfg, chain[:i], prev=prev),
+                   chain_live_bytes(dfg, chain[i:], prev=chain[i - 1]))
         if best_cost is None or cost < best_cost:
             best_i, best_cost = i, cost
-    return (split_chain(dfg, chain[:best_i], budget)
-            + split_chain(dfg, chain[best_i:], budget))
+    return (split_chain(dfg, chain[:best_i], budget, prev=prev)
+            + split_chain(dfg, chain[best_i:], budget, prev=chain[best_i - 1]))
 
 
 def cluster_chains(
@@ -675,6 +959,12 @@ def _lower_stage_float(st: _Lowering, nid: str, prev: str | None,
             return None
         if prev is None:
             stream_src = stream_in
+        onode = st.dfg.nodes.get(other[0])
+        if onode is not None and onode.op == "const":
+            # const operand: embed as a static vec row instead of streaming
+            # a full extra array (same jnp op, bitwise-identical broadcast)
+            return (_BIN_VEC[nd.op],
+                    jnp.asarray(onode.params["value"])), stream_src
         extras.append(other[0])
         return (_BIN_ARR[nd.op], len(extras) - 1), stream_src
     return None
@@ -730,6 +1020,22 @@ def _lower_stage_q(st: _Lowering, nid: str, prev: str | None,
             return None
         if prev is None:
             stream_src = stream_in
+        onode = st.dfg.nodes.get(other[0])
+        if onode is not None and onode.op == "const":
+            # const operand: embed the exact narrow-int value the per-node
+            # const step would publish (same template fn → bit-identical),
+            # as a static vec row with the same align/requantize shifts the
+            # *_arr form would use.
+            oq = st.qplan.nodes[other[0]]
+            cval = np.asarray(node_types.get("const").jax_fn_q(
+                [], onode.params, onode.dims, oq))
+            vecs.append(cval)
+            vi = len(vecs) - 1
+            if nd.op == "hadamard":
+                return ("q_hadamard_vec", (vi, e_s + e_o - out_e)), stream_src
+            e_c = min(max(e_s, e_o), min(e_s, e_o) + cap)
+            return (_Q_BIN_VEC[nd.op],
+                    (vi, e_c - e_s, e_c - e_o, e_c - out_e)), stream_src
         extras.append(other[0])
         ai = len(extras) - 1
         if nd.op == "hadamard":
@@ -843,6 +1149,8 @@ def _pass_plan(st: _Lowering) -> ExecutionPlan:
         cluster_splits=st.cluster_splits,
         folded=tuple(st.rw.folded),
         chain_splits=st.chain_splits,
+        algebraic=tuple(st.rw.algebraic),
+        hoisted=tuple(st.rw.hoisted),
     )
     plan.verify()
     return plan

@@ -21,7 +21,15 @@ every compiler stage needs to know about the op:
                        profiler and model-training flow),
   * TPU roofline     — ``flops(dims)`` / ``mem_bytes(dims)`` feeding the
                        TPU cost model in :mod:`repro.core.tpu_model`,
-  * ``max_pf(dims)`` — beyond which the template cannot be parallelized.
+  * ``max_pf(dims)`` — beyond which the template cannot be parallelized,
+  * rewrite legality — metadata the front-end algebraic pass
+    (:mod:`repro.core.lowering`) consults: ``scale_param`` names a static
+    param the op's output is homogeneous-linear in (scaling that param by a
+    power of two scales the output bitwise-exactly, so an adjacent
+    ``scalar_mul`` can fold into it); ``bias_foldable`` marks ops whose
+    requantize-on-write can absorb an additive constant (``params["bias"]``
+    is added to the int32 accumulator before the requantizing shift —
+    MAFIA's write-back stage gains one adder per PE).
 
 The FPGA cycle/LUT models are deliberately *not* of the exact functional form
 the paper's regression models assume (they contain ``log2`` reduction-tree and
@@ -79,6 +87,12 @@ class OpSpec:
     # -> int8 output at NodeQuant.out_exp.  None = no integer template; the
     # executor runs dequantize -> jax_fn -> requantize instead.
     jax_fn_q: Callable[[list[Any], dict[str, Any], dict[str, int], Any], Any] | None = None
+    # Algebraic-rewrite legality (front-end `algebraic` pass): a static param
+    # slot the output is homogeneous-linear in (None = scalar_mul cannot
+    # fold into this op), and whether an adjacent add/sub-of-const folds
+    # into the write-back as an accumulator bias (``params["bias"]``).
+    scale_param: str | None = None
+    bias_foldable: bool = False
 
     def dsp(self, pf: int) -> float:
         """DSP[PF] = alpha_DSP * PF (paper §IV-B) — exact by construction."""
@@ -181,6 +195,11 @@ def _q_matvec(inputs, params, dims, nq):
     jnp = _jnp()
     Wq = jnp.asarray(nq.params_q["matrix"], jnp.int32)
     acc = Wq @ jnp.asarray(inputs[0], jnp.int32).ravel()
+    if "bias" in nq.params_q:
+        # folded add-of-const (algebraic rewrite): the bias rides the int32
+        # carrier at the accumulator scale, added before the requantizing
+        # shift — the write-back adder of the biased matvec template.
+        acc = acc + jnp.asarray(nq.params_q["bias"], jnp.int32)
     e_w = nq.param_exps["matrix"]
     if np.ndim(e_w):                       # per-channel (per-output-row)
         from repro.core.quantize import requantize_rows
@@ -225,6 +244,7 @@ def _make_elementwise(
     dsp_per_pe: int = 0,
     flops_per_elem: float = 1.0,
     jax_fn_q: Callable | None = None,
+    scale_param: str | None = None,
 ) -> OpSpec:
     def infer_dims(dfg: "DFG", node: "Node") -> dict[str, int]:
         shapes = dfg.in_shapes(node.id)
@@ -268,6 +288,7 @@ def _make_elementwise(
             lut=lut,
             max_pf=lambda d: max(1, d["n"]),
             jax_fn_q=jax_fn_q,
+            scale_param=scale_param,
         )
     )
 
@@ -283,6 +304,9 @@ _make_elementwise(
     lut_per_pe=_LUT_MAC,
     dsp_per_pe=1,
     jax_fn_q=_q_elementwise("hadamard"),
+    # x ⊙ v is homogeneous-linear in the static v: a pow2 scalar_mul folds
+    # into the vec param (only the vec-param form has a static operand).
+    scale_param="vec",
 )
 _make_elementwise("relu", lambda: (lambda a: _jnp().maximum(a, 0.0)), binary=False, lut_per_pe=_LUT_CMP)
 _make_elementwise(
@@ -319,6 +343,7 @@ def _scalar_mul_spec() -> OpSpec:
             lut=lambda d, pf: 90 + _LUT_MAC * pf,
             max_pf=lambda d: max(1, d["n"]),
             jax_fn_q=_q_scalar_mul,
+            scale_param="scalar",    # c·(s·x) composes into one scalar
         )
     )
 
@@ -461,32 +486,56 @@ def _shuffle_lut(pf: int) -> float:
     return _LUT_ROUTE * pf * _log2c(pf + 1)
 
 
+def _matvec_bias(dfg: "DFG", node: "Node") -> None:
+    """Validate the optional folded-bias param of a matvec template."""
+    if "bias" in node.params:
+        b = np.asarray(node.params["bias"])
+        m = int(np.asarray(node.params["matrix"]).shape[0])
+        if b.shape != (m,):
+            raise ValueError(
+                f"{node.op}: bias {b.shape} vs output ({m},)")
+
+
 def _gemv_spec() -> OpSpec:
-    """Dense matrix(m,n) × vector(n) with the matrix as a static parameter."""
+    """Dense matrix(m,n) × vector(n) with the matrix as a static parameter.
+
+    An optional ``bias`` param (placed by the algebraic rewrite pass, which
+    folds an adjacent add-of-const into the write-back) adds one vector to
+    the output — bitwise identical to the separate ``add`` node it
+    replaces, one extra adder per PE in fabric."""
 
     def infer_dims(dfg, node):
         w = node.params["matrix"]
-        return {"m": int(w.shape[0]), "n": int(w.shape[1])}
+        d = {"m": int(w.shape[0]), "n": int(w.shape[1])}
+        if "bias" in node.params:
+            d["bias"] = 1
+        return d
 
     def out_shape(dfg, node):
         (xs,) = dfg.in_shapes(node.id)
         w = node.params["matrix"]
         if _numel(xs) != w.shape[1]:
             raise ValueError(f"gemv: matrix {w.shape} vs input {xs}")
+        _matvec_bias(dfg, node)
         return (int(w.shape[0]),)
 
     def jax_fn(inputs, params, dims):
         jnp = _jnp()
-        return jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+        out = jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+        if "bias" in params:
+            out = jnp.add(out, jnp.asarray(params["bias"]))
+        return out
 
     def cycles(d, pf):
         # element-parallel MAC array over the m·n products, partial sums reduced
         # per output row; arbitration grows with pf (the truth behind βL·PF).
+        # The folded bias rides the write-back: zero extra cycles.
         work = d["m"] * d["n"]
         return math.ceil(work / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
 
     def lut(d, pf):
-        return 140 + _LUT_MAC * pf + _shuffle_lut(pf)
+        return 140 + _LUT_MAC * pf + _shuffle_lut(pf) + (
+            _LUT_ADD * pf if d.get("bias") else 0)
 
     return register(
         OpSpec(
@@ -496,12 +545,15 @@ def _gemv_spec() -> OpSpec:
             infer_dims=infer_dims,
             out_shape=out_shape,
             jax_fn=jax_fn,
-            flops=lambda d: 2.0 * d["m"] * d["n"],
-            mem_bytes=lambda d: (d["m"] * d["n"] + d["m"] + d["n"]) * _BYTES,
+            flops=lambda d: 2.0 * d["m"] * d["n"] + (d["m"] if d.get("bias") else 0),
+            mem_bytes=lambda d: (d["m"] * d["n"] + d["m"] + d["n"]
+                                 + (d["m"] if d.get("bias") else 0)) * _BYTES,
             cycles=cycles,
             lut=lut,
             max_pf=lambda d: max(1, (d["m"] * d["n"]) // 4),
             jax_fn_q=_q_matvec,
+            scale_param="matrix",
+            bias_foldable=True,
         )
     )
 
@@ -516,25 +568,33 @@ def _spmv_spec() -> OpSpec:
     def infer_dims(dfg, node):
         w = np.asarray(node.params["matrix"])
         nnz = int(np.count_nonzero(w))
-        return {"m": int(w.shape[0]), "n": int(w.shape[1]), "nnz": max(1, nnz)}
+        d = {"m": int(w.shape[0]), "n": int(w.shape[1]), "nnz": max(1, nnz)}
+        if "bias" in node.params:
+            d["bias"] = 1
+        return d
 
     def out_shape(dfg, node):
         (xs,) = dfg.in_shapes(node.id)
         w = node.params["matrix"]
         if _numel(xs) != w.shape[1]:
             raise ValueError(f"spmv: matrix {w.shape} vs input {xs}")
+        _matvec_bias(dfg, node)
         return (int(w.shape[0]),)
 
     def jax_fn(inputs, params, dims):
         jnp = _jnp()
-        return jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+        out = jnp.asarray(params["matrix"]) @ inputs[0].ravel()
+        if "bias" in params:
+            out = jnp.add(out, jnp.asarray(params["bias"]))
+        return out
 
     def cycles(d, pf):
         return math.ceil(d["nnz"] / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL + 8
 
     def lut(d, pf):
         # index-walking logic per PE is pricier than a dense MAC
-        return 200 + (_LUT_MAC + 24) * pf + _shuffle_lut(pf)
+        return 200 + (_LUT_MAC + 24) * pf + _shuffle_lut(pf) + (
+            _LUT_ADD * pf if d.get("bias") else 0)
 
     return register(
         OpSpec(
@@ -544,12 +604,15 @@ def _spmv_spec() -> OpSpec:
             infer_dims=infer_dims,
             out_shape=out_shape,
             jax_fn=jax_fn,
-            flops=lambda d: 2.0 * d["nnz"],
-            mem_bytes=lambda d: (2 * d["nnz"] + d["m"] + d["n"]) * _BYTES,
+            flops=lambda d: 2.0 * d["nnz"] + (d["m"] if d.get("bias") else 0),
+            mem_bytes=lambda d: (2 * d["nnz"] + d["m"] + d["n"]
+                                 + (d["m"] if d.get("bias") else 0)) * _BYTES,
             cycles=cycles,
             lut=lut,
             max_pf=lambda d: max(1, d["nnz"] // 4),
             jax_fn_q=_q_matvec,
+            scale_param="matrix",
+            bias_foldable=True,
         )
     )
 

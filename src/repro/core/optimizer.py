@@ -110,17 +110,46 @@ class CostContext:
                 return False
         if self.backend == "tpu":
             return True  # chips are time-shared; per-group cap is the constraint
-        assert isinstance(self.budget, FpgaBudget)
+        if not isinstance(self.budget, FpgaBudget):
+            # a hard error, not an assert: under `python -O` a bare assert
+            # strips and a TpuBudget (no .luts) would surface as a cryptic
+            # AttributeError deep inside the search loop instead.
+            raise TypeError(
+                f"backend 'fpga' requires an FpgaBudget, got "
+                f"{type(self.budget).__name__}")
         return (
             self.lut_total(group_pfs) <= self.budget.luts
             and self.dsp_total(group_pfs) <= self.budget.dsps
         )
 
 
+def _feasible_start(ctx: CostContext, warm: list[int]) -> list[int]:
+    """Clamp a warm-start PF vector into the feasible region: respect the
+    per-group caps (and the tpu power-of-two grid), then walk the largest
+    PF down until the budget fits — mirroring the black-box rounding's
+    repair loop.  Falls back to all-ones when the vector is unusable (wrong
+    length — e.g. a near-hit whose group structure drifted — or still
+    infeasible at the floor)."""
+    import math as _math
+
+    G = len(ctx.groups.members)
+    if len(warm) != G:
+        return [1] * G
+    pfs = [min(max(1, int(p)), ctx.max_pf(g)) for g, p in enumerate(warm)]
+    if ctx.backend == "tpu":
+        pfs = [1 << max(0, int(_math.floor(_math.log2(max(1, p))))) for p in pfs]
+    while not ctx.fits(pfs) and max(pfs) > 1:
+        g = max(range(G), key=lambda i: pfs[i])
+        pfs[g] = pfs[g] // 2 if ctx.backend == "tpu" else pfs[g] - 1
+    return pfs if ctx.fits(pfs) else [1] * G
+
+
 # ------------------------------------------------------------------- greedy (§IV-E-2)
-def greedy_best_pf(ctx: CostContext, metric: Metric = "latency_per_lut") -> PFResult:
-    t0 = time.perf_counter()
-    pfs = [1] * len(ctx.groups.members)
+def _greedy_climb(ctx: CostContext, metric: Metric,
+                  pfs: list[int]) -> tuple[list[int], int]:
+    """One greedy hill climb from ``pfs`` (the paper's §IV-E-2 loop):
+    repeatedly bump the best-scoring critical-path group until no move on
+    the critical path improves latency within budget."""
     iters = 0
     while True:
         iters += 1
@@ -160,6 +189,29 @@ def greedy_best_pf(ctx: CostContext, metric: Metric = "latency_per_lut") -> PFRe
             # parallelizing non-critical nodes cannot help in data-flow order.
             break
         pfs = best[1]
+    return pfs, iters
+
+
+def greedy_best_pf(ctx: CostContext, metric: Metric = "latency_per_lut",
+                   warm_start: list[int] | None = None) -> PFResult:
+    """``warm_start`` (rewrite-aware PF warm-start, per group) additionally
+    climbs from a prior solution.  The climb only ever *increases* PFs, so
+    an over-parallelized seed could strand the search past the optimum; the
+    cold all-ones climb therefore always runs too and the better endpoint
+    wins — warm starts improve quality when the seed sits in a better
+    basin, and can never regress below the cold result."""
+    t0 = time.perf_counter()
+    pfs, iters = _greedy_climb(ctx, metric, [1] * len(ctx.groups.members))
+    if warm_start is not None:
+        seed = _feasible_start(ctx, warm_start)
+        if seed != [1] * len(ctx.groups.members):
+            wpfs, witers = _greedy_climb(ctx, metric, seed)
+            iters += witers
+            better = ctx.critical(wpfs)[1] < ctx.critical(pfs)[1] or (
+                ctx.critical(wpfs)[1] == ctx.critical(pfs)[1]
+                and ctx.lut_total(wpfs) < ctx.lut_total(pfs))
+            if better:
+                pfs = wpfs
     _, lat = ctx.critical(pfs)
     return PFResult(
         group_pfs=pfs,
@@ -178,6 +230,7 @@ def blackbox_best_pf(
     max_paths: int = 4000,
     n_starts: int = 1,
     rounding_budget: int = 0,
+    warm_start: list[int] | None = None,
 ) -> PFResult:
     """Min-max formulation: minimize target latency T s.t. every path's summed
     latency <= T and resources fit.  The integer program is relaxed to reals
@@ -237,7 +290,12 @@ def blackbox_best_pf(
     total_nit = 0
     for s in range(max(1, n_starts)):
         if s == 0:
-            pf0 = np.ones(G)
+            # the primary start: a warm-start vector (rewrite-aware PF
+            # cache near-hit) when available, else the PF-1 point
+            if warm_start is not None and len(warm_start) == G:
+                pf0 = np.clip(np.asarray(warm_start, float), 1.0, caps)
+            else:
+                pf0 = np.ones(G)
         else:
             pf0 = 1.0 + rng.random(G) * (caps - 1.0)
         x0 = np.concatenate([[float(ctx.critical([1] * G)[1])], pf0])

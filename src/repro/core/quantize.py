@@ -315,6 +315,9 @@ def calibrate(
                 arr = np.asarray(node.params[pname])
                 if pname == "value" and not np.issubdtype(arr.dtype, np.floating):
                     continue            # integer constants pass through
+                bias = (np.abs(np.asarray(node.params["bias"], np.float64))
+                        if pname == "matrix" and "bias" in node.params
+                        else None)
                 if (pname == "matrix" and per_channel
                         and node.op in ("gemv", "spmv")):
                     # per-channel: one exponent per output row, each capped by
@@ -327,6 +330,10 @@ def calibrate(
                         xb = np.abs(np.asarray(env[node.inputs[0]], np.float64))
                         xb = xb.reshape(xb.shape[0], -1)
                         b1 = (xb @ np.abs(arr).T).max(axis=0)
+                        if bias is not None:
+                            # the folded bias rides the same accumulator:
+                            # bound it together with the partial sums
+                            b1 = b1 + bias
                         cap_rows = b1 > 0.0
                         caps = np.full_like(e_rows, _EXP_CLAMP)
                         caps[cap_rows] = (29 - e_in - np.ceil(
@@ -340,22 +347,42 @@ def calibrate(
                 if pname == "matrix" and node.inputs:
                     # overflow-aware scale capping (SeeDot's static
                     # accumulator analysis): the int32 MAC accumulator
-                    # holds partial sums bounded by Σ_j |W_ij·x_j|; cap
-                    # the weight exponent so that bound — observed on
-                    # the calibration batch — stays ≤ 2^29 at the
-                    # quantized scales.  Never binds at int8; protects
+                    # holds partial sums bounded by Σ_j |W_ij·x_j| (plus
+                    # the folded bias, which is added at the accumulator
+                    # scale); cap the weight exponent so that bound —
+                    # observed on the calibration batch — stays ≤ 2^29 at
+                    # the quantized scales.  Never binds at int8; protects
                     # the int16 lane's wide reductions.
                     e_in = exps.get(node.inputs[0])
                     if e_in is not None:
                         xb = np.abs(np.asarray(env[node.inputs[0]],
                                                np.float64))
                         xb = xb.reshape(xb.shape[0], -1)
-                        b1 = float((xb @ np.abs(arr).T).max())
+                        prods = xb @ np.abs(arr).T
+                        if bias is not None:
+                            prods = prods + bias
+                        b1 = float(prods.max()) if prods.size else 0.0
                         if b1 > 0.0:
                             e = min(e, 29 - e_in - math.ceil(math.log2(b1)))
                             e = max(e, -_EXP_CLAMP)
                 params_q[pname] = quantize_np(arr, e, bits)
                 param_exps[pname] = e
+            if "bias" in node.params and "matrix" in param_exps and node.inputs:
+                # folded add-of-const (algebraic rewrite): the bias is added
+                # to the int32 accumulator *before* the requantizing shift,
+                # so it is quantized at the accumulator scale 2^-(e_w+e_in)
+                # (per-row with per-channel weight scales).  The weight-exp
+                # cap above already bounded |acc| + |bias| ≤ 2^29, so the
+                # quantized bias always fits the carrier.
+                e_in = exps.get(node.inputs[0])
+                if e_in is not None:
+                    bvec = np.asarray(node.params["bias"], np.float64)
+                    e_acc = np.asarray(param_exps["matrix"], np.int64) + int(e_in)
+                    q = np.round(bvec * np.power(2.0, e_acc.astype(np.float64)))
+                    params_q["bias"] = np.clip(
+                        q, -(2**31 - 1), 2**31 - 1).astype(np.int32)
+                    param_exps["bias"] = (
+                        e_acc if np.ndim(e_acc) else int(e_acc))
         nodes[nid] = NodeQuant(
             in_exps=tuple(exps.get(s) for s in node.inputs),
             out_exp=exps.get(nid),

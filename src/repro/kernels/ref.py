@@ -48,6 +48,11 @@ def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 #   ("tanh"|"sigmoid"|"relu"|"exp", None)
 #   ("add_arr"|"sub_arr"|"hadamard_arr", i)  — second operand is extras[i],
 #                                              same shape as the stream.
+# ``*_vec`` operands carry the static values the lowering embedded in the
+# stage program: a node's ``vec`` param, or the value of a ``const``-node
+# operand (the chain-decompose pass embeds constants as broadcast rows
+# instead of streaming them as full ``*_arr`` extras — same jnp op, one
+# (1, bn) row of VMEM instead of a (bb, bn) tile).
 Stage = tuple[str, object]
 
 

@@ -12,9 +12,10 @@ size; the Python layer only does queue bookkeeping — mirroring the
 slot/queue split of the transformer engine.
 
 Programs are cached per ``(benchmark, trained, seed, backend, strategy,
-metric, pipelining, use_pallas, precision)`` — repeat engines (and repeat
-benchmark sweeps) never recompile: :func:`configs.classical.build` is
-deterministic in those knobs, so the key fully identifies the program.
+metric, pipelining, use_pallas, precision, per_channel,
+chain_split_bytes)`` — repeat engines (and repeat benchmark sweeps) never
+recompile: :func:`configs.classical.build` is deterministic in those knobs,
+so the key fully identifies the program.
 
 ``precision="int8"`` (or ``"int16"``) serves the fixed-point program the
 paper's workloads actually run: the compiler calibrates power-of-two scales
@@ -34,6 +35,7 @@ import numpy as np
 
 from repro.configs.classical import ClassicalBenchmark, build, training_split
 from repro.core.compiler import BatchedProgram, CompiledProgram, MafiaCompiler
+from repro.core.lowering import DEFAULT_CHAIN_SPLIT_BYTES
 
 _CALIB_SAMPLES = 256     # training-split rows used for int8 scale calibration
 
@@ -57,6 +59,7 @@ def get_program(
     use_pallas: bool = False,
     precision: str = "float32",
     per_channel: bool = False,
+    chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
 ) -> CompiledProgram:
     """Compile (or fetch from cache) one classical benchmark program.
 
@@ -66,10 +69,13 @@ def get_program(
     recompile.  With ``precision="int8"`` the int8 scales are calibrated
     from the benchmark's (deterministic, seeded) training split
     (``per_channel=True`` adds per-output-row weight scales).
+    ``chain_split_bytes`` is the compiler's per-chain VMEM budget; it is
+    part of the cache key — two callers wanting different budgets get
+    different plans, never a silently shared one.
     """
     name = bench if isinstance(bench, str) else bench.name
     key = (name, trained, seed, backend, strategy, metric, pipelining,
-           use_pallas, precision, per_channel)
+           use_pallas, precision, per_channel, chain_split_bytes)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         dfg, _, _ = build(bench, trained=trained, seed=seed)
@@ -80,7 +86,7 @@ def get_program(
         compiler = MafiaCompiler(
             backend=backend, strategy=strategy, metric=metric,
             pipelining=pipelining, use_pallas=use_pallas, precision=precision,
-            per_channel=per_channel)
+            per_channel=per_channel, chain_split_bytes=chain_split_bytes)
         prog = compiler.compile(dfg, calib=calib)
         _PROGRAM_CACHE[key] = prog
     return prog

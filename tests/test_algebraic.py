@@ -1,0 +1,588 @@
+"""Algebraic rewrite suite + rewrite-aware PF warm-starts.
+
+Covers the front-end ``algebraic`` pass (scalar_mul-into-weights both
+directions, add/sub-of-const into the matvec's requantize bias stage), the
+``hoist`` pass (common chains shared across outputs), the extended prune
+identity folds, const operands embedded as static vec stages in fused
+chains, and the compiler's structural-hash PF warm-start cache.
+
+The invariants mirror the compile pipeline's contract: every rewrite is
+bitwise-neutral at float32 against the unrewritten :func:`execute` oracle,
+and on the int8/int16 lanes the rewritten program's per-sample / map / vmap
+lanes agree bitwise and match the hand-rewritten twin's program exactly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import BENCHMARKS, build
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+from repro.core.lowering import ChainStep, lower, rewrite
+
+PRECISIONS = ("float32", "int8", "int16")
+
+
+def _matvec_scaled(op="gemv", scalar=0.5, m=10, n=16, seed=0):
+    """x → matvec → scalar_mul(scalar) → tanh, plus its hand-folded twin."""
+    rng = np.random.default_rng(seed)
+    W = (rng.normal(size=(m, n)) * 0.5).astype(np.float32)
+    g = DFG("doped")
+    g.add_input("x", (n,))
+    mv = g.add(op, "x", id="mv", matrix=W)
+    s = g.add("scalar_mul", mv, id="s", scalar=scalar)
+    t = g.add("tanh", s, id="t")
+    g.mark_output(t)
+    twin = DFG("twin")
+    twin.add_input("x", (n,))
+    mv2 = twin.add(op, "x", id="mv", matrix=W * np.float32(scalar))
+    t2 = twin.add("tanh", mv2, id="t")
+    twin.mark_output(t2)
+    return g, twin
+
+
+# ------------------------------------------------- scalar_mul into weights
+@pytest.mark.parametrize("op", ["gemv", "spmv"])
+def test_scalar_sink_folds_into_weights(op):
+    g, _ = _matvec_scaled(op)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"mv", "t"}
+    assert rw.alias["s"] == "mv" and "s" in rw.algebraic
+    # the static param was rescaled, the node id survived
+    src = g.nodes["mv"].params["matrix"]
+    np.testing.assert_array_equal(rw.dfg.nodes["mv"].params["matrix"],
+                                  src * np.float32(0.5))
+    # the source graph is untouched
+    assert g.nodes["s"].op == "scalar_mul"
+
+
+def test_scalar_hoist_folds_through_consumer():
+    """scalar_mul *feeding* a matvec: W @ (c·x) ≡ (c·W) @ x for pow2 c."""
+    rng = np.random.default_rng(1)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    g = DFG("pre")
+    g.add_input("x", (8,))
+    s = g.add("scalar_mul", "x", id="s", scalar=2.0)
+    mv = g.add("gemv", s, id="mv", matrix=W)
+    g.mark_output(mv)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"mv"}
+    assert rw.dfg.nodes["mv"].inputs == ["x"]
+    assert "s" in rw.folded and "s" in rw.algebraic
+    x = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["mv"]),
+                                  np.asarray(execute(g, x=x)["mv"]))
+
+
+def test_scalar_hoist_into_biased_matvec_leaves_bias_unscaled():
+    """Regression: hoisting c through a matvec that already carries a bias
+    must scale only the matvec term — W @ (c·x) + b ≡ (c·W) @ x + b; the
+    sink direction by contrast scales the whole output, bias included."""
+    W = np.ones((3, 4), np.float32)
+    b = np.array([1.0, 2.0, 3.0], np.float32)
+    g = DFG("hoist_bias")
+    g.add_input("x", (4,))
+    s = g.add("scalar_mul", "x", id="s", scalar=2.0)
+    mv = g.add("gemv", s, id="mv", matrix=W, bias=b)
+    g.mark_output(mv)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"mv"}
+    np.testing.assert_array_equal(rw.dfg.nodes["mv"].params["bias"], b)
+    x = np.ones(4, np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["mv"]),
+                                  np.asarray(execute(g, x=x)["mv"]))
+    # sink direction: scalar_mul *after* the biased matvec scales the bias
+    g2 = DFG("sink_bias")
+    g2.add_input("x", (4,))
+    mv2 = g2.add("gemv", "x", id="mv", matrix=W, bias=b)
+    g2.add("scalar_mul", mv2, id="s", scalar=2.0)
+    g2.mark_output("s")
+    rw2 = rewrite(g2)
+    np.testing.assert_array_equal(rw2.dfg.nodes["mv"].params["bias"], b * 2)
+    out2 = build_callable(g2, jit=False, plan=lower(g2))(x=x)
+    np.testing.assert_array_equal(np.asarray(out2["s"]),
+                                  np.asarray(execute(g2, x=x)["s"]))
+
+
+def test_scalar_fold_composes_scalar_muls():
+    """c·(s·x) folds into one scalar_mul when c is a power of two."""
+    g = DFG("compose")
+    g.add_input("x", (8,))
+    a = g.add("scalar_mul", "x", id="a", scalar=0.3)
+    b = g.add("scalar_mul", a, id="b", scalar=4.0)
+    g.mark_output(b)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"a"}
+    assert rw.dfg.nodes["a"].params["scalar"] == pytest.approx(1.2)
+    x = np.random.default_rng(2).normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.asarray(execute(g, x=x)["b"]))
+
+
+def test_scalar_fold_legality_gates():
+    """Non-pow2 scalars and shared/output producers must NOT fold — the
+    first would break float32 bitwise-neutrality, the others would change a
+    published or shared value."""
+    g, _ = _matvec_scaled(scalar=0.3)           # not a power of two
+    assert set(rewrite(g).dfg.nodes) == {"mv", "s", "t"}
+
+    rng = np.random.default_rng(3)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    g2 = DFG("shared")                           # mv has a second consumer
+    g2.add_input("x", (8,))
+    mv = g2.add("gemv", "x", id="mv", matrix=W)
+    s = g2.add("scalar_mul", mv, id="s", scalar=0.5)
+    r = g2.add("relu", mv, id="r")
+    y = g2.add("add", s, r, id="y")
+    g2.mark_output(y)
+    assert "s" not in rewrite(g2).alias
+
+    g3 = DFG("outprod")                          # mv itself is an output
+    g3.add_input("x", (8,))
+    mv = g3.add("gemv", "x", id="mv", matrix=W)
+    s = g3.add("scalar_mul", mv, id="s", scalar=0.5)
+    g3.mark_output(mv, s)
+    assert set(rewrite(g3).dfg.nodes) == {"mv", "s"}
+
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_scalar_fold_bitwise_all_precisions(precision):
+    """The folded program: bitwise vs the unfused oracle at float32; on the
+    int lanes all execution lanes agree bitwise and the program is
+    *identical* to compiling the hand-folded twin (same canonical graph →
+    same calibration → same integer program)."""
+    g, twin = _matvec_scaled("spmv")
+    rng = np.random.default_rng(4)
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+    kw = dict(strategy="none", precision=precision, use_pallas=True)
+    prog = MafiaCompiler(**kw).compile(g, calib=calib)
+    tw = MafiaCompiler(**kw).compile(twin, calib=calib)
+    X = rng.normal(size=(6, 16)).astype(np.float32)
+    per = np.stack([np.asarray(prog(x=X[i])["t"]) for i in range(6)])
+    np.testing.assert_array_equal(
+        per, np.asarray(prog.batch(8, mode="map")(x=X)["t"]))
+    if precision == "float32":
+        ref = np.stack([np.asarray(execute(g, x=X[i])["t"]) for i in range(6)])
+        np.testing.assert_array_equal(per, ref)
+    else:
+        np.testing.assert_array_equal(
+            per, np.asarray(prog.batch(8, mode="vmap")(x=X)["t"]))
+    twin_out = np.stack([np.asarray(tw(x=X[i])["t"]) for i in range(6)])
+    np.testing.assert_array_equal(per, twin_out)
+
+
+# ------------------------------------------- add-of-const into requantize
+def _biased_graph(form="vec", op="spmv", m=10, n=16, seed=5):
+    rng = np.random.default_rng(seed)
+    W = (rng.normal(size=(m, n)) * 0.5).astype(np.float32)
+    c = rng.normal(size=m).astype(np.float32)
+    g = DFG(f"bias_{form}")
+    g.add_input("x", (n,))
+    mv = g.add(op, "x", id="mv", matrix=W)
+    if form == "vec":
+        a = g.add("add", mv, id="a", vec=c)
+    elif form == "const":
+        cn = g.add("const", id="cn", value=c)
+        a = g.add("add", cn, mv, id="a")         # const as *left* operand
+    else:                                        # sub of const
+        cn = g.add("const", id="cn", value=c)
+        a = g.add("sub", mv, cn, id="a")
+    t = g.add("tanh", a, id="t")
+    g.mark_output(t)
+    return g, W, c
+
+
+@pytest.mark.parametrize("form", ["vec", "const", "sub"])
+def test_bias_fold_into_matvec(form):
+    g, W, c = _biased_graph(form)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"mv", "t"}, rw.dfg.nodes
+    assert rw.alias["a"] == "mv"
+    bias = rw.dfg.nodes["mv"].params["bias"]
+    np.testing.assert_array_equal(bias, -c if form == "sub" else c)
+    assert rw.dfg.nodes["mv"].dims["bias"] == 1
+    x = np.random.default_rng(6).normal(size=16).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t"]),
+                                  np.asarray(execute(g, x=x)["t"]))
+
+
+def test_bias_fold_respects_shared_and_double_use():
+    """No fold when the matvec output is consumed elsewhere, and a second
+    add never stacks onto an existing bias (float addition is not
+    associative — (W@x + b) + c ≠ W@x + (b + c) bitwise)."""
+    rng = np.random.default_rng(7)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    g = DFG("shared_bias")
+    g.add_input("x", (8,))
+    mv = g.add("spmv", "x", id="mv", matrix=W)
+    a = g.add("add", mv, id="a", vec=np.ones(6, np.float32))
+    r = g.add("relu", mv, id="r")
+    y = g.add("hadamard", a, r, id="y")
+    g.mark_output(y)
+    assert "a" not in rewrite(g).alias
+
+    g2 = DFG("stacked")
+    g2.add_input("x", (8,))
+    mv = g2.add("spmv", "x", id="mv", matrix=W)
+    a1 = g2.add("add", mv, id="a1", vec=np.ones(6, np.float32))
+    a2 = g2.add("add", a1, id="a2", vec=np.full(6, 2.0, np.float32))
+    g2.mark_output(a2)
+    rw = rewrite(g2)
+    # first add folds; the second must survive on the biased matvec
+    assert rw.alias.get("a1") == "mv"
+    assert "a2" in rw.dfg.nodes
+    x = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g2, jit=False, plan=lower(g2))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["a2"]),
+                                  np.asarray(execute(g2, x=x)["a2"]))
+
+
+@pytest.mark.parametrize("precision", ["int8", "int16"])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_bias_fold_lane_bitwise_and_recalibrated(precision, per_channel):
+    """On the int lanes the folded bias lands on the int32 accumulator
+    before the requantizing shift; all lanes agree bitwise, the quant plan
+    carries the bias at the accumulator scale (per-row with per-channel
+    weights), and accuracy stays in the usual quantization envelope."""
+    g, W, c = _biased_graph("vec")
+    rng = np.random.default_rng(8)
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+    prog = MafiaCompiler(strategy="none", precision=precision,
+                         use_pallas=True,
+                         per_channel=per_channel).compile(g, calib=calib)
+    nq = prog.qplan.nodes["mv"]
+    assert "bias" in nq.params_q
+    assert np.ndim(nq.param_exps["bias"]) == (1 if per_channel else 0)
+    # bias is quantized at the accumulator scale e_w + e_in
+    np.testing.assert_array_equal(
+        np.asarray(nq.param_exps["bias"]),
+        np.asarray(nq.param_exps["matrix"]) + nq.in_exps[0])
+    X = rng.normal(size=(6, 16)).astype(np.float32)
+    per = np.stack([np.asarray(prog(x=X[i])["t"]) for i in range(6)])
+    for mode in ("map", "vmap"):
+        np.testing.assert_array_equal(
+            per, np.asarray(prog.batch(8, mode=mode)(x=X)["t"]))
+    ref = np.stack([np.asarray(execute(g, x=X[i])["t"]) for i in range(6)])
+    tol = 0.15 if precision == "int8" else 5e-3   # a few LSB at 2^-5 scale
+    assert np.abs(per - ref).max() < tol
+
+
+# ----------------------------------------------- extended identity folds
+def test_identity_folds_add_sub_zero_hadamard_one():
+    rng = np.random.default_rng(9)
+    g = DFG("idf")
+    g.add_input("x", (8,))
+    z = g.add("const", id="z", value=np.zeros(8, np.float32))
+    o = g.add("const", id="o", value=np.ones(8, np.float32))
+    a = g.add("add", "x", z, id="a")             # x + 0
+    b = g.add("sub", a, z, id="b")               # x - 0
+    h = g.add("hadamard", o, b, id="h")          # 1 ⊙ x (either side)
+    v = g.add("add", h, id="v", vec=np.zeros(8, np.float32))   # vec form
+    w = g.add("hadamard", v, id="w", vec=np.ones(8, np.float32))
+    t = g.add("tanh", w, id="t")
+    g.mark_output(t)
+    rw = rewrite(g)
+    assert set(rw.dfg.nodes) == {"t"}
+    assert rw.dfg.nodes["t"].inputs == ["x"]
+    x = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t"]),
+                                  np.asarray(execute(g, x=x)["t"]))
+
+
+def test_identity_folds_do_not_misfire():
+    """0 − x negates (not identity); nonzero/non-one constants stay."""
+    g = DFG("neg")
+    g.add_input("x", (4,))
+    z = g.add("const", id="z", value=np.zeros(4, np.float32))
+    s = g.add("sub", z, "x", id="s")             # 0 - x: NOT an identity
+    a = g.add("add", "x", id="a", vec=np.full(4, 1e-8, np.float32))
+    y = g.add("hadamard", s, a, id="y")
+    g.mark_output(y)
+    rw = rewrite(g)
+    assert "s" in rw.dfg.nodes and "a" in rw.dfg.nodes
+    x = np.random.default_rng(10).normal(size=4).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["y"]),
+                                  np.asarray(execute(g, x=x)["y"]))
+
+
+def test_identity_folds_stay_off_fixed_point_lanes():
+    """Int lanes keep identity nodes: their requantize can change scale."""
+    g = DFG("idq")
+    g.add_input("x", (4,))
+    a = g.add("add", "x", id="a", vec=np.zeros(4, np.float32))
+    g.add("relu", a, id="r")
+    g.mark_output("r")
+    rw = rewrite(g, precision="int8")
+    assert set(rw.dfg.nodes) == {"a", "r"}
+
+
+# --------------------------------------------------- chain hoist across outputs
+def _dup_chain_outputs(W):
+    """Two outputs at the tails of identical gemv→tanh chains, plus the
+    hand-hoisted twin (one chain, one output)."""
+    g = DFG("dup_out")
+    g.add_input("x", (8,))
+    a1 = g.add("gemv", "x", id="a1", matrix=W)
+    t1 = g.add("tanh", a1, id="t1")
+    a2 = g.add("gemv", "x", id="a2", matrix=W.copy())
+    t2 = g.add("tanh", a2, id="t2")
+    g.mark_output(t1, t2)
+    twin = DFG("hoisted")
+    twin.add_input("x", (8,))
+    a = twin.add("gemv", "x", id="a1", matrix=W)
+    t = twin.add("tanh", a, id="t1")
+    twin.mark_output(t)
+    return g, twin
+
+
+def test_chain_hoist_merges_duplicate_output_chains():
+    W = np.random.default_rng(11).normal(size=(8, 8)).astype(np.float32)
+    g, twin = _dup_chain_outputs(W)
+    p = MafiaCompiler().compile(g)
+    tw = MafiaCompiler().compile(twin)
+    assert p.plan.hoisted == ("t2",)
+    assert set(p.dfg.nodes) == {"a1", "t1"}
+    # identical assignment and schedule as the hand-hoisted twin
+    assert p.assignment == tw.assignment
+    assert p.schedule.total_cycles == tw.schedule.total_cycles
+    assert p.schedule.start == tw.schedule.start
+    assert p.lut_true == tw.lut_true and p.dsp_true == tw.dsp_true
+    # both output names still publish, with identical values
+    x = np.random.default_rng(12).normal(size=8).astype(np.float32)
+    out = p(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t1"]), np.asarray(out["t2"]))
+    np.testing.assert_array_equal(np.asarray(out["t1"]),
+                                  np.asarray(execute(g, x=x)["t1"]))
+
+
+def test_chain_hoist_leaves_lone_duplicate_outputs():
+    """A duplicated *single* output node is not a chain — both copies keep
+    their own node (their names are the API; CSE behaviour is pinned by
+    test_cse_never_merges_output_nodes)."""
+    g = DFG("lone")
+    g.add_input("x", (8,))
+    t1 = g.add("tanh", "x", id="t1")
+    t2 = g.add("tanh", "x", id="t2")
+    g.mark_output(t1, t2)
+    rw = rewrite(g)
+    assert rw.hoisted == () and set(rw.dfg.nodes) == {"t1", "t2"}
+
+
+def test_chain_hoist_gate_ignores_non_cse_aliases():
+    """Regression: the ≥2-node-chain gate must key on CSE merges
+    specifically — an output whose input merely resolved through a *prune*
+    identity alias is still a lone duplicate and must keep its node."""
+    g = DFG("prune_alias")
+    g.add_input("x", (8,))
+    a = g.add("scalar_mul", "x", id="a", scalar=1.0)   # identity → alias a→x
+    b = g.add("scalar_mul", "x", id="b", scalar=1.0)   # identity → alias b→x
+    o1 = g.add("relu", a, id="o1")
+    o2 = g.add("relu", b, id="o2")
+    g.mark_output(o1, o2)
+    rw = rewrite(g)
+    assert rw.hoisted == ()
+    assert {"o1", "o2"} <= set(rw.dfg.nodes)
+
+
+# --------------------------------------------- const embedded as vec stage
+@pytest.mark.parametrize("precision", ["float32", "int8"])
+def test_const_operand_embeds_as_vec_stage(precision):
+    """A fused chain with a const-node binary operand embeds it as a static
+    vec row (no streamed extra), bitwise vs the unfused per-node path.  The
+    const is a *shared* operand so it cannot bias-fold away."""
+    rng = np.random.default_rng(13)
+    n = 16
+    g = DFG("cemb")
+    g.add_input("x", (n,))
+    c = g.add("const", id="c", value=rng.normal(size=n).astype(np.float32))
+    t0 = g.add("tanh", "x", id="t0")
+    a = g.add("add", t0, c, id="a")
+    r = g.add("relu", a, id="r")
+    s = g.add("sub", r, c, id="s")
+    g.mark_output(s)
+    calib = rng.normal(size=(32, n)).astype(np.float32)
+    prog = MafiaCompiler(strategy="none", precision=precision,
+                         use_pallas=True).compile(g, calib=calib)
+    chains = [st for st in prog.plan.steps if isinstance(st, ChainStep)]
+    assert chains, "expected a fused chain"
+    for ch in chains:
+        assert ch.extras == (), f"const was streamed, not embedded: {ch}"
+    X = rng.normal(size=(5, n)).astype(np.float32)
+    per = np.stack([np.asarray(prog(x=X[i])["s"]) for i in range(5)])
+    for mode in ("map", "vmap"):
+        np.testing.assert_array_equal(
+            per, np.asarray(prog.batch(8, mode=mode)(x=X)["s"]))
+    if precision == "float32":
+        ref = np.stack([np.asarray(execute(g, x=X[i])["s"]) for i in range(5)])
+        np.testing.assert_array_equal(per, ref)
+    else:
+        # bitwise vs the same program lowered without fused chains
+        plain = MafiaCompiler(strategy="none", precision=precision,
+                              use_pallas=False).compile(g, calib=calib)
+        ref = np.stack([np.asarray(plain(x=X[i])["s"]) for i in range(5)])
+        np.testing.assert_array_equal(per, ref)
+
+
+# ------------------------------------------------------- PF warm-start cache
+def test_warm_start_exact_hit_returns_identical_pf_result():
+    dfg, _, _ = build(BENCHMARKS[0])
+    comp = MafiaCompiler()
+    p1 = comp.compile(dfg)
+    dfg2, _, _ = build(BENCHMARKS[0])
+    p2 = comp.compile(dfg2)
+    assert p1.pf_source == "cold" and p2.pf_source == "exact"
+    assert p2.pf_result is p1.pf_result          # the identical object
+    assert p2.assignment == p1.assignment
+    assert p2.schedule.total_cycles == p1.schedule.total_cycles
+    x = np.random.default_rng(14).normal(
+        size=dfg.graph_inputs["x"].shape).astype(np.float32)
+    o1, o2 = p1(x=x), p2(x=x)
+    for k in o1:
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+
+
+def test_warm_start_hits_on_doped_variant():
+    """A doped variant (dead code + duplicate subexpression) canonicalizes
+    to the seen graph → exact hit, identical PF assignment, no new search."""
+    dfg, _, _ = build(BENCHMARKS[4])
+    comp = MafiaCompiler()
+    p1 = comp.compile(dfg)
+    doped, _, _ = build(BENCHMARKS[4])
+    anchor = next(nid for nid, nd in doped.nodes.items()
+                  if nd.op in ("spmv", "gemv"))
+    nd = doped.nodes[anchor]
+    doped.add(nd.op, *nd.inputs, id="dup", **nd.params)   # CSE'd away
+    doped.add("sigmoid", "dup", id="dead")                # dead code
+    p2 = comp.compile(doped)
+    assert p2.pf_source == "exact"
+    assert p2.pf_result is p1.pf_result
+    assert p2.assignment == p1.assignment
+
+
+def test_warm_start_near_hit_seeds_search():
+    """Same wiring, different dims (another seed changes spmv nnz) → near
+    hit: the search runs but starts at the prior solution; the result is
+    feasible and of cold-start quality."""
+    comp = MafiaCompiler()
+    dfg, _, _ = build(BENCHMARKS[0], seed=0)
+    comp.compile(dfg)
+    dfg2, _, _ = build(BENCHMARKS[0], seed=1)
+    p2 = comp.compile(dfg2)
+    assert p2.pf_source in ("near", "exact")
+    cold = MafiaCompiler().compile(build(BENCHMARKS[0], seed=1)[0])
+    assert p2.pf_result.est_latency <= cold.pf_result.est_latency * 1.10
+
+
+def test_warm_start_disabled_and_external_assignment():
+    dfg, _, _ = build(BENCHMARKS[0])
+    comp = MafiaCompiler(warm_start=False)
+    p1 = comp.compile(dfg)
+    p2 = comp.compile(build(BENCHMARKS[0])[0])
+    assert p1.pf_source == "cold" and p2.pf_source == "cold"
+    assert p2.pf_result is not p1.pf_result
+    assert p2.assignment == p1.assignment        # determinism, not caching
+    # external assignments never consult or populate the cache
+    comp3 = MafiaCompiler()
+    p3 = comp3.compile(build(BENCHMARKS[0])[0], assignment={})
+    assert p3.pf_source == "external" and comp3._pf_cache == {}
+
+
+# --------------------------------- acceptance: doped benchmarks, 3 precisions
+def _dope(bench):
+    """Benchmark graph + a pow2 scalar_mul and an add-of-const riding the
+    first matvec, plus the hand-rewritten twin (bias + rescale applied to
+    the weights directly).  The doped probe chain is an extra output."""
+    base, _, _ = build(bench)
+    doped, _, _ = build(bench)
+    anchor = next(nid for nid, nd in doped.nodes.items()
+                  if nd.op in ("spmv", "gemv"))
+    nd = doped.nodes[anchor]
+    m = int(np.asarray(nd.params["matrix"]).shape[0])
+    c = np.linspace(-1.0, 1.0, m).astype(np.float32)
+    doped.add(nd.op, *nd.inputs, id="probe_mv", **{k: np.array(v)
+                                                   for k, v in nd.params.items()})
+    doped.add("add", "probe_mv", id="probe_add", vec=c)
+    doped.add("scalar_mul", "probe_add", id="probe_scale", scalar=0.25)
+    doped.add("tanh", "probe_scale", id="probe")
+    doped.mark_output("probe")
+
+    twin, _, _ = build(bench)
+    tn = twin.nodes[anchor]
+    twin.add(tn.op, *tn.inputs, id="probe_mv",
+             matrix=np.asarray(tn.params["matrix"]) * np.float32(0.25),
+             bias=c * np.float32(0.25))
+    twin.add("tanh", "probe_mv", id="probe")
+    twin.mark_output("probe")
+    return doped, twin
+
+
+@pytest.mark.parametrize("bench", [BENCHMARKS[0], BENCHMARKS[7], BENCHMARKS[12]],
+                         ids=lambda b: b.name)
+def test_doped_benchmarks_fold_bitwise_float32(bench):
+    """Acceptance: on real Table-I graphs the algebraic pass erases the
+    doped scalar_mul/add chain, compiles to the hand-rewritten twin's exact
+    assignment/schedule, and stays bitwise-neutral against the unrewritten
+    oracle at float32."""
+    doped, twin = _dope(bench)
+    p = MafiaCompiler().compile(doped)
+    tw = MafiaCompiler().compile(twin)
+    assert {"probe_add", "probe_scale"} <= set(p.plan.algebraic)
+    assert "probe_mv" in p.dfg.nodes and "probe_add" not in p.dfg.nodes
+    assert p.assignment == tw.assignment
+    assert p.schedule.total_cycles == tw.schedule.total_cycles
+    assert p.lut_true == tw.lut_true
+    x = np.random.default_rng(15).normal(
+        size=doped.graph_inputs["x"].shape).astype(np.float32)
+    out, ref = p(x=x), execute(doped, x=x)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+@pytest.mark.parametrize("bench", [BENCHMARKS[0], BENCHMARKS[7], BENCHMARKS[12]],
+                         ids=lambda b: b.name)
+@pytest.mark.parametrize("precision", ["int8", "int16"])
+def test_doped_benchmarks_lane_bitwise_at_fixed_point(bench, precision):
+    """Acceptance: the rewritten fixed-point program's map lane matches the
+    per-sample lane bitwise, and the doped graph compiles to the same
+    integer program as the hand-rewritten twin (bitwise outputs)."""
+    doped, twin = _dope(bench)
+    rng = np.random.default_rng(16)
+    n = doped.graph_inputs["x"].shape[0]
+    calib = rng.normal(size=(64, n)).astype(np.float32)
+    kw = dict(strategy="none", precision=precision, use_pallas=True)
+    p = MafiaCompiler(**kw).compile(doped, calib=calib)
+    tw = MafiaCompiler(**kw).compile(twin, calib=calib)
+    X = rng.normal(size=(5, n)).astype(np.float32)
+    per = {k: np.stack([np.asarray(p(x=X[i])[k]) for i in range(5)])
+           for k in ("probe",)}
+    batched = p.batch(8, mode="map")(x=X)
+    np.testing.assert_array_equal(per["probe"], np.asarray(batched["probe"]))
+    for i in range(5):
+        np.testing.assert_array_equal(np.asarray(p(x=X[i])["probe"]),
+                                      np.asarray(tw(x=X[i])["probe"]))
+
+
+def test_bonsai_levels_fold_naturally():
+    """Bonsai's per-level spmv → (+1) → (×0.5) strength-reduces to one
+    biased, rescaled spmv without any doping — the real-workload win."""
+    dfg, _, _ = build(BENCHMARKS[0])
+    p = MafiaCompiler().compile(dfg)
+    ones = [nid for nid in dfg.nodes if nid.startswith("One")]
+    halves = [nid for nid in dfg.nodes if nid.startswith("Half")]
+    assert ones and halves
+    assert set(ones + halves) <= set(p.plan.algebraic)
+    for lvl in range(len(ones)):
+        node = p.dfg.nodes[f"Dlvl{lvl}"]
+        assert "bias" in node.params and node.dims.get("bias") == 1
+    x = np.random.default_rng(17).normal(
+        size=dfg.graph_inputs["x"].shape).astype(np.float32)
+    out, ref = p(x=x), execute(dfg, x=x)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))

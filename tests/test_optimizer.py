@@ -163,3 +163,62 @@ def test_strategy_none_is_pf1():
     comp = MafiaCompiler(strategy="none")
     prog = comp.compile(dfg)
     assert all(pf == 1 for pf in prog.assignment.values())
+
+
+# ----------------------------------------------------------- budget type guard
+def test_fits_raises_type_error_on_wrong_budget_type():
+    """Regression: the FPGA budget type was guarded by a bare
+    ``assert isinstance(...)`` that strips under ``python -O``, surfacing
+    as an AttributeError deep in the search; it must be a TypeError naming
+    the offending type, optimization level notwithstanding."""
+    from repro.core.tpu_model import TpuBudget
+
+    dfg = _bonsai_dfg()
+    profile_pf1(dfg, backend="fpga")
+    groups = PFGroups.build(dfg)
+    ctx = CostContext(dfg, groups, TpuBudget(), backend="fpga")
+    with pytest.raises(TypeError, match="TpuBudget"):
+        ctx.fits([1] * len(groups.members))
+
+
+# ------------------------------------------------------------- warm starts
+def test_greedy_warm_start_from_own_solution_is_fixpoint():
+    """Seeding greedy at its own solution is a fixpoint: the seeded climb
+    exits on its first sweep and the result matches the cold climb."""
+    ctx = _ctx(_bonsai_dfg())
+    cold = greedy_best_pf(ctx)
+    warm = greedy_best_pf(ctx, warm_start=list(cold.group_pfs))
+    assert warm.group_pfs == cold.group_pfs
+    assert warm.est_latency == cold.est_latency
+
+
+def test_greedy_warm_start_never_worse_than_cold():
+    """The climb only increases PFs, so an over-parallelized seed could
+    strand the search; greedy must fall back to the cold result whenever
+    the seeded climb ends worse."""
+    ctx = _ctx(_bonsai_dfg())
+    cold = greedy_best_pf(ctx)
+    caps = [ctx.max_pf(g) for g in range(len(ctx.groups.members))]
+    warm = greedy_best_pf(ctx, warm_start=caps)   # deliberately oversized
+    assert ctx.fits(warm.group_pfs)
+    assert warm.est_latency <= cold.est_latency
+
+
+def test_greedy_warm_start_clamps_infeasible_seed():
+    """An infeasible warm start (over-cap / over-budget PFs from a near-hit
+    whose dims shrank) is repaired into the feasible region, never trusted."""
+    ctx = _ctx(_bonsai_dfg())
+    G = len(ctx.groups.members)
+    res = greedy_best_pf(ctx, warm_start=[10**6] * G)
+    assert ctx.fits(res.group_pfs)
+    # wrong-length seeds (drifted group structure) fall back to cold start
+    res2 = greedy_best_pf(ctx, warm_start=[2] * (G + 3))
+    assert ctx.fits(res2.group_pfs)
+
+
+def test_blackbox_warm_start_feasible():
+    ctx = _ctx(_protonn_dfg())
+    cold = blackbox_best_pf(ctx)
+    warm = blackbox_best_pf(ctx, warm_start=list(cold.group_pfs))
+    assert ctx.fits(warm.group_pfs)
+    assert warm.est_latency <= cold.est_latency * 1.05

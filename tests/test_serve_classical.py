@@ -135,6 +135,33 @@ def test_program_cache_hits():
     assert len(_PROGRAM_CACHE) == 3
 
 
+def test_program_cache_keys_chain_split_bytes():
+    """Two callers wanting different per-chain VMEM budgets must get
+    *distinct* compiled programs — the knob is part of the cache key, so a
+    tight-budget plan (split chains) is never silently handed to a caller
+    that asked for maximal chains (regression: the knob used to be
+    unsettable through get_program and absent from the key)."""
+    _PROGRAM_CACHE.clear()
+    wide = get_program(BENCHES[0], use_pallas=True, chain_split_bytes=None)
+    tight = get_program(BENCHES[0], use_pallas=True, chain_split_bytes=1.0)
+    assert wide is not tight
+    assert len(_PROGRAM_CACHE) == 2
+    # the knob actually reached the compiler: the tight budget cuts chains
+    assert wide.plan.chain_splits == 0
+    assert tight.plan.chain_splits > 0
+    # repeat calls hit their own entry
+    assert get_program(BENCHES[0], use_pallas=True,
+                       chain_split_bytes=None) is wide
+    assert get_program(BENCHES[0], use_pallas=True,
+                       chain_split_bytes=1.0) is tight
+    # both plans execute bitwise-identically (splits are bitwise-neutral)
+    X = _requests(BENCHES[0].split("/")[1], 4)
+    for i in range(4):
+        a, b = wide(x=X[i]), tight(x=X[i])
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
 def test_engine_accepts_prebuilt_program():
     dfg, _, _ = build(BENCHES[0])
     from repro.core import MafiaCompiler
