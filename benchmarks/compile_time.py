@@ -4,9 +4,11 @@ Three sections:
 
 * **Per-pass timings** — the PassManager behind ``lower()`` times every
   front-end (validate → prune → constant-fold → algebraic → cse → hoist)
-  and back-end (quantize-rewrite → cluster → chain-decompose → plan) pass;
-  this reports the min-of-repeats per-pass milliseconds over the largest
-  Table-I benchmark.
+  and back-end (quantize-rewrite → cluster → chain-decompose → plan →
+  linearize) pass; this reports the min-of-repeats per-pass milliseconds
+  over the largest Table-I benchmark.  ``linearize`` is the megakernel
+  compiler: it flattens the plan's encodable steps into the single-launch
+  instruction stream.
 
 * **Lane construction** — before the lowering pipeline, every
   ``build_callable`` re-derived atom ordering and cluster chain

@@ -6,16 +6,29 @@ headline claims:
 
     paper: Vivado NoOpt ≈ 14× over MCU; MAFIA ≈ 4.2× over Vivado Auto Opt;
            MAFIA ≈ 2.5× over Vivado+MAFIA.
+
+``--measured`` (implied by ``--json``) adds the **measured** execution
+lanes: per-sample wall-clock of the compiled plan under per-chain-launch
+execution (``exec_mode="interpret"`` — one kernel launch per fused chain
+plus per-node dispatches) versus the whole-program megakernel lane
+(``exec_mode="megakernel"`` — the linearized instruction stream, one cached
+launch per segment).  Both lanes interpret the *same* plan eagerly, so the
+delta isolates launch structure — the thing the megakernel removes.  The
+outputs are asserted bitwise-equal before timing.  ``--json PATH`` writes
+the simulated and measured rows for CI artifact upload.
 """
 
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
 from benchmarks.mechanisms import CYCLE_SCALE, MECHANISMS, run_mechanism
 from repro.configs.classical import BENCHMARKS, build
 
-__all__ = ["run", "collect"]
+__all__ = ["run", "collect", "collect_measured"]
 
 
 def collect(trained: bool = False) -> list[dict]:
@@ -32,13 +45,66 @@ def collect(trained: bool = False) -> list[dict]:
     return rows
 
 
+def _best_of(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        for v in out.values():
+            np.asarray(v)               # block on device completion
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def collect_measured(trained: bool = False, *, reps: int = 5) -> list[dict]:
+    """Measured per-sample wall-clock: per-chain-launch vs megakernel lane.
+
+    Eager (non-jit) execution of the same plan in both modes — the
+    per-chain-launch lane pays one kernel launch per fused chain and one
+    dispatch per remaining node each call, the megakernel lane one cached
+    single-launch per segment.  Min-of-``reps`` per lane; outputs asserted
+    bitwise-equal before timing so the comparison can never drift from the
+    parity contract.
+    """
+    from repro.core.compiler import MafiaCompiler
+    from repro.core.executor import build_callable
+
+    rows = []
+    for bench in BENCHMARKS:
+        dfg, _, _ = build(bench, trained=trained)
+        pm = MafiaCompiler(use_pallas=True,
+                           exec_mode="megakernel").compile(dfg)
+        fi = build_callable(pm.dfg, plan=pm.plan, mode="interpret", jit=False)
+        fm = build_callable(pm.dfg, plan=pm.plan, mode="megakernel", jit=False)
+        (gi, spec), = pm.dfg.graph_inputs.items()
+        x = np.random.default_rng(0).standard_normal(
+            tuple(spec.shape)).astype(np.float32)
+        oi, om = fi(**{gi: x}), fm(**{gi: x})
+        for k in oi:
+            assert np.array_equal(np.asarray(oi[k]), np.asarray(om[k])), \
+                f"{bench.name}: megakernel lane diverged on {k}"
+        fi(**{gi: x}); fm(**{gi: x})    # warm caches before timing
+        mk = pm.plan.megakernel
+        rows.append({
+            "benchmark": bench.name,
+            "chain_launch_us": _best_of(lambda: fi(**{gi: x}), reps) * 1e6,
+            "megakernel_us": _best_of(lambda: fm(**{gi: x}), reps) * 1e6,
+            "segments": len(mk.segments),
+            "islands": mk.n_islands,
+            "instrs": mk.n_instrs,
+        })
+    return rows
+
+
 def _geomean(xs) -> float:
     xs = np.asarray(list(xs), float)
     return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))
 
 
-def run() -> list[str]:
-    rows = collect()
+def run(measured: bool = False, *,
+        rows: list[dict] | None = None,
+        mrows: list[dict] | None = None) -> list[str]:
+    rows = collect() if rows is None else rows
     out = ["fig3.benchmark,mcu_us,vivado_noopt_us,vivado_auto_us,"
            "vivado_mafia_us,mafia_us"]
     for r in rows:
@@ -54,8 +120,41 @@ def run() -> list[str]:
     out.append(f"fig3.summary,auto_over_noopt,{sp_noopt:.2f},paper,7")
     out.append(f"fig3.summary,mafia_over_auto,{sp_auto:.2f},paper,4.2")
     out.append(f"fig3.summary,mafia_over_vivado_mafia,{sp_hint:.2f},paper,2.5")
+    if measured:
+        out.append("fig3.measured,benchmark,chain_launch_us,megakernel_us,"
+                   "ratio,segments,islands,instrs")
+        mrows = collect_measured() if mrows is None else mrows
+        for m in mrows:
+            ratio = m["megakernel_us"] / m["chain_launch_us"]
+            out.append(
+                f"fig3.measured,{m['benchmark']},{m['chain_launch_us']:.1f},"
+                f"{m['megakernel_us']:.1f},{ratio:.3f},{m['segments']},"
+                f"{m['islands']},{m['instrs']}")
+        sp = _geomean(m["chain_launch_us"] / m["megakernel_us"] for m in mrows)
+        out.append(f"fig3.measured.summary,megakernel_speedup_geomean,{sp:.2f}")
     return out
 
 
+def _main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--measured", action="store_true",
+                    help="add measured per-chain-launch vs megakernel lanes")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write simulated + measured rows as JSON "
+                         "(implies --measured)")
+    ns = ap.parse_args(argv)
+    measured = ns.measured or ns.json is not None
+    rows = collect()
+    mrows = collect_measured() if measured else None
+    print("\n".join(run(measured=measured, rows=rows, mrows=mrows)))
+    if ns.json is not None:
+        payload = {"simulated": rows, "measured": mrows}
+        with open(ns.json, "w") as fh:
+            json.dump(payload, fh, indent=2, default=float)
+        print(f"wrote {ns.json}")
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    _main()

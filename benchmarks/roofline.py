@@ -3,6 +3,14 @@
 Reads ``experiments/dryrun/*.json`` (produced by ``repro.launch.dryrun``)
 and prints one CSV row per (arch × shape × mesh) with the three terms, the
 dominant bottleneck, and the MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+
+The **megakernel lane** (``megakernel_lane()``) is a static traffic
+analysis of compiled classical plans: per Table-I benchmark it counts the
+kernel launches / dispatches and the intermediate HBM round-trip bytes of
+the per-chain-launch walk versus the single-launch megakernel, where every
+intermediate lives in a VMEM register slot and only graph inputs, the
+const pool, matrices and outputs cross HBM — the dispatch- and
+traffic-removal the megakernel buys before any wall-clock is measured.
 """
 
 from __future__ import annotations
@@ -11,7 +19,7 @@ import glob
 import json
 import os
 
-__all__ = ["run", "load_records"]
+__all__ = ["run", "load_records", "megakernel_lane"]
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -45,16 +53,61 @@ def _render(records: list[dict], label: str) -> list[str]:
     return out
 
 
+_MEGA_BENCHES = ("bonsai/usps-b", "protonn/usps-b", "bonsai/cifar-b")
+
+
+def megakernel_lane(benches: tuple[str, ...] = _MEGA_BENCHES) -> list[str]:
+    """Launches and intermediate-HBM bytes: per-chain walk vs megakernel."""
+    import numpy as np
+
+    from repro.configs.classical import build
+    from repro.core.compiler import MafiaCompiler
+    from repro.core.lowering import ChainStep
+
+    out = ["roofline.megakernel.benchmark,chain_launches,node_dispatches,"
+           "mega_launches,islands,instrs,reg_slots,"
+           "interm_hbm_bytes,mega_interm_hbm_bytes"]
+    for bench in benches:
+        dfg, _, _ = build(bench, seed=0)
+        prog = MafiaCompiler(use_pallas=True,
+                             exec_mode="megakernel").compile(dfg)
+        plan, mk = prog.plan, prog.plan.megakernel
+        chains = sum(1 for s in plan.steps if isinstance(s, ChainStep))
+        nodes = len(plan.steps) - chains
+        # per-chain walk: every step's result is an HBM-resident array
+        outputs = {plan.alias.get(o, o) for o in plan.outputs}
+
+        def _step_bytes(s):
+            nid = s.terminal if isinstance(s, ChainStep) else s.nid
+            shape = plan.dfg.out_shape(nid)
+            return int(np.prod(shape, dtype=np.int64)) * 4, nid
+
+        interm = sum(b for b, nid in map(_step_bytes, plan.steps)
+                     if nid not in outputs)
+        # megakernel: only island results round-trip through HBM
+        mega_interm = sum(
+            b for b, nid in (_step_bytes(plan.steps[p])
+                             for k, p in mk.items if k == "step")
+            if nid not in outputs)
+        segs = mk.segments
+        out.append(
+            f"roofline.megakernel.{bench},{chains},{nodes},"
+            f"{len(segs)},{mk.n_islands},{mk.n_instrs},"
+            f"{sum(len(s.slot_widths) for s in segs)},"
+            f"{interm},{mega_interm}")
+    return out
+
+
 def run(dryrun_dir: str = DEFAULT_DIR) -> list[str]:
     out = _render(load_records(dryrun_dir), "baseline")
     if len(out) == 1:
         out.append("roofline.note,no dry-run records found — run "
                    "`python -m repro.launch.dryrun` first")
-        return out
-    opt = load_records(OPT_DIR)
-    if opt:
-        out += _render(opt, "optimized")
-    return out
+    else:
+        opt = load_records(OPT_DIR)
+        if opt:
+            out += _render(opt, "optimized")
+    return out + megakernel_lane()
 
 
 if __name__ == "__main__":

@@ -70,6 +70,7 @@ class CompiledProgram:
     precision: str = "float32"
     qplan: Any | None = None     # QuantPlan on the fixed-point lanes
     plan: ExecutionPlan | None = None  # static plan every lane interprets
+    exec_mode: str = "interpret"  # "interpret" | "megakernel" (single-launch)
     source_dfg: DFG | None = None      # the pre-rewrite graph, for reference
     rewrite_result: RewriteResult | None = None
     # how the PF assignment was obtained: "cold" (fresh search), "near"
@@ -89,7 +90,8 @@ class CompiledProgram:
     def __call__(self, **inputs: Any) -> dict[str, Any]:
         return self.fn(**inputs)
 
-    def batch(self, max_batch: int = 64, *, mode: str = "vmap") -> "BatchedProgram":
+    def batch(self, max_batch: int = 64, *, mode: str = "vmap",
+              exec_mode: str | None = None) -> "BatchedProgram":
         """Batched execution of this program (the serving path).
 
         Returns a callable taking each graph input with a leading batch
@@ -106,8 +108,16 @@ class CompiledProgram:
         identical to calling the program once per sample.  For an int8
         program both modes are bitwise-identical: integer accumulation has
         no reassociation error.
+
+        ``exec_mode`` selects the step-execution strategy inside each lane
+        (``"interpret"`` or ``"megakernel"``, see
+        :func:`repro.core.executor.build_callable`); it defaults to the
+        mode this program was compiled with, so a megakernel-compiled
+        program serves single-launch buckets without further plumbing.
         """
-        return BatchedProgram.build(self, max_batch=max_batch, mode=mode)
+        return BatchedProgram.build(
+            self, max_batch=max_batch, mode=mode,
+            exec_mode=self.exec_mode if exec_mode is None else exec_mode)
 
 
 @dataclasses.dataclass
@@ -123,21 +133,25 @@ class BatchedProgram:
     max_batch: int
     mode: str
     fn: Callable[[dict[str, Any]], dict[str, Any]]
+    exec_mode: str = "interpret"
     stats: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def build(cls, program: CompiledProgram, *, max_batch: int = 64,
-              mode: str = "vmap") -> "BatchedProgram":
+              mode: str = "vmap",
+              exec_mode: str | None = None) -> "BatchedProgram":
         import jax
 
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if exec_mode is None:
+            exec_mode = program.exec_mode
         # every lane interprets the program's static plan — vmap and map
         # differ only in how the batch axis is driven, never in analysis.
         kw: dict[str, Any] = dict(
             fused_clusters=program.fused_clusters,
             use_pallas=program.use_pallas, precision=program.precision,
-            qplan=program.qplan, plan=program.plan)
+            qplan=program.qplan, plan=program.plan, mode=exec_mode)
         if mode == "vmap":
             inner = build_callable(program.dfg, jit=False, batch=True, **kw)
             fn = jax.jit(lambda inputs: inner(**inputs))
@@ -147,7 +161,8 @@ class BatchedProgram:
                 lambda inputs: jax.lax.map(lambda s: single(**s), inputs))
         else:
             raise ValueError(f"unknown batch mode {mode!r}")
-        return cls(program=program, max_batch=max_batch, mode=mode, fn=fn)
+        return cls(program=program, max_batch=max_batch, mode=mode, fn=fn,
+                   exec_mode=exec_mode)
 
     def bucket(self, n: int) -> int:
         """Smallest power-of-two ≥ n, capped at ``max_batch``."""
@@ -213,6 +228,7 @@ class MafiaCompiler:
         per_channel: bool = False,
         chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
         warm_start: bool = True,
+        exec_mode: str = "interpret",
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -240,11 +256,19 @@ class MafiaCompiler:
         near hit (same wiring, different dims) seeds the greedy/black-box
         search at the prior solution.  The cache is per compiler instance;
         every optimizer-relevant knob is fixed per instance, so the graph
-        hash alone is a complete key."""
+        hash alone is a complete key.
+
+        ``exec_mode="megakernel"`` makes every emitted callable (per-sample
+        and batched lanes alike) execute the plan through the linearize
+        pass's single-launch instruction stream instead of one dispatch per
+        step — see :func:`repro.core.executor.build_callable`.  Analysis is
+        unchanged: both modes interpret the same :class:`ExecutionPlan`."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
             raise ValueError(f"unknown precision {precision!r}")
+        if exec_mode not in ("interpret", "megakernel"):
+            raise ValueError(f"unknown exec_mode {exec_mode!r}")
         self.backend = backend
         self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())
         self.strategy = strategy
@@ -258,6 +282,7 @@ class MafiaCompiler:
         self.per_channel = per_channel
         self.chain_split_bytes = chain_split_bytes
         self.warm_start = warm_start
+        self.exec_mode = exec_mode
         # rewrite-aware PF warm-start caches, keyed on the canonical
         # rewritten graph's structural hash (exact: ids+ops+edges+dims;
         # near: dims-blind).  Per instance — all optimizer knobs are fixed.
@@ -408,7 +433,7 @@ class MafiaCompiler:
         plan = lower(rdfg, fused_clusters=fused, use_pallas=self.use_pallas,
                      precision=self.precision, qplan=qplan, rewritten=rw,
                      chain_split_bytes=self.chain_split_bytes)
-        fn = build_callable(rdfg, plan=plan)
+        fn = build_callable(rdfg, plan=plan, mode=self.exec_mode)
         lut_true = sum(
             node_types.get(n.op).lut(n.dims, assignment[n.id])
             for n in rdfg.nodes.values()
@@ -432,6 +457,7 @@ class MafiaCompiler:
             precision=self.precision,
             qplan=qplan,
             plan=plan,
+            exec_mode=self.exec_mode,
             source_dfg=dfg,
             rewrite_result=rw,
             pf_source=pf_source,

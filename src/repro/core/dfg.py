@@ -62,6 +62,13 @@ class DFG:
         self.nodes: dict[str, Node] = {}
         self.graph_inputs: dict[str, GraphInput] = {}
         self.outputs: list[str] = []
+        # node ids whose value is published externally *through the rewrite
+        # alias map* — i.e. the resolved targets of ``outputs``.  On a
+        # hand-built graph this is empty (outputs name their own nodes); the
+        # front-end's materialize pass fills it so liveness analyses
+        # (``_needed_outside``) keep a hoisted chain's shared tail alive
+        # even when the representative node is not itself an output.
+        self.published: frozenset[str] = frozenset()
 
     # ------------------------------------------------------------------ build
     def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:

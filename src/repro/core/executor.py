@@ -48,6 +48,7 @@ def build_callable(
     precision: str = "float32",
     qplan: Any | None = None,
     plan: ExecutionPlan | None = None,
+    mode: str = "interpret",
 ) -> Callable[..., dict[str, Any]]:
     """Compile the DFG into a function ``f(**graph_inputs) -> {output: array}``.
 
@@ -78,17 +79,33 @@ def build_callable(
     :class:`repro.core.quantize.QuantPlan` from
     :func:`repro.core.quantize.calibrate`.  The interface stays float in /
     float out, so callers (and the serving engine) are precision-blind.
+
+    ``mode`` selects the execution strategy over the plan:
+
+    * ``"interpret"`` (default) — walk the step list: one template call or
+      pipeline-kernel launch per step.  This is the oracle every other lane
+      is verified against.
+    * ``"megakernel"`` — run the linearize pass's
+      :class:`~repro.kernels.megakernel.MegakernelProgram`: whole runs of
+      encodable steps execute as a single ``pallas_call`` over a static
+      instruction stream (one launch for a fully-encodable plan); steps
+      without an ISA encoding (reductions, argmax, ...) stay interpreted as
+      plan-ordered islands.  Bitwise identical to ``"interpret"`` at
+      float32 and lane-bitwise at int8/int16.
     """
     if plan is None:
         plan = lower(dfg, fused_clusters=fused_clusters, use_pallas=use_pallas,
                      precision=precision, qplan=qplan)
-    return _interpret(plan, jit=jit, batch=batch)
+    return _interpret(plan, jit=jit, batch=batch, mode=mode)
 
 
 def _interpret(
-    plan: ExecutionPlan, *, jit: bool = True, batch: bool = False
+    plan: ExecutionPlan, *, jit: bool = True, batch: bool = False,
+    mode: str = "interpret",
 ) -> Callable[..., dict[str, Any]]:
     """Thin interpreter over a static plan (per-sample or batched lane)."""
+    if mode not in ("interpret", "megakernel"):
+        raise ValueError(f"unknown execution mode {mode!r}")
     quantized = plan.precision != "float32"
     if quantized:
         from repro.core import quantize as quantize_mod
@@ -97,12 +114,66 @@ def _interpret(
             fused_linear_chain,
             fused_linear_chain_q,
         )
+    if mode == "megakernel":
+        if plan.megakernel is None:
+            raise ValueError(
+                "plan has no megakernel program — it predates the linearize "
+                "pass; re-lower the DFG (lower()/MafiaCompiler.compile())")
+        from repro.kernels.megakernel import run_segment
     allowed = set(plan.dfg.graph_inputs)
     bits = plan.bits or 8
     # output name -> env ref, resolved through the rewrite alias once here;
     # plan.verify() already guaranteed every ref is produced (a dangling
     # alias raises a ValueError at compile time, not a KeyError here).
     out_refs = {out: _resolve(plan.alias, out) for out in plan.outputs}
+
+    def exec_step(step: NodeStep | ChainStep, env: dict[str, Any],
+                  bdim: int | None) -> None:
+        """Execute one plan step into ``env`` (shared by the interpret walk
+        and the megakernel lane's interpreted islands)."""
+        if isinstance(step, NodeStep):
+            args = [env[r] for r in step.inputs]
+            if batch and not step.inputs:
+                # zero-input node (const): one value, broadcast over the
+                # bucket so downstream vmapped templates see a batch axis.
+                val = step.fn()
+                env[step.nid] = (val if bdim is None
+                                 else jnp.broadcast_to(val, (bdim,) + val.shape))
+            else:
+                env[step.nid] = (jax.vmap(step.fn)(*args) if batch
+                                 else step.fn(*args))
+        else:  # pre-lowered fused chain: one pipeline kernel launch.
+            x = jnp.asarray(env[step.stream])
+            extras = [jnp.asarray(env[r]) for r in step.extras]
+            if step.quantized:
+                val = fused_linear_chain_q(
+                    x, step.stages,
+                    [jnp.asarray(v) for v in step.vecs], extras, bits=bits)
+            else:
+                val = fused_linear_chain(x, step.stages, extras)
+            # intermediates were proven unconsumed at lowering time; only
+            # the terminal is materialized (that is the point of fusion).
+            for nid in step.dead:
+                env[nid] = None
+            env[step.terminal] = val
+
+    def exec_segment(seg: Any, env: dict[str, Any], bdim: int | None) -> None:
+        """Run one megakernel segment (single launch) and publish its stored
+        refs.  The batched lane vmaps the whole launch over the bucket."""
+        args = [env[r] for r in seg.in_refs]
+        if batch and args:
+            outs = jax.vmap(lambda *a: tuple(run_segment(seg, a)))(*args)
+            for i, r in enumerate(seg.out_refs):
+                env[r] = outs[i].reshape((bdim,) + seg.out_shapes[i])
+        else:
+            outs = run_segment(seg, args)
+            for i, r in enumerate(seg.out_refs):
+                val = outs[i].reshape(seg.out_shapes[i])
+                if batch and bdim is not None:
+                    # zero-input segment under a batched lane: one value,
+                    # broadcast like a zero-input node step.
+                    val = jnp.broadcast_to(val, (bdim,) + val.shape)
+                env[r] = val
 
     def run(**inputs: Any) -> dict[str, Any]:
         unknown = set(inputs) - allowed
@@ -121,32 +192,15 @@ def _interpret(
             env = {k: jnp.asarray(v) for k, v in inputs.items()}
         bdim = next((v.shape[0] for v in env.values()), None) if batch else None
 
-        for step in plan.steps:
-            if isinstance(step, NodeStep):
-                args = [env[r] for r in step.inputs]
-                if batch and not step.inputs:
-                    # zero-input node (const): one value, broadcast over the
-                    # bucket so downstream vmapped templates see a batch axis.
-                    val = step.fn()
-                    env[step.nid] = (val if bdim is None
-                                     else jnp.broadcast_to(val, (bdim,) + val.shape))
-                else:
-                    env[step.nid] = (jax.vmap(step.fn)(*args) if batch
-                                     else step.fn(*args))
-            else:  # pre-lowered fused chain: one pipeline kernel launch.
-                x = jnp.asarray(env[step.stream])
-                extras = [jnp.asarray(env[r]) for r in step.extras]
-                if step.quantized:
-                    val = fused_linear_chain_q(
-                        x, step.stages,
-                        [jnp.asarray(v) for v in step.vecs], extras, bits=bits)
-                else:
-                    val = fused_linear_chain(x, step.stages, extras)
-                # intermediates were proven unconsumed at lowering time; only
-                # the terminal is materialized (that is the point of fusion).
-                for nid in step.dead:
-                    env[nid] = None
-                env[step.terminal] = val
+        if mode == "megakernel":
+            for kind, payload in plan.megakernel.items:
+                if kind == "seg":
+                    exec_segment(payload, env, bdim)
+                else:   # interpreted island: a step with no ISA encoding
+                    exec_step(plan.steps[payload], env, bdim)
+        else:
+            for step in plan.steps:
+                exec_step(step, env, bdim)
 
         if quantized:
             return {

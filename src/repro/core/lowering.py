@@ -48,7 +48,7 @@ estimator query shrinks with the graph.
 rewritten graph plus the scheduler's decisions and emits the static
 :class:`ExecutionPlan` the executor interprets::
 
-    quantize-rewrite → cluster → chain-decompose → plan
+    quantize-rewrite → cluster → chain-decompose → plan → linearize
 
 * **quantize-rewrite** — binds each node to its execution mode: ``float``,
   ``q`` (integer template ``OpSpec.jax_fn_q``, int32 accumulate +
@@ -69,6 +69,13 @@ rewritten graph plus the scheduler's decisions and emits the static
 * **plan** — flattens atoms into the final step list and checks the plan
   invariants (every node produced exactly once; chain intermediates
   suppressed only when provably unconsumed; every output resolvable).
+* **linearize** — compiles the step list to a *megakernel program*
+  (:mod:`repro.kernels.megakernel`): a flat instruction stream over a tiny
+  VLIW-ish ISA with a liveness-allocated VMEM register file, executed one
+  ``pallas_call`` per segment (one launch total when every step encodes;
+  non-encodable steps become interpreted islands of a plan-ordered hybrid).
+  The executor's ``mode="megakernel"`` runs it; per-step interpretation
+  stays the oracle.
 
 Both pipelines run under a :class:`PassManager` that records per-pass wall
 time (``ExecutionPlan.pass_timings``) and, with ``debug=True``, a per-pass
@@ -105,7 +112,8 @@ _UNARY_OPS = ("tanh", "sigmoid", "relu", "exp")
 
 FRONTEND_PASSES = ("validate", "prune", "constant-fold", "algebraic", "cse",
                    "hoist")
-BACKEND_PASSES = ("quantize-rewrite", "cluster", "chain-decompose", "plan")
+BACKEND_PASSES = ("quantize-rewrite", "cluster", "chain-decompose", "plan",
+                  "linearize")
 PASS_NAMES = FRONTEND_PASSES + BACKEND_PASSES
 
 # Default per-chain footprint budget for cost-guided splitting: a quarter of
@@ -200,6 +208,7 @@ class ExecutionPlan:
     dump: tuple[str, ...] = ()       # per-pass debug dump (debug=True only)
     algebraic: tuple[str, ...] = ()  # nodes eliminated by algebraic rewrites
     hoisted: tuple[str, ...] = ()    # output dups merged by chain hoisting
+    megakernel: Any | None = None    # MegakernelProgram (linearize pass)
 
     @property
     def chain_steps(self) -> list[ChainStep]:
@@ -442,6 +451,31 @@ def _pow2_rescale(value: Any, c: float) -> Any | None:
     return out
 
 
+def _pow2_rescale_rows(value: Any, v: Any) -> Any | None:
+    """Row-wise analogue of :func:`_pow2_rescale`: row *i* of ``value``
+    times ``v[i]`` (element *i* for a 1-D ``value``), if **every** ``v[i]``
+    is a finite nonzero power of two and every row rescales losslessly —
+    else None.  This is the legality gate for folding a hadamard-by-const
+    into a matvec: ``v ⊙ (W@x + b) = (diag(v)·W)@x + v⊙b`` is bitwise at
+    float32 exactly when each row scale only moves IEEE exponents."""
+    arr = np.asarray(value)
+    vv = np.asarray(v).ravel()
+    if (not np.issubdtype(arr.dtype, np.floating)
+            or not np.issubdtype(vv.dtype, np.floating)
+            or arr.ndim not in (1, 2) or vv.shape[0] != arr.shape[0]):
+        return None
+    mant, _ = np.frexp(np.abs(vv))
+    if not (np.all(np.isfinite(vv)) and np.all(vv != 0.0)
+            and np.all(mant == 0.5)):
+        return None
+    col = vv.astype(arr.dtype).reshape(-1, 1) if arr.ndim == 2 else (
+        vv.astype(arr.dtype))
+    out = arr * col
+    if not np.all(np.isfinite(out)) or not np.array_equal(out / col, arr):
+        return None
+    return out
+
+
 def _rw_const_value(st: _Rewrite, ref: str) -> np.ndarray | None:
     """Value of ``ref`` if it resolves to a ``const`` node (including nodes
     the constant-fold pass rewrote in place), else None."""
@@ -472,6 +506,19 @@ def _fe_algebraic(st: _Rewrite) -> None:
       float32 the same jnp add; on the int lanes the constant lands on the
       int32 accumulator *before* the requantizing shift (the "following
       requantize's bias stage"), re-calibrated with the folded weights.
+    * **scalar distribute** — ``scalar_mul`` by a pow2 ``c`` over a
+      sole-consumer ``add``/``sub`` whose operands can all absorb the
+      scale statically (consts, or sole-consumer nodes with a
+      ``scale_param``) pushes ``c`` through: ``c·(a±b) = c·a ± c·b`` is
+      exact for pow2 ``c`` (exponent shifts distribute over the sum), so
+      the scalar_mul aliases to the add/sub and the scale lands on leaf
+      params — exposing further sinks (``c·(W@x + V@y)`` becomes two
+      rescaled matvecs in one sweep each).
+    * **row scale** — ``hadamard`` by a constant vector (a ``vec`` param
+      or a ``const`` operand) over a sole-consumer matvec folds into the
+      weight rows: ``v ⊙ (W@x + b) = (diag(v)·W)@x + v⊙b``, gated on
+      every ``v[i]`` being a lossless pow2 row rescale
+      (:func:`_pow2_rescale_rows`); the hadamard aliases to the matvec.
 
     Every fold is gated so it is bitwise-neutral at float32; targets that
     would change a published output (output nodes, shared consumers) are
@@ -576,6 +623,111 @@ def _fe_algebraic(st: _Rewrite) -> None:
             bias_consts.add(cref)
         return True
 
+    def can_scale_operand(rid: str, c: float) -> bool:
+        """Dry-run: can ``rid``'s value be rescaled by ``c`` statically
+        (const value, or scale_param + folded bias), losslessly?"""
+        p = st.node(rid)
+        if p.op == "const":
+            return _pow2_rescale(p.params["value"], c) is not None
+        spec = node_types.get(p.op)
+        return (spec.scale_param is not None
+                and spec.scale_param in p.params
+                and _pow2_rescale(p.params[spec.scale_param], c) is not None
+                and ("bias" not in p.params
+                     or _pow2_rescale(p.params["bias"], c) is not None))
+
+    def scale_operand(rid: str, c: float) -> bool:
+        p = st.node(rid)
+        if p.op == "const":
+            scaled = _pow2_rescale(p.params["value"], c)
+            if scaled is None:
+                return False
+            st.repl[rid] = dataclasses.replace(
+                p, params={**p.params, "value": scaled},
+                dims=dict(p.dims), inputs=list(p.inputs))
+            return True
+        return scale_node(rid, c, scale_bias=True)
+
+    def try_distribute(nid: str, cons, outputs) -> bool:
+        node = st.node(nid)
+        if node.op != "scalar_mul":
+            return False
+        c = float(node.params["scalar"])
+        src = st.ref(node.inputs[0])
+        if src not in st.source.nodes or src in outputs:
+            return False
+        s = st.node(src)
+        if s.op not in ("add", "sub") or set(cons.get(src, ())) != {nid}:
+            return False
+        vec_scaled = None
+        if "vec" in s.params:          # add/sub-by-static-vec form
+            vec_scaled = _pow2_rescale(s.params["vec"], c)
+            if vec_scaled is None:
+                return False
+        # every dynamic operand must absorb the scale (all-or-nothing):
+        # scaling changes its value, so it must be private to the add/sub.
+        rins = set(st.ref(r) for r in s.inputs)
+        for r in rins:
+            if (r not in st.source.nodes or r in outputs
+                    or set(cons.get(r, ())) != {src}
+                    or not can_scale_operand(r, c)):
+                return False
+        for r in rins:
+            scale_operand(r, c)
+        if vec_scaled is not None:
+            sv = st.node(src)
+            st.repl[src] = dataclasses.replace(
+                sv, params={**sv.params, "vec": vec_scaled},
+                dims=dict(sv.dims), inputs=list(sv.inputs))
+        st.alias[nid] = src
+        st.algebraic.add(nid)
+        return True
+
+    def try_rowscale(nid: str, cons, outputs) -> bool:
+        node = st.node(nid)
+        if node.op != "hadamard":
+            return False
+        # (target ref, row-scale vector, const-node ref or None)
+        cand: tuple[str, np.ndarray, str | None] | None = None
+        if "vec" in node.params and len(node.inputs) == 1:
+            cand = (st.ref(node.inputs[0]),
+                    np.asarray(node.params["vec"]), None)
+        elif len(node.inputs) == 2:
+            rin = [st.ref(s) for s in node.inputs]
+            for pos in (1, 0):         # hadamard is commutative
+                val = _rw_const_value(st, rin[pos])
+                if val is not None and np.issubdtype(val.dtype, np.floating):
+                    cand = (rin[1 - pos], val, rin[pos])
+                    break
+        if cand is None:
+            return False
+        tgt, v, cref = cand
+        if tgt not in st.source.nodes or tgt in outputs:
+            return False
+        p = st.node(tgt)
+        spec = node_types.get(p.op)
+        if (spec.scale_param != "matrix" or not spec.bias_foldable
+                or set(cons.get(tgt, ())) != {nid}):
+            return False
+        new_w = _pow2_rescale_rows(p.params["matrix"], v)
+        if new_w is None:
+            return False
+        new_params = {**p.params, "matrix": new_w}
+        if "bias" in p.params:
+            new_b = _pow2_rescale_rows(p.params["bias"], v)
+            if new_b is None:
+                return False
+            new_params["bias"] = new_b
+        # pow2 row scales never flip a zero, so spmv's derived nnz (and
+        # every other dim) is unchanged — dims carry over verbatim.
+        st.repl[tgt] = dataclasses.replace(
+            p, params=new_params, dims=dict(p.dims), inputs=list(p.inputs))
+        st.alias[nid] = tgt
+        st.algebraic.add(nid)
+        if cref is not None:
+            bias_consts.add(cref)
+        return True
+
     # One fold per sweep, maps rebuilt in between: the sole-consumer and
     # output-ref checks then never run against stale state.  Quadratic in
     # fold count, but Table-I graphs are tens of nodes and the whole pass
@@ -587,7 +739,10 @@ def _fe_algebraic(st: _Rewrite) -> None:
         cons = consumers()
         outputs = {st.ref(o) for o in st.source.outputs}
         for nid in st.topo:
-            if try_scalar(nid, cons, outputs) or try_bias(nid, cons, outputs):
+            if (try_scalar(nid, cons, outputs)
+                    or try_bias(nid, cons, outputs)
+                    or try_distribute(nid, cons, outputs)
+                    or try_rowscale(nid, cons, outputs)):
                 changed = True
                 break
     # a const consumed into a bias (and nothing else) was folded, not dead
@@ -619,17 +774,19 @@ def _fe_cse(st: _Rewrite) -> None:
 def _fe_hoist(st: _Rewrite) -> None:
     """Common-*chain* hoisting across outputs.  CSE cascades through
     duplicated interior nodes but never merges output nodes (their names
-    are the API), so two outputs at the tails of identical chains each kept
-    a private copy of the final node.  This pass merges exactly those: an
-    *output* node that (a) duplicates another *output* node and (b) sits at
-    the tail of a CSE-merged run (one of its raw inputs was merged away *by
-    the CSE pass specifically* — i.e. the duplicated region is a chain of
-    ≥ 2 nodes, not a lone node whose input merely resolved through a
-    prune/algebraic alias)
-    aliases into the computed-once chain.  Its name still publishes through
-    the alias map; the duplicate chain is gone.  The representative must
-    itself be an output so the back-end's needed-outside analysis (which
-    consults ``dfg.outputs``) keeps treating the shared tail as live."""
+    are the API), so an output at the tail of a chain identical to one
+    computed elsewhere kept a private copy of the final node.  This pass
+    merges exactly those: an *output* node that (a) duplicates another node
+    — output or interior — and (b) sits at the tail of a CSE-merged run
+    (one of its raw inputs was merged away *by the CSE pass specifically* —
+    i.e. the duplicated region is a chain of ≥ 2 nodes, not a lone node
+    whose input merely resolved through a prune/algebraic alias) aliases
+    into the computed-once chain.  Its name still publishes through the
+    alias map; the duplicate chain is gone.  The representative need not be
+    an output itself: materialize records every resolved output target in
+    ``DFG.published``, which the back-end's needed-outside analysis
+    consults alongside ``dfg.outputs``, so an interior shared tail stays
+    live (never buried inside a fused chain)."""
     seen: dict[Any, str] = {}
     outputs = set(st.source.outputs)
     for nid in st.topo:
@@ -639,8 +796,7 @@ def _fe_hoist(st: _Rewrite) -> None:
         rep = seen.get(key)
         if rep is None:
             seen[key] = nid
-        elif (nid in outputs and rep in outputs
-              and any(s in st.cse for s in node.inputs)):
+        elif nid in outputs and any(s in st.cse for s in node.inputs):
             st.alias[nid] = rep
             st.hoisted.add(nid)
     st.recompute_live()
@@ -669,6 +825,11 @@ def _fe_materialize(st: _Rewrite) -> DFG:
             node, dims=dict(node.dims), inputs=[st.ref(s) for s in node.inputs],
             latency1=None, lut1=None, pf=1)
     new.outputs = list(st.source.outputs)
+    # resolved output targets: the nodes that actually publish each output
+    # value (differs from ``outputs`` when a hoisted output aliases into an
+    # interior chain tail) — liveness analyses consult this alongside
+    # ``outputs`` so a shared tail is never buried inside a fused chain.
+    new.published = frozenset(st.ref(o) for o in st.source.outputs)
     return new
 
 
@@ -702,8 +863,9 @@ def rewrite(dfg: DFG, *, precision: str = "float32",
 def _needed_outside(dfg: DFG, succ: dict[str, list[str]], nid: str,
                     chain_next: str | None) -> bool:
     """True if ``nid``'s value is consumed anywhere other than ``chain_next``
-    (outputs always count)."""
-    if nid in dfg.outputs:
+    (outputs — including aliased output targets in ``dfg.published`` —
+    always count)."""
+    if nid in dfg.outputs or nid in dfg.published:
         return True
     return any(s != chain_next for s in succ.get(nid, []))
 
@@ -1156,6 +1318,320 @@ def _pass_plan(st: _Lowering) -> ExecutionPlan:
     return plan
 
 
+# pass: linearize ---------------------------------------------------------
+_ISA_MATVEC = {"gemv": "MATVEC", "spmv": "SPMV"}
+_FLOAT_VEC_STAGES = ("add_vec", "sub_vec", "hadamard_vec")
+_FLOAT_ARR_STAGES = ("add_arr", "sub_arr", "hadamard_arr")
+
+
+def _mk_schedule_mats(body: list) -> list:
+    """Double-buffered DMA schedule: ``LOAD_MAT[0]`` opens the segment and
+    ``LOAD_MAT[k]`` issues immediately before ``MATVEC[k-1]`` — at most two
+    HBM→VMEM copies in flight, and copy ``k`` overlaps matvec ``k-1``."""
+    from repro.kernels.megakernel import Instr
+
+    mv = [(i, ins) for i, ins in enumerate(body)
+          if ins.op in ("MATVEC", "SPMV")]
+    loads_at: dict[int, list] = {}
+    for k, (pos, ins) in enumerate(mv):
+        at = 0 if k == 0 else mv[k - 1][0]
+        loads_at.setdefault(at, []).append(
+            Instr("LOAD_MAT", operand=ins.operand[0], nid=ins.nid))
+    out: list = []
+    for i, ins in enumerate(body):
+        out.extend(loads_at.get(i, ()))
+        out.append(ins)
+    return out
+
+
+def _mk_alloc_slots(body: list, widths: dict[str, int]):
+    """Liveness-based scratch-slot allocation: linear scan over the final
+    instruction order, freeing each value's slot at its last read (frees are
+    processed before the same instruction's definition, so a stage whose
+    stream dies at that stage reuses the slot in place).  The free list is
+    keyed by exact width — slots are exact-shape VMEM rows, never padded,
+    which is what keeps the float32 lane bitwise."""
+    from repro.kernels.megakernel import Instr
+
+    last_use: dict[str, int] = {}
+    for i, ins in enumerate(body):
+        for s in ins.src:
+            last_use[s] = i
+    slot_of: dict[str, int] = {}
+    slot_widths: list[int] = []
+    free: dict[int, list[int]] = {}
+    out: list = []
+    for i, ins in enumerate(body):
+        src_slots = tuple(slot_of[s] for s in ins.src)
+        for s in set(ins.src):
+            if last_use[s] == i:
+                free.setdefault(widths[s], []).append(slot_of[s])
+        dst = -1
+        if ins.dst not in (None, -1):
+            w = widths[ins.dst]
+            pool = free.get(w, [])
+            if pool:
+                dst = pool.pop()
+            else:
+                dst = len(slot_widths)
+                slot_widths.append(w)
+            slot_of[ins.dst] = dst
+        out.append(Instr(ins.op, dst=dst, src=src_slots,
+                         operand=ins.operand, nid=ins.nid))
+    return out, slot_widths
+
+
+def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
+    """Compile the plan's step list to a :class:`MegakernelProgram`: a flat
+    instruction stream over the megakernel ISA, executed one ``pallas_call``
+    per segment (one launch total when every step encodes).
+
+    The walk is greedy: consecutive encodable steps accumulate into the
+    current segment; a step with no ISA encoding (reductions, argmax, dot,
+    ...) flushes the segment and becomes an interpreted *island*, giving the
+    plan-ordered hybrid the executor's ``mode="megakernel"`` runs.  Chain
+    steps always encode (their stage programs are already the kernel
+    vocabulary); node steps encode when they are const loads, gemv/spmv
+    matvecs (float or integer template, per-tensor or per-channel
+    requantize), or stageable elementwise ops.
+
+    Values are in SSA form during encoding (env refs plus ``#acc``
+    temporaries between a MATVEC and its REQUANTIZE); slot allocation then
+    maps them onto a minimal register file of exact-width VMEM rows with
+    liveness-based reuse.  A ref is STOREd only if a step outside the
+    segment (or a program output) reads it — chain intermediates and
+    purely-internal values never leave VMEM."""
+    from repro.kernels.megakernel import (Instr, MegakernelProgram,
+                                          MegakernelSegment)
+
+    dfg = st.dfg
+    qz = st.precision != "float32"
+
+    def shape_of(ref: str) -> tuple:
+        if ref in dfg.graph_inputs:
+            return tuple(dfg.graph_inputs[ref].shape)
+        return tuple(dfg.out_shape(ref))
+
+    def width(ref: str) -> int:
+        return max(1, int(np.prod(shape_of(ref), dtype=np.int64)))
+
+    # step-level consumer map: which plan steps read each env ref
+    consumers: dict[str, set[int]] = {}
+    for i, s in enumerate(plan.steps):
+        rs = set(s.inputs) if isinstance(s, NodeStep) else {s.stream, *s.extras}
+        for r in rs:
+            consumers.setdefault(r, set()).add(i)
+    out_refs = {_resolve(plan.alias, o) for o in plan.outputs}
+
+    class _Seg:
+        """One in-flight segment: symbolic instructions (dst/src are value
+        names), const/matrix pools, and bookkeeping for the flush."""
+
+        def __init__(self) -> None:
+            self.body: list = []
+            self.consts: list[np.ndarray] = []
+            self.mats: list[np.ndarray] = []
+            self.in_refs: list[str] = []
+            self.widths: dict[str, int] = {}
+            self.order: list[str] = []       # definition order
+            self.steps: set[int] = set()
+            self.members: list[str] = []
+
+        def emit(self, op, dst=None, src=(), operand=None, nid="") -> None:
+            self.body.append(Instr(op, dst=dst, src=tuple(src),
+                                   operand=operand, nid=nid))
+
+        def define(self, ref: str, w: int) -> None:
+            self.widths[ref] = w
+            self.order.append(ref)
+
+        def pool(self, arr) -> int:
+            self.consts.append(np.asarray(arr))
+            return len(self.consts) - 1
+
+        def mat(self, arr) -> int:
+            self.mats.append(np.asarray(arr))
+            return len(self.mats) - 1
+
+        def use(self, ref: str) -> str:
+            if ref not in self.widths:
+                ii = len(self.in_refs)
+                self.in_refs.append(ref)
+                self.define(ref, width(ref))
+                self.emit("LOAD_VEC", dst=ref, operand=("in", ii), nid=ref)
+            return ref
+
+    def remap_stage(b: _Seg, stage, get_vec, get_extra):
+        """Remap one chain-vocabulary stage for the ISA: vec operands move
+        into the const pool (``vec_cis``), ``*_arr`` operand indices remap
+        to 0 (the operand rides as ``src[1]``)."""
+        op, operand = stage
+        vec_cis: tuple[int, ...] = ()
+        extra_srcs: list[str] = []
+        if op in _FLOAT_VEC_STAGES:
+            vec_cis = (b.pool(operand),)
+            stage = (op, None)
+        elif op in _FLOAT_ARR_STAGES:
+            extra_srcs.append(b.use(get_extra(operand)))
+            stage = (op, 0)
+        elif op in ("q_add_vec", "q_sub_vec"):
+            vi, sa, sb, rq = operand
+            vec_cis = (b.pool(get_vec(vi)),)
+            stage = (op, (0, sa, sb, rq))
+        elif op == "q_hadamard_vec":
+            vi, rq = operand
+            vec_cis = (b.pool(get_vec(vi)),)
+            stage = (op, (0, rq))
+        elif op in ("q_add_arr", "q_sub_arr"):
+            ai, sa, sb, rq = operand
+            extra_srcs.append(b.use(get_extra(ai)))
+            stage = (op, (0, sa, sb, rq))
+        elif op == "q_hadamard_arr":
+            ai, rq = operand
+            extra_srcs.append(b.use(get_extra(ai)))
+            stage = (op, (0, rq))
+        return stage, vec_cis, extra_srcs
+
+    def emit_stage(b: _Seg, dst: str, stream_ref: str, stage,
+                   get_vec, get_extra) -> None:
+        s0 = b.use(stream_ref)
+        stage2, vec_cis, extra_srcs = remap_stage(b, stage, get_vec, get_extra)
+        b.emit("ELEMENTWISE", dst=dst, src=(s0, *extra_srcs),
+               operand=(stage2, vec_cis), nid=dst)
+        b.define(dst, b.widths[s0])
+
+    def enc_node(b: _Seg, step: NodeStep) -> bool:
+        """Encode one node step, or return False (no mutation) to island."""
+        nid = step.nid
+        node = dfg.nodes[nid]
+        op = node.op
+        if op == "const":
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if nq.out_exp is None:       # integer passthrough const
+                    return False
+                val = np.asarray(node_types.get("const").jax_fn_q(
+                    [], node.params, node.dims, nq))
+            else:
+                val = np.asarray(node_types.get("const").jax_fn(
+                    [], node.params, node.dims))
+                if not np.issubdtype(val.dtype, np.floating):
+                    return False
+            b.emit("LOAD_VEC", dst=nid, operand=("const", b.pool(val)),
+                   nid=nid)
+            b.define(nid, width(nid))
+            return True
+        if op in _ISA_MATVEC:
+            kind = _ISA_MATVEC[op]
+            x = step.inputs[0]
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if (nq.out_exp is None or nq.in_exps[0] is None
+                        or "matrix" not in nq.params_q):
+                    return False
+                xr = b.use(x)
+                # widen weights to the int32 carrier host-side: the in-kernel
+                # dot then accumulates in int32, like the integer template.
+                mi = b.mat(np.asarray(nq.params_q["matrix"], np.int32))
+                bci = (b.pool(np.asarray(nq.params_q["bias"], np.int32))
+                       if "bias" in nq.params_q else None)
+                acc = nid + "#acc"
+                b.emit(kind, dst=acc, src=(xr,), operand=(mi, bci), nid=nid)
+                b.define(acc, width(nid))
+                e_w = nq.param_exps["matrix"]
+                if np.ndim(e_w):             # per-channel row scales
+                    shifts = (np.asarray(e_w, np.int64)
+                              + nq.in_exps[0] - nq.out_exp).astype(np.int32)
+                    b.emit("REQUANTIZE", dst=nid, src=(acc,),
+                           operand=("rows", b.pool(shifts)), nid=nid)
+                else:
+                    rq = int(e_w) + nq.in_exps[0] - nq.out_exp
+                    b.emit("REQUANTIZE", dst=nid, src=(acc,),
+                           operand=("tensor", rq), nid=nid)
+            else:
+                xr = b.use(x)
+                mi = b.mat(np.asarray(node.params["matrix"], np.float32))
+                bci = (b.pool(np.asarray(node.params["bias"], np.float32))
+                       if "bias" in node.params else None)
+                b.emit(kind, dst=nid, src=(xr,), operand=(mi, bci), nid=nid)
+            b.define(nid, width(nid))
+            return True
+        if op in STAGEABLE_OPS:
+            extras: list[str] = []
+            vecs: list[Any] = []
+            low = (_lower_stage_q(st, nid, None, None, extras, vecs) if qz
+                   else _lower_stage_float(st, nid, None, None, extras))
+            if low is None:
+                return False
+            stage, stream_src = low
+            if stream_src is None:
+                rin = st.rinputs(nid)
+                if not rin:
+                    return False
+                stream_src = rin[0]
+            emit_stage(b, nid, stream_src, stage,
+                       get_vec=vecs.__getitem__, get_extra=extras.__getitem__)
+            return True
+        return False
+
+    def enc_chain(b: _Seg, step: ChainStep) -> None:
+        """Chains always encode: their stage programs already are the kernel
+        vocabulary — one ELEMENTWISE per stage, streaming in place."""
+        cur = b.use(step.stream)
+        for nid, stage in zip(step.members, step.stages):
+            emit_stage(b, nid, cur, stage,
+                       get_vec=lambda i: step.vecs[i],
+                       get_extra=lambda i: step.extras[i])
+            cur = nid
+
+    items: list[tuple[str, Any]] = []
+    b = _Seg()
+
+    def flush() -> None:
+        nonlocal b
+        if not b.body:
+            return
+        loaded = set(b.in_refs)
+        stores = [r for r in b.order
+                  if r not in loaded and "#" not in r
+                  and (r in out_refs
+                       or (consumers.get(r, set()) - b.steps))]
+        for oi, r in enumerate(stores):
+            b.emit("STORE", src=(r,), operand=oi, nid=r)
+        body = _mk_schedule_mats(b.body)
+        instrs, slot_widths = _mk_alloc_slots(body, b.widths)
+        items.append(("seg", MegakernelSegment(
+            instrs=tuple(instrs),
+            slot_widths=tuple(slot_widths),
+            consts=tuple(b.consts),
+            matrices=tuple(b.mats),
+            in_refs=tuple(b.in_refs),
+            out_refs=tuple(stores),
+            out_widths=tuple(b.widths[r] for r in stores),
+            out_shapes=tuple(shape_of(r) for r in stores),
+            quantized=qz,
+            bits=st.bits or 8,
+            members=tuple(b.members),
+        )))
+        b = _Seg()
+
+    for idx, step in enumerate(plan.steps):
+        if isinstance(step, ChainStep):
+            enc_chain(b, step)
+            ok = True
+        else:
+            ok = enc_node(b, step)
+        if ok:
+            b.steps.add(idx)
+            b.members.extend(step.members if isinstance(step, ChainStep)
+                             else (step.nid,))
+        else:
+            flush()
+            items.append(("step", idx))
+    flush()
+    plan.megakernel = MegakernelProgram(items=tuple(items))
+
+
 # ------------------------------------------------------------------- entry
 def lower(
     dfg: DFG,
@@ -1190,6 +1666,7 @@ def lower(
     pm.run("cluster", _pass_cluster, st)
     pm.run("chain-decompose", _pass_chain_decompose, st)
     plan = pm.run("plan", _pass_plan, st)
+    pm.run("linearize", lambda s: _pass_linearize(s, plan), st)
     # front-end timings come first, whether run here or by the compiler
     fe = [t for t in rewritten.timings if t[0] in FRONTEND_PASSES]
     be = [t for t in pm.timings if t[0] in BACKEND_PASSES]

@@ -155,7 +155,8 @@ def requantize_rows(acc: Any, shifts: np.ndarray, bits: int = 8) -> Any:
     one exponent is bitwise identical to the per-tensor program."""
     jnp = _jnp()
     acc = jnp.asarray(acc, jnp.int32)
-    s = jnp.asarray(np.asarray(shifts, np.int32))
+    s = jnp.asarray(shifts, jnp.int32)   # static np array, or a traced row
+                                         # inside the megakernel
     rs = jnp.clip(s, 0, _MAX_RSHIFT)
     round_add = jnp.where(rs > 0, jnp.left_shift(1, jnp.maximum(rs - 1, 0)), 0)
     pos = jnp.right_shift(acc + round_add, rs)

@@ -107,24 +107,46 @@ def _decomposed_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int],
     """Pipelined-cluster latency under the *same* structural decomposition
     the chain-decompose pass lowers (``decompose_chains=True``): each grown
     chain — after cost-guided splitting — is one pipeline (bottleneck
-    streaming time + per-stage fill), reduction-flavoured members run as
-    direct nodes, and the units execute back to back (one kernel launch
-    each).  Estimated and executed latency therefore agree on the plan the
-    executor actually interprets."""
+    streaming time + per-stage fill) and reduction-flavoured members run as
+    direct nodes.  The units are scheduled ASAP over their intra-cluster
+    data edges, mirroring the data-flow controller at unit granularity:
+    *independent* sub-chains of a decomposed cluster (e.g. the branches of
+    a fan-out that chain-growing split apart) overlap instead of summing
+    serially, while dependent units still run back to back.  Estimated and
+    executed latency therefore agree on the plan the executor actually
+    interprets — the critical *unit path*, not the unit total."""
     from repro.core.lowering import cluster_chains
 
     units = cluster_chains(dfg, cluster, succ=succ, topo_idx=topo_idx,
                            split_bytes=split_bytes)
-    total = 0.0
+    # flatten to scheduling atoms: one per direct node / per split sub-chain
+    atoms: list[tuple[tuple[str, ...], float]] = []
+    atom_of: dict[str, int] = {}
     for kind, subs in units:
-        if kind == "node":
-            total += _node_cycles(dfg, subs[0][0], assignment)
-            continue
         for sub in subs:
-            stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL)
-                     for nid in sub]
-            total += max(stage) + _FILL * len(sub)
-    return total
+            if kind == "node":
+                dur = _node_cycles(dfg, sub[0], assignment)
+            else:
+                stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL)
+                         for nid in sub]
+                dur = max(stage) + _FILL * len(sub)
+            ai = len(atoms)
+            atoms.append((tuple(sub), dur))
+            for nid in sub:
+                atom_of[nid] = ai
+    # ASAP: a unit fires when every in-cluster producer unit has drained
+    # (units arrive in data-ready order, so producers precede consumers);
+    # inputs from outside the cluster were ready when the cluster started.
+    end: list[float] = []
+    for ai, (mem, dur) in enumerate(atoms):
+        t = 0.0
+        for nid in mem:
+            for src in dfg.nodes[nid].inputs:
+                pa = atom_of.get(src)
+                if pa is not None and pa != ai:
+                    t = max(t, end[pa])
+        end.append(t + dur)
+    return max(end) if end else 0.0
 
 
 def simulate(

@@ -1,0 +1,310 @@
+"""Whole-program megakernel — one Pallas launch per sample for a whole plan.
+
+MAFIA's claim is that the *whole program* — not per-op calls — compiles into
+one tightly-scheduled accelerator program (paper §IV-G).  The per-chain
+pipeline kernel (:mod:`repro.kernels.linear_pipeline`) removed per-node HBM
+round-trips inside a cluster; this module removes the remaining inter-step
+dispatch: the lowering pipeline's linearize pass compiles the executable
+portion of an :class:`~repro.core.lowering.ExecutionPlan` down to a flat,
+statically-scheduled instruction stream over a tiny VLIW-ish ISA, and
+:func:`run_segment` executes the whole stream in **one** ``pallas_call``.
+
+ISA (all operands static — shapes, shifts and constants are resolved at
+compile time by ``_pass_linearize``):
+
+    ==============  ==========================================================
+    ``LOAD_VEC``    ``reg[dst] ← consts[ci]`` or ``reg[dst] ← inputs[ii]``
+    ``LOAD_MAT``    start the async HBM→VMEM copy of ``matrices[mi]`` into
+                    its dedicated VMEM buffer (DMA + semaphore)
+    ``MATVEC``      wait the DMA, then ``reg[dst] ← W @ reg[src0]`` (+ static
+                    bias) — dense gemv on the VMEM-resident tile
+    ``SPMV``        same compute on a sparse (dense-with-zeros) operand —
+                    kept as a distinct opcode mirroring the paper's separate
+                    SpMV template (nnz metadata rides the operand)
+    ``ELEMENTWISE`` one fused-pipeline stage (float or ``q_*`` vocabulary of
+                    :mod:`repro.kernels.ref`) on ``reg[src0]`` (and
+                    ``reg[src1]`` for ``*_arr`` forms)
+    ``REQUANTIZE``  int lanes: requantizing shift of the int32 accumulator
+                    after a MATVEC/SPMV (per-tensor shift, or per-row shifts
+                    for per-channel scales)
+    ``STORE``       ``outputs[oi] ← reg[src0]`` (saturating to the narrow
+                    activation dtype on the int lanes)
+    ==============  ==========================================================
+
+The register file is a set of VMEM scratch rows, one ``(1, n)`` buffer per
+slot with the value's *exact* feature length — exact shapes are what keeps
+the float32 lane bitwise identical to per-node eval (padding a contraction
+changes XLA's reduction grouping).  Slots are allocated by the linearize
+pass with liveness-based reuse, so the file is far smaller than the value
+count.  Matrix operands stay in HBM (``ANY`` memory space) and are DMA'd
+into dedicated VMEM buffers; the instruction stream issues each ``LOAD_MAT``
+one matvec *ahead* of its use, so at most two copies are in flight and the
+k-th copy overlaps the (k−1)-th matvec — double-buffered tiles at
+instruction granularity.
+
+Int lanes ride the int32 carrier: inputs widen on ``LOAD_VEC``, every value
+in the file is int32 (saturated to the activation width except between a
+MATVEC and its REQUANTIZE), and ``STORE`` narrows — bit-identical to
+per-node integer eval, like the fused chains.
+
+The pure-jnp twin (:func:`repro.kernels.ref.run_segment_ref`) executes the
+same stream without Pallas and is the parity oracle for interpret mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import weakref
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import apply_stage, apply_stage_q
+
+__all__ = ["Instr", "MegakernelSegment", "MegakernelProgram", "run_segment"]
+
+ISA_OPS = ("LOAD_VEC", "LOAD_MAT", "MATVEC", "SPMV", "ELEMENTWISE",
+           "REQUANTIZE", "STORE")
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One megakernel instruction.  ``dst``/``src`` index register slots;
+    ``operand`` is the op-specific static payload (see module docstring).
+    Array payloads (constants, biases, vec operands, per-row shift tables)
+    live in the segment's const *pool* and are referenced by index ``ci`` —
+    Pallas kernels cannot close over arrays, so the pool rides as extra
+    VMEM inputs of the launch:
+
+    * ``LOAD_VEC`` — ``("const", ci)`` or ``("in", ii)``
+    * ``LOAD_MAT`` — ``mi`` (matrix index)
+    * ``MATVEC``/``SPMV`` — ``(mi, bias_ci)`` with ``bias_ci`` a pool index
+      or None (int lanes: the int32 bias at the accumulator scale)
+    * ``ELEMENTWISE`` — ``(stage, vec_cis)``: a stage tuple in the
+      :mod:`repro.kernels.ref` vocabulary (``*_arr`` index remapped to 0 →
+      ``src[1]``); q-stage ``vi`` operand indices address ``vec_cis``
+      positionally, a float ``*_vec`` stage's operand is ``vec_cis[0]``
+    * ``REQUANTIZE`` — ``("tensor", shift)`` or ``("rows", shifts_ci)``
+    * ``STORE`` — ``oi`` (output index)
+    """
+
+    op: str
+    dst: int = -1
+    src: tuple[int, ...] = ()
+    operand: Any = None
+    nid: str = ""                    # DFG node realized (debug / tracing)
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelSegment:
+    """A maximal run of ISA-encodable plan steps, compiled to one launch."""
+
+    instrs: tuple[Instr, ...]
+    slot_widths: tuple[int, ...]          # exact feature length per register
+    consts: tuple[Any, ...]               # array payload pool (extra inputs)
+    matrices: tuple[Any, ...]             # MATVEC/SPMV weight operands
+    in_refs: tuple[str, ...]              # env refs consumed, LOAD_VEC order
+    out_refs: tuple[str, ...]             # env refs produced, STORE order
+    out_widths: tuple[int, ...]
+    out_shapes: tuple[tuple[int, ...], ...]
+    quantized: bool = False
+    bits: int = 8
+    members: tuple[str, ...] = ()         # DFG nodes realized by this segment
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelProgram:
+    """The linearized plan: megakernel segments interleaved (plan order) with
+    the indices of steps that have no ISA encoding — the interpreted islands
+    of the hybrid fallback.  A fully encodable plan has one segment."""
+
+    items: tuple[tuple[str, Any], ...]    # ("seg", segment) | ("step", idx)
+
+    @property
+    def segments(self) -> list[MegakernelSegment]:
+        return [p for k, p in self.items if k == "seg"]
+
+    @property
+    def n_islands(self) -> int:
+        return sum(1 for k, _ in self.items if k == "step")
+
+    @property
+    def n_instrs(self) -> int:
+        return sum(len(s.instrs) for s in self.segments)
+
+    def summary(self) -> str:
+        segs = self.segments
+        return (f"MegakernelProgram({len(segs)} segments, "
+                f"{self.n_instrs} instrs, "
+                f"{sum(len(s.slot_widths) for s in segs)} slots, "
+                f"{self.n_islands} interpreted islands)")
+
+
+_VEC_STAGES = ("add_vec", "sub_vec", "hadamard_vec")
+
+
+def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
+    """On-core interpreter: the instruction stream unrolls into straight-line
+    code at trace time (every operand is static), exactly like MAFIA's
+    generated pipeline — there is no runtime dispatch left to do.
+
+    ``skip_dma`` (interpret mode only): the HBM→VMEM double-buffering is a
+    hardware-motivated data movement, not arithmetic — on the CPU emulation
+    the "DMA" lowers to real array copies that only add latency.  The
+    emulation reads matrix operands in place instead; every arithmetic op
+    is identical, so parity with the DMA path is bitwise."""
+    n_in, n_const, n_mat = len(seg.in_refs), len(seg.consts), len(seg.matrices)
+    n_out, n_slot = len(seg.out_refs), len(seg.slot_widths)
+    ins = refs[:n_in]
+    crefs = refs[n_in:n_in + n_const]
+    mats = refs[n_in + n_const:n_in + n_const + n_mat]
+    base = n_in + n_const + n_mat
+    outs = refs[base:base + n_out]
+    slots = refs[base + n_out:base + n_out + n_slot]
+    mbufs = refs[base + n_out + n_slot:base + n_out + n_slot + n_mat]
+    sems = refs[base + n_out + n_slot + n_mat:]
+    carrier = jnp.int32 if seg.quantized else jnp.float32
+    copies: dict[int, Any] = {}          # in-flight DMAs (trace-time only)
+
+    for instr in seg.instrs:
+        op = instr.op
+        if op == "LOAD_VEC":
+            kind, idx = instr.operand
+            src = ins[idx] if kind == "in" else crefs[idx]
+            slots[instr.dst][...] = src[...].astype(carrier)
+        elif op == "LOAD_MAT":
+            if skip_dma:
+                continue
+            mi = instr.operand
+            cp = pltpu.make_async_copy(mats[mi], mbufs[mi], sems[mi])
+            cp.start()
+            copies[mi] = cp
+        elif op in ("MATVEC", "SPMV"):
+            mi, bias_ci = instr.operand
+            if not skip_dma:
+                copies.pop(mi).wait()
+            tile = mats[mi] if skip_dma else mbufs[mi]
+            # exact shapes end to end: (m, n) @ (n,) is the same XLA dot the
+            # per-node template issues, hence bitwise at float32.
+            acc = tile[...] @ slots[instr.src[0]][0, :]
+            if bias_ci is not None:
+                acc = jnp.add(acc, crefs[bias_ci][0, :])
+            slots[instr.dst][...] = acc.reshape(1, -1)
+        elif op == "REQUANTIZE":
+            from repro.core.quantize import requantize_core, requantize_rows
+
+            kind, sh = instr.operand
+            x = slots[instr.src[0]][...]
+            if kind == "rows":           # per-channel: one shift per row
+                y = requantize_rows(x, crefs[sh][0, :], seg.bits)
+            else:
+                y = requantize_core(x, sh, seg.bits)
+            slots[instr.dst][...] = y.astype(carrier)
+        elif op == "ELEMENTWISE":
+            stage, vec_cis = instr.operand
+            x = slots[instr.src[0]][...]
+            extras = [slots[s][...] for s in instr.src[1:]]
+            if seg.quantized:
+                vv = [crefs[ci][...] for ci in vec_cis]
+                y = apply_stage_q(x, stage, vv, extras, seg.bits)
+            else:
+                if stage[0] in _VEC_STAGES:
+                    stage = (stage[0], crefs[vec_cis[0]][...])
+                y = apply_stage(x, stage, extras)
+            slots[instr.dst][...] = y
+        elif op == "STORE":
+            oref = outs[instr.operand]
+            oref[...] = slots[instr.src[0]][...].astype(oref.dtype)
+        else:
+            raise ValueError(f"unknown megakernel op {op!r}")
+
+
+_launch_cache: dict[tuple[int, bool], Any] = {}
+
+
+def _build_launch(seg: MegakernelSegment, interpret: bool):
+    """Build (once per segment) the jitted single-launch callable.
+
+    The instruction stream, const pool and matrix operands are static — the
+    accelerator program is compiled exactly once and then invoked per
+    sample, so the launch is traced once and cached; without this every
+    eager call would re-trace the whole ``pallas_call``.  In interpret mode
+    the DMA emulation buffers are dropped entirely (see ``skip_dma``)."""
+    carrier = jnp.int32 if seg.quantized else jnp.float32
+    if seg.quantized:
+        from repro.core.quantize import int_dtype
+
+        out_dtype = jnp.dtype(int_dtype(seg.bits))
+    else:
+        out_dtype = jnp.float32
+    # const/matrix pools stay host-side numpy: _build_launch may first run
+    # inside an outer trace (vmap/jit of the whole program), and any jnp op
+    # here would bake that trace's tracers into the cached closure.
+    np_carrier = np.int32 if seg.quantized else np.float32
+    crows = [np.asarray(c, np_carrier).reshape(1, -1) for c in seg.consts]
+    mats = [np.asarray(m) for m in seg.matrices]
+    kernel = functools.partial(_segment_kernel, seg=seg, skip_dma=interpret)
+    scratch = [pltpu.VMEM((1, w), carrier) for w in seg.slot_widths]
+    if not interpret:
+        scratch += [pltpu.VMEM(m.shape, m.dtype) for m in mats]
+        scratch += [pltpu.SemaphoreType.DMA for _ in mats]
+    call = pl.pallas_call(
+        kernel,
+        in_specs=(
+            [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+             for _ in range(len(seg.in_refs) + len(crows))]
+            + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY) for _ in mats]
+        ),
+        out_shape=[jax.ShapeDtypeStruct((1, w), out_dtype)
+                   for w in seg.out_widths],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+    def launch(*xs):
+        outs = call(*xs, *crows, *mats)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        return [o[0] for o in outs]
+
+    return jax.jit(launch)
+
+
+def _cached_launch(seg: MegakernelSegment, interpret: bool):
+    key = (id(seg), interpret)
+    fn = _launch_cache.get(key)
+    if fn is None:
+        fn = _build_launch(seg, interpret)
+        _launch_cache[key] = fn
+        sid = id(seg)
+        weakref.finalize(
+            seg,
+            lambda: [_launch_cache.pop((sid, b), None) for b in (False, True)],
+        )
+    return fn
+
+
+def run_segment(
+    seg: MegakernelSegment,
+    inputs: Sequence[jax.Array],
+    *,
+    interpret: bool | None = None,
+) -> list[jax.Array]:
+    """Execute one segment in a single ``pallas_call``.
+
+    ``inputs`` are the env values of ``seg.in_refs`` in order (any shape —
+    flattened to the feature axis here); returns one flat value per
+    ``seg.out_refs`` (the caller reshapes via ``seg.out_shapes``).  Int-lane
+    inputs may be narrow or int32; outputs are the narrow activation dtype.
+    The launch is traced once per segment and cached (the stream is static),
+    so repeated eager calls pay only one XLA dispatch.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    xs = [jnp.asarray(x).reshape(1, -1) for x in inputs]
+    return _cached_launch(seg, interpret)(*xs)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "spmv_ref", "gemv_ref", "matmul_ref", "linear_chain_ref",
-    "apply_stage_q", "linear_chain_q_ref",
+    "apply_stage_q", "linear_chain_q_ref", "run_segment_ref",
     "decode_attention_ref", "mamba2_ssd_ref",
 ]
 
@@ -171,6 +171,62 @@ def linear_chain_q_ref(
     for stage in stages:
         x = apply_stage_q(x, stage, vecs, extras, bits)
     return x.astype(out_dtype)
+
+
+# ----------------------------------------------------------------- megakernel
+def run_segment_ref(seg, inputs: Sequence[jax.Array]) -> list[jax.Array]:
+    """Pure-jnp oracle for :func:`repro.kernels.megakernel.run_segment`: the
+    same instruction stream executed without Pallas (register file as plain
+    arrays, DMA start/wait as no-ops).  ``seg`` is duck-typed (a
+    ``MegakernelSegment``) so this module stays import-cycle free."""
+    from repro.core.quantize import (int_dtype, requantize_core,
+                                     requantize_rows)
+
+    carrier = jnp.int32 if seg.quantized else jnp.float32
+    out_dtype = jnp.dtype(int_dtype(seg.bits)) if seg.quantized else jnp.float32
+    ins = [jnp.asarray(x).reshape(1, -1) for x in inputs]
+    crows = [jnp.asarray(c, carrier).reshape(1, -1) for c in seg.consts]
+    slots: dict[int, jax.Array] = {}
+    outs: dict[int, jax.Array] = {}
+    for instr in seg.instrs:
+        op = instr.op
+        if op == "LOAD_VEC":
+            kind, idx = instr.operand
+            src = ins[idx] if kind == "in" else crows[idx]
+            slots[instr.dst] = src.astype(carrier)
+        elif op == "LOAD_MAT":
+            pass                               # DMA is a no-op off-core
+        elif op in ("MATVEC", "SPMV"):
+            mi, bias_ci = instr.operand
+            w = jnp.asarray(seg.matrices[mi])
+            acc = w @ slots[instr.src[0]][0, :]
+            if bias_ci is not None:
+                acc = jnp.add(acc, crows[bias_ci][0, :])
+            slots[instr.dst] = acc.reshape(1, -1)
+        elif op == "REQUANTIZE":
+            kind, sh = instr.operand
+            x = slots[instr.src[0]]
+            if kind == "rows":
+                y = requantize_rows(x, crows[sh][0, :], seg.bits)
+            else:
+                y = requantize_core(x, sh, seg.bits)
+            slots[instr.dst] = y.astype(carrier)
+        elif op == "ELEMENTWISE":
+            stage, vec_cis = instr.operand
+            x = slots[instr.src[0]]
+            extras = [slots[s] for s in instr.src[1:]]
+            if seg.quantized:
+                vv = [crows[ci] for ci in vec_cis]
+                slots[instr.dst] = apply_stage_q(x, stage, vv, extras, seg.bits)
+            else:
+                if stage[0] in ("add_vec", "sub_vec", "hadamard_vec"):
+                    stage = (stage[0], crows[vec_cis[0]])
+                slots[instr.dst] = apply_stage(x, stage, extras)
+        elif op == "STORE":
+            outs[instr.operand] = slots[instr.src[0]].astype(out_dtype)
+        else:
+            raise ValueError(f"unknown megakernel op {op!r}")
+    return [outs[i][0] for i in range(len(seg.out_refs))]
 
 
 # ------------------------------------------------------------ decode attention

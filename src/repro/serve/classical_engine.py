@@ -12,10 +12,16 @@ size; the Python layer only does queue bookkeeping — mirroring the
 slot/queue split of the transformer engine.
 
 Programs are cached per ``(benchmark, trained, seed, backend, strategy,
-metric, pipelining, use_pallas, precision, per_channel,
-chain_split_bytes)`` — repeat engines (and repeat benchmark sweeps) never
+metric, pipelining, use_pallas, precision, per_channel, chain_split_bytes,
+exec_mode)`` — repeat engines (and repeat benchmark sweeps) never
 recompile: :func:`configs.classical.build` is deterministic in those knobs,
 so the key fully identifies the program.
+
+``exec_mode="megakernel"`` serves each bucket through the single-launch
+instruction stream of the linearize pass (one ``pallas_call`` per
+megakernel segment, vmapped over the bucket) instead of one dispatch per
+plan step — the serving-path realization of MAFIA's whole-program
+compilation claim.
 
 ``precision="int8"`` (or ``"int16"``) serves the fixed-point program the
 paper's workloads actually run: the compiler calibrates power-of-two scales
@@ -60,6 +66,7 @@ def get_program(
     precision: str = "float32",
     per_channel: bool = False,
     chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
+    exec_mode: str = "interpret",
 ) -> CompiledProgram:
     """Compile (or fetch from cache) one classical benchmark program.
 
@@ -75,7 +82,7 @@ def get_program(
     """
     name = bench if isinstance(bench, str) else bench.name
     key = (name, trained, seed, backend, strategy, metric, pipelining,
-           use_pallas, precision, per_channel, chain_split_bytes)
+           use_pallas, precision, per_channel, chain_split_bytes, exec_mode)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
         dfg, _, _ = build(bench, trained=trained, seed=seed)
@@ -86,7 +93,8 @@ def get_program(
         compiler = MafiaCompiler(
             backend=backend, strategy=strategy, metric=metric,
             pipelining=pipelining, use_pallas=use_pallas, precision=precision,
-            per_channel=per_channel, chain_split_bytes=chain_split_bytes)
+            per_channel=per_channel, chain_split_bytes=chain_split_bytes,
+            exec_mode=exec_mode)
         prog = compiler.compile(dfg, calib=calib)
         _PROGRAM_CACHE[key] = prog
     return prog

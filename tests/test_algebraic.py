@@ -586,3 +586,216 @@ def test_bonsai_levels_fold_naturally():
     out, ref = p(x=x), execute(dfg, x=x)
     for k in ref:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+# --------------------------------------- scalar distribute through add/sub
+def test_scalar_distribute_through_add():
+    """c·(W@x + V@y) for pow2 c pushes into both weight matrices; the
+    scalar_mul aliases to the add and the result stays bitwise."""
+    rng = np.random.default_rng(21)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    V = rng.normal(size=(6, 8)).astype(np.float32)
+    g = DFG("dist")
+    g.add_input("x", (8,))
+    g.add_input("y", (8,))
+    g.add("gemv", "x", id="a", matrix=W)
+    g.add("gemv", "y", id="b", matrix=V)
+    g.add("add", "a", "b", id="s")
+    g.add("scalar_mul", "s", id="m", scalar=0.5)
+    g.mark_output("m")
+    rw = rewrite(g)
+    assert rw.alias["m"] == "s" and "m" in rw.algebraic
+    np.testing.assert_array_equal(rw.dfg.nodes["a"].params["matrix"],
+                                  W * np.float32(0.5))
+    np.testing.assert_array_equal(rw.dfg.nodes["b"].params["matrix"],
+                                  V * np.float32(0.5))
+    x = rng.normal(size=8).astype(np.float32)
+    y = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x, y=y)
+    np.testing.assert_array_equal(np.asarray(out["m"]),
+                                  np.asarray(execute(g, x=x, y=y)["m"]))
+
+
+def test_scalar_distribute_through_sub_with_const_operand():
+    """c·(a − K) distributes into the scale_param producer AND the const
+    operand's value; sub keeps its operand order."""
+    rng = np.random.default_rng(22)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    K = rng.normal(size=6).astype(np.float32)
+    g = DFG("dist_sub")
+    g.add_input("x", (8,))
+    g.add("gemv", "x", id="a", matrix=W)
+    g.add("const", id="k", value=K)
+    g.add("sub", "a", "k", id="s")
+    g.add("scalar_mul", "s", id="m", scalar=2.0)
+    g.add("tanh", "m", id="t")
+    g.mark_output("t")
+    rw = rewrite(g)
+    # bias fold may claim the sub first (K becomes a's bias), after which
+    # the scalar sinks into a with the bias scaled — either composition
+    # ends with both terms carrying the factor 2; check numerics only.
+    x = rng.normal(size=8).astype(np.float32)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t"]),
+                                  np.asarray(execute(g, x=x)["t"]))
+    assert "m" not in rw.dfg.nodes       # the scalar_mul folded away
+
+
+def test_scalar_distribute_misfire_guards():
+    """No distribution when: c is not pow2; an operand is shared outside
+    the add; or an operand is itself a published output."""
+    rng = np.random.default_rng(23)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    V = rng.normal(size=(6, 8)).astype(np.float32)
+
+    def graph(scalar, share=False, out_operand=False):
+        g = DFG("g")
+        g.add_input("x", (8,))
+        g.add_input("y", (8,))
+        g.add("gemv", "x", id="a", matrix=W)
+        g.add("gemv", "y", id="b", matrix=V)
+        g.add("add", "a", "b", id="s")
+        g.add("scalar_mul", "s", id="m", scalar=scalar)
+        g.mark_output("m")
+        if share:
+            g.add("tanh", "a", id="t")
+            g.mark_output("t")
+        if out_operand:
+            g.mark_output("a")
+        return g
+
+    for g in (graph(0.3), graph(0.5, share=True), graph(0.5, out_operand=True)):
+        rw = rewrite(g)
+        assert "m" in rw.dfg.nodes, "distribute must not fire"
+        np.testing.assert_array_equal(rw.dfg.nodes["a"].params["matrix"], W)
+
+
+# ------------------------------------------- hadamard-of-const into rows
+def test_rowscale_folds_hadamard_into_matvec_rows():
+    """v ⊙ (W@x + b) = (diag(v)·W)@x + v⊙b for per-row pow2 v — both the
+    vec-param and const-operand hadamard forms, gemv and spmv."""
+    rng = np.random.default_rng(24)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    bias = rng.normal(size=6).astype(np.float32)
+    v = (2.0 ** rng.integers(-2, 3, size=6)).astype(np.float32)
+    x = rng.normal(size=8).astype(np.float32)
+
+    g = DFG("rows_vec")
+    g.add_input("x", (8,))
+    g.add("gemv", "x", id="mv", matrix=W, bias=bias)
+    g.add("hadamard", "mv", id="h", vec=v)
+    g.add("tanh", "h", id="t")
+    g.mark_output("t")
+    rw = rewrite(g)
+    assert rw.alias["h"] == "mv" and "h" in rw.algebraic
+    np.testing.assert_array_equal(rw.dfg.nodes["mv"].params["matrix"],
+                                  W * v[:, None])
+    np.testing.assert_array_equal(rw.dfg.nodes["mv"].params["bias"], bias * v)
+    out = build_callable(g, jit=False, plan=lower(g))(x=x)
+    np.testing.assert_array_equal(np.asarray(out["t"]),
+                                  np.asarray(execute(g, x=x)["t"]))
+
+    # const-operand form on spmv, const in either position (commutative);
+    # pow2 row scales never flip a zero, so nnz metadata stays valid
+    Wsp = W.copy()
+    Wsp[rng.random(W.shape) < 0.5] = 0.0
+    g2 = DFG("rows_const")
+    g2.add_input("x", (8,))
+    g2.add("spmv", "x", id="mv", matrix=Wsp)
+    g2.add("const", id="c", value=v)
+    g2.add("hadamard", "c", "mv", id="h")
+    g2.mark_output("h")
+    rw2 = rewrite(g2)
+    assert rw2.alias["h"] == "mv"
+    np.testing.assert_array_equal(rw2.dfg.nodes["mv"].params["matrix"],
+                                  Wsp * v[:, None])
+    assert rw2.dfg.nodes["mv"].dims["nnz"] == max(1, np.count_nonzero(Wsp))
+    out2 = build_callable(g2, jit=False, plan=lower(g2))(x=x)
+    np.testing.assert_array_equal(np.asarray(out2["h"]),
+                                  np.asarray(execute(g2, x=x)["h"]))
+
+
+def test_rowscale_misfire_guards():
+    """No row fold when: some v[i] is not pow2; the matvec is shared; or
+    the matvec is itself an output."""
+    rng = np.random.default_rng(25)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    v = (2.0 ** rng.integers(-2, 3, size=6)).astype(np.float32)
+
+    g = DFG("bad_v")
+    g.add_input("x", (8,))
+    g.add("gemv", "x", id="mv", matrix=W)
+    bad = v.copy()
+    bad[0] = 0.3
+    g.add("hadamard", "mv", id="h", vec=bad)
+    g.mark_output("h")
+    rw = rewrite(g)
+    assert "h" in rw.dfg.nodes
+    np.testing.assert_array_equal(rw.dfg.nodes["mv"].params["matrix"], W)
+
+    g2 = DFG("shared_mv")
+    g2.add_input("x", (8,))
+    g2.add("gemv", "x", id="mv", matrix=W)
+    g2.add("hadamard", "mv", id="h", vec=v)
+    g2.add("tanh", "mv", id="t")
+    g2.mark_output("h")
+    g2.mark_output("t")
+    rw2 = rewrite(g2)
+    assert "h" in rw2.dfg.nodes
+    np.testing.assert_array_equal(rw2.dfg.nodes["mv"].params["matrix"], W)
+
+    g3 = DFG("out_mv")
+    g3.add_input("x", (8,))
+    g3.add("gemv", "x", id="mv", matrix=W)
+    g3.add("hadamard", "mv", id="h", vec=v)
+    g3.mark_output("mv")
+    g3.mark_output("h")
+    rw3 = rewrite(g3)
+    assert "h" in rw3.dfg.nodes
+    np.testing.assert_array_equal(rw3.dfg.nodes["mv"].params["matrix"], W)
+
+
+# ------------------------------------ hoist with a non-output shared tail
+def test_chain_hoist_merges_into_interior_representative():
+    """An output at the tail of a chain identical to an *interior* chain
+    (the representative keeps feeding further compute) now merges; the
+    interior tail lands in ``dfg.published`` so chain fusion keeps it
+    live, and the compiled artifact matches the hand-hoisted twin."""
+    rng = np.random.default_rng(26)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    V = rng.normal(size=(5, 6)).astype(np.float32)
+
+    g = DFG("hoist_interior")
+    g.add_input("x", (8,))
+    g.add("gemv", "x", id="a1", matrix=W)
+    g.add("tanh", "a1", id="t1")               # interior: feeds b
+    g.add("gemv", "t1", id="b", matrix=V)
+    g.add("gemv", "x", id="a2", matrix=W.copy())
+    g.add("tanh", "a2", id="t2")               # output twin of t1
+    g.mark_output("b")
+    g.mark_output("t2")
+    rw = rewrite(g)
+    assert rw.alias["t2"] == "t1" and "t2" in rw.hoisted
+    assert "t1" in rw.dfg.published
+    # bitwise through the fused-chain path: t1 must not be buried dead
+    # inside the a1→t1→b chain
+    x = rng.normal(size=8).astype(np.float32)
+    plan = lower(rw.dfg, use_pallas=True, rewritten=rw,
+                 fused_clusters=[["a1", "t1", "b"]])
+    out = build_callable(rw.dfg, jit=False, plan=plan)(x=x)
+    ref = execute(g, x=x)
+    for k in ("b", "t2"):
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+    # assignment- and schedule-identical to the hand-hoisted twin
+    twin = DFG("twin")
+    twin.add_input("x", (8,))
+    twin.add("gemv", "x", id="a1", matrix=W)
+    twin.add("tanh", "a1", id="t1")
+    twin.add("gemv", "t1", id="b", matrix=V)
+    twin.mark_output("b")
+    twin.mark_output("t1")
+    p1 = MafiaCompiler(use_pallas=True).compile(g)
+    p2 = MafiaCompiler(use_pallas=True).compile(twin)
+    assert p1.assignment == p2.assignment
+    assert p1.schedule.total_cycles == p2.schedule.total_cycles

@@ -1,0 +1,216 @@
+"""Whole-program megakernel lane: linearize pass + single-launch executor.
+
+Contracts under test (ISSUE: whole-program megakernel):
+
+* **Parity sweep** — on Table-I benchmark graphs, ``mode="megakernel"`` is
+  *bitwise* identical to ``mode="interpret"`` per sample at float32 and
+  lane-bitwise at int8/int16; the batched vmap and map lanes of a
+  megakernel program are bitwise identical to its per-sample lane (the
+  whole launch is vmapped, so no reassociation sneaks in).
+* **Hybrid spill** — a step with no ISA encoding (argmax, reduce_sum, ...)
+  stays an interpreted island between megakernel segments, and the hybrid
+  walk is still bitwise.
+* **Slot reuse** — liveness-based allocation keeps the register file
+  smaller than the number of values produced.
+* **Ref twin** — :func:`repro.kernels.ref.run_segment_ref` (pure jnp)
+  matches :func:`repro.kernels.megakernel.run_segment` on every compiled
+  segment.
+* **Knob threading** — ``exec_mode`` flows compiler → CompiledProgram →
+  batch() → serving engine, and distinguishes the serving program cache.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import build
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+from repro.kernels.megakernel import run_segment
+from repro.kernels.ref import run_segment_ref
+
+BENCHES = ["bonsai/usps-b", "protonn/usps-b", "bonsai/cifar-b"]
+PRECISIONS = ["float32", "int8", "int16"]
+
+
+def _programs(bench, precision, per_channel=False):
+    """Compile one benchmark twice: interpret-mode and megakernel-mode."""
+    dfg, _, _ = build(bench, seed=0)
+    kw = dict(use_pallas=True, precision=precision, per_channel=per_channel)
+    pi = MafiaCompiler(**kw).compile(dfg)
+    pm = MafiaCompiler(exec_mode="megakernel", **kw).compile(dfg)
+    return pi, pm
+
+
+def _inputs(prog, n, seed=0):
+    (name, spec), = prog.dfg.graph_inputs.items()
+    rng = np.random.default_rng(seed)
+    return name, rng.standard_normal((n,) + tuple(spec.shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------- parity sweep
+@pytest.mark.parametrize("bench", BENCHES)
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_megakernel_parity_sweep(bench, precision):
+    """Per-sample bitwise vs interpret mode; vmap and map batch lanes
+    bitwise vs the per-sample megakernel lane."""
+    pi, pm = _programs(bench, precision)
+    assert pm.plan.megakernel is not None
+    assert len(pm.plan.megakernel.segments) >= 1
+    gi, X = _inputs(pm, 5)
+    per = []
+    for i in range(5):
+        oi, om = pi(**{gi: X[i]}), pm(**{gi: X[i]})
+        per.append(om)
+        for k in oi:
+            assert np.array_equal(np.asarray(oi[k]), np.asarray(om[k])), \
+                f"{bench}/{precision} per-sample {k} not bitwise"
+    for mode in ("vmap", "map"):
+        ob = pm.batch(8, mode=mode)(**{gi: X})
+        for k in ob:
+            st = np.stack([np.asarray(p[k]) for p in per])
+            assert np.array_equal(st, np.asarray(ob[k])), \
+                f"{bench}/{precision} {mode} lane not bitwise vs per-sample"
+
+
+def test_megakernel_parity_per_channel():
+    """Per-channel int lanes use per-row REQUANTIZE shift tables from the
+    const pool — still bitwise vs interpret mode."""
+    pi, pm = _programs("bonsai/usps-b", "int16", per_channel=True)
+    segs = pm.plan.megakernel.segments
+    assert any(i.op == "REQUANTIZE" and i.operand[0] == "rows"
+               for s in segs for i in s.instrs)
+    gi, X = _inputs(pm, 3)
+    for i in range(3):
+        oi, om = pi(**{gi: X[i]}), pm(**{gi: X[i]})
+        for k in oi:
+            assert np.array_equal(np.asarray(oi[k]), np.asarray(om[k]))
+
+
+@pytest.mark.parametrize("bench", BENCHES)
+def test_megakernel_bitwise_vs_unplanned_oracle(bench):
+    """Float32 megakernel lane vs the raw per-node execute() oracle — the
+    strongest parity claim: one launch reproduces unfused eval exactly."""
+    _, pm = _programs(bench, "float32")
+    gi, X = _inputs(pm, 3, seed=1)
+    src = pm.source_dfg
+    for i in range(3):
+        om = pm(**{gi: X[i]})
+        ref = execute(src, **{gi: X[i]})
+        for k in om:
+            assert np.array_equal(np.asarray(om[k]), np.asarray(ref[k]))
+
+
+# ----------------------------------------------------------- hybrid spill
+def test_hybrid_spill_around_unencodable_op():
+    """A reduction mid-graph has no ISA encoding: the plan must split into
+    megakernel segments around an interpreted island, and stay bitwise."""
+    rng = np.random.default_rng(7)
+    W = rng.normal(size=(6, 8)).astype(np.float32)
+    V = rng.normal(size=(4, 6)).astype(np.float32)
+    g = DFG("spill")
+    g.add_input("x", (8,))
+    a = g.add("gemv", "x", id="a", matrix=W)
+    t = g.add("tanh", a, id="t")
+    r = g.add("reduce_sum", t, id="r")        # no ISA encoding -> island
+    s = g.add("scalar_mul", t, id="s", scalar=0.3)
+    b = g.add("gemv", s, id="b", matrix=V)
+    g.mark_output(r)
+    g.mark_output(b)
+    prog = MafiaCompiler(use_pallas=True, exec_mode="megakernel").compile(g)
+    mk = prog.plan.megakernel
+    assert mk.n_islands >= 1
+    island_steps = [prog.plan.steps[p] for k, p in mk.items if k == "step"]
+    assert any(getattr(st, "nid", "") == "r" for st in island_steps)
+    x = rng.standard_normal(8).astype(np.float32)
+    out = prog(x=x)
+    ref = execute(g, x=x)
+    for k in ("r", "b"):
+        assert np.array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+# ------------------------------------------------------------- slot reuse
+def test_slot_allocation_reuses_registers():
+    """Liveness-based allocation: the register file is smaller than the
+    number of value-producing instructions (slots are recycled)."""
+    _, pm = _programs("bonsai/usps-b", "float32")
+    for seg in pm.plan.megakernel.segments:
+        defs = sum(1 for i in seg.instrs if i.dst not in (None, -1))
+        assert len(seg.slot_widths) < defs
+        # every slot index used is in range, and widths are exact (nonzero)
+        for i in seg.instrs:
+            for s in (i.dst, *i.src):
+                assert s == -1 or 0 <= s < len(seg.slot_widths)
+        assert all(w > 0 for w in seg.slot_widths)
+
+
+def test_double_buffered_mat_loads_precede_matvecs():
+    """Every MATVEC/SPMV's LOAD_MAT is issued strictly before it (the
+    schedule pass hoists copy k ahead of matvec k-1), and each matrix is
+    loaded exactly once."""
+    _, pm = _programs("bonsai/usps-b", "float32")
+    for seg in pm.plan.megakernel.segments:
+        loaded = []
+        for ins in seg.instrs:
+            if ins.op == "LOAD_MAT":
+                assert ins.operand not in loaded
+                loaded.append(ins.operand)
+            elif ins.op in ("MATVEC", "SPMV"):
+                assert ins.operand[0] in loaded, "DMA must start before use"
+        assert len(loaded) == len(seg.matrices)
+
+
+# ---------------------------------------------------------------- ref twin
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_run_segment_matches_ref_twin(precision):
+    """Pallas run_segment vs the pure-jnp twin, on real compiled segments."""
+    _, pm = _programs("protonn/usps-b", precision)
+    rng = np.random.default_rng(11)
+    for seg in pm.plan.megakernel.segments:
+        widths = {}
+        for ins in seg.instrs:
+            if ins.op == "LOAD_VEC" and ins.operand[0] == "in":
+                widths[ins.operand[1]] = seg.slot_widths[ins.dst]
+        if seg.quantized:
+            xs = [rng.integers(-100, 100, size=widths[i]).astype(np.int32)
+                  for i in range(len(seg.in_refs))]
+        else:
+            xs = [rng.standard_normal(widths[i]).astype(np.float32)
+                  for i in range(len(seg.in_refs))]
+        got = run_segment(seg, xs)
+        ref = run_segment_ref(seg, xs)
+        for a, b in zip(got, ref):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------- knob threading
+def test_exec_mode_threads_through_serving():
+    from repro.serve.classical_engine import (
+        ClassicalServeEngine, clear_program_cache, get_program)
+
+    clear_program_cache()
+    pi = get_program("bonsai/usps-b", use_pallas=True)
+    pm = get_program("bonsai/usps-b", use_pallas=True, exec_mode="megakernel")
+    assert pi.exec_mode == "interpret" and pm.exec_mode == "megakernel"
+    assert pm is not pi, "cache key must distinguish exec_mode"
+    bp = pm.batch(8)
+    assert bp.exec_mode == "megakernel"
+    eng_i = ClassicalServeEngine(pi, max_batch=8)
+    eng_m = ClassicalServeEngine(pm, max_batch=8)
+    assert eng_m.batched.exec_mode == "megakernel"
+    (gi, spec), = pm.dfg.graph_inputs.items()
+    X = np.random.default_rng(0).standard_normal(
+        (5,) + tuple(spec.shape)).astype(np.float32)
+    ri = [eng_i.submit(X[i]) for i in range(5)]
+    rm = [eng_m.submit(X[i]) for i in range(5)]
+    done_i, done_m = eng_i.step(), eng_m.step()
+    assert [done_i[r].pred for r in ri] == [done_m[r].pred for r in rm]
+    clear_program_cache()
+
+
+def test_exec_mode_validation():
+    with pytest.raises(ValueError, match="exec_mode"):
+        MafiaCompiler(exec_mode="warp-speed")
+    dfg, _, _ = build("bonsai/usps-b", seed=0)
+    with pytest.raises(ValueError, match="mode"):
+        build_callable(dfg, mode="nope")

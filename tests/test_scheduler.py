@@ -134,3 +134,78 @@ def test_intervals_sorted_and_complete():
     assert len(prog.dfg.nodes) == len(dfg.nodes) - len(prog.plan.alias)
     starts = [s for _, s, _ in iv]
     assert starts == sorted(starts)
+
+
+# ------------------------------------- decomposed-cluster unit overlap
+def test_decomposed_cluster_overlaps_independent_subchains():
+    """§IV-G pipelined estimate with decompose_chains: independent
+    sub-chains of one cluster (the branches of a fan-out) overlap ASAP
+    instead of summing serially, and the estimate equals the hand-computed
+    critical unit path — head chain + the slower branch."""
+    from repro.core.lowering import cluster_chains
+    from repro.core.scheduler import _FILL, _decomposed_cycles, _node_cycles
+
+    g = DFG("fanout")
+    g.add_input("x", (64,))
+    g.add("scalar_mul", "x", id="h", scalar=1.5)
+    g.add("tanh", "h", id="a2")
+    g.add("tanh", "a2", id="a3")
+    g.add("sigmoid", "h", id="b2")
+    g.add("sigmoid", "b2", id="b3")
+    g.mark_output("a3")
+    g.mark_output("b3")
+    asn = _assign(g)
+    topo_idx = {nid: i for i, nid in enumerate(g.topo_order())}
+    succ: dict[str, list[str]] = {}
+    for nid in topo_idx:
+        for r in g.nodes[nid].inputs:
+            succ.setdefault(r, []).append(nid)
+    cluster = list(g.nodes)
+    units = cluster_chains(g, cluster, succ=succ, topo_idx=topo_idx,
+                           split_bytes=None)
+
+    def unit_dur(sub):
+        return max(max(0.0, _node_cycles(g, n, asn) - _FILL)
+                   for n in sub) + _FILL * len(sub)
+
+    durs = {sub: unit_dur(sub) for _, subs in units for sub in subs}
+    est = _decomposed_cycles(g, cluster, asn, None, topo_idx, succ)
+    serial = sum(durs.values())
+    assert est < serial, "independent branches must overlap"
+    expected = durs[("h",)] + max(durs[("a2", "a3")], durs[("b2", "b3")])
+    assert est == expected
+    # the full simulate() path prices the cluster identically
+    sched = simulate(g, asn, pipelining=True, decompose_chains=True)
+    assert sched.total_cycles == est
+
+
+def test_decomposed_serial_chain_unchanged_by_overlap_model():
+    """A cluster whose units form one dependency chain sees no change from
+    the ASAP model — dependent units still run back to back."""
+    from repro.core.scheduler import _FILL, _decomposed_cycles, _node_cycles
+    from repro.core.lowering import cluster_chains
+
+    g = DFG("serial")
+    g.add_input("x", (64,))
+    g.add("scalar_mul", "x", id="a1", scalar=1.5)
+    g.add("tanh", "a1", id="a2")
+    g.add("sigmoid", "x", id="b1")
+    g.add("sigmoid", "b1", id="b2")
+    g.add("add", "a2", "b2", id="s")          # fan-in: b-chain waits on a
+    g.mark_output("s")
+    asn = _assign(g)
+    topo_idx = {nid: i for i, nid in enumerate(g.topo_order())}
+    succ: dict[str, list[str]] = {}
+    for nid in topo_idx:
+        for r in g.nodes[nid].inputs:
+            succ.setdefault(r, []).append(nid)
+    cluster = list(g.nodes)
+    units = cluster_chains(g, cluster, succ=succ, topo_idx=topo_idx,
+                           split_bytes=None)
+    est = _decomposed_cycles(g, cluster, asn, None, topo_idx, succ)
+    durs = [max(max(0.0, _node_cycles(g, n, asn) - _FILL) for n in sub)
+            + _FILL * len(sub) for _, subs in units for sub in subs]
+    # chain-growing folds the fan-in into the second chain, which consumes
+    # the first chain's tail — the units serialize, so ASAP == serial sum
+    assert len(durs) == 2
+    assert est == sum(durs)
