@@ -1,18 +1,45 @@
-"""Serving throughput of compiled classical programs: requests/sec vs batch.
+"""Serving throughput: sync engine sweep + async continuous-batching tier.
 
-The paper serves one sample at a time (the FPGA setting); the batched
-serving subsystem (:mod:`repro.serve.classical_engine`) pads request queues
-to power-of-two buckets and runs one batched forward per bucket.  This
-benchmark quantifies what that buys on this host: a per-sample request loop
-over the compiled program vs the engine at several batch sizes, both
-batched modes ("vmap" = throughput, "map" = bit-exact), and both precisions
-(the float32 lane and the paper-faithful int8 fixed-point lane).
+Two sections:
+
+* **Sync sweep** — the paper serves one sample at a time (the FPGA
+  setting); the batched serving engine
+  (:mod:`repro.serve.classical_engine`) pads request queues to
+  power-of-two buckets and runs one batched forward per bucket.  The sweep
+  quantifies what that buys on this host: a per-sample request loop over
+  the compiled program vs the engine at several batch sizes, both batched
+  modes ("vmap" = throughput, "map" = bit-exact), and both precisions (the
+  float32 lane and the paper-faithful int8 fixed-point lane).
+
+* **Async tier** — the multi-tenant continuous-batching engine
+  (:mod:`repro.serve.async_engine`): two models (a float32 Bonsai and an
+  int8 ProtoNN) share one engine; requests arrive *staggered* through the
+  asyncio surface, each under a per-model SLO deadline.  Reported per
+  model and engine-wide: enqueue→complete p50/p99 latency, requests/sec,
+  batch occupancy (continuous refill ⇒ occupancy > 1 despite one-at-a-time
+  arrivals), and SLO misses.
+
+CI integration: ``--json PATH`` writes the payload (the nightly job
+uploads it as an artifact); ``--baseline PATH`` compares the async tier's
+p99 latency and throughput against a checked-in baseline and exits
+non-zero on regression.  Like ``compile_time.py``, the comparison is
+machine-normalized: both runs divide by a fixed single-threaded numpy
+probe timed in the same process, so a slower CI runner does not trip the
+gate.  Throughput numbers are noisy; the gate uses generous
+(``_MAX_REGRESSION``×) slack and is meant to catch collapses, not
+percent-level drift.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
+    PYTHONPATH=src python benchmarks/serve_throughput.py \
+        --json serve_metrics.json \
+        --baseline benchmarks/serve_throughput_baseline.json
 """
 
 from __future__ import annotations
 
+import asyncio
+import json
+import sys
 import time
 
 import jax
@@ -21,13 +48,41 @@ import numpy as np
 from repro.data.datasets import make_dataset
 from repro.serve.classical_engine import ClassicalServeEngine, get_program
 
-__all__ = ["run"]
+__all__ = ["run", "collect", "check_baseline"]
 
 _BENCHES = ["bonsai/usps-b", "protonn/usps-b"]
 _BATCHES = [4, 16, 64]
 _N_REQUESTS = 256
+_ASYNC_REQUESTS = 256
+_ASYNC_SLO_MS = 100.0
+_ASYNC_MAX_BATCH = 32
+_INTERARRIVAL_S = 0.0003      # staggered arrivals, well inside batch_wait
+# regression slack: throughput benchmarks jitter far more than compile
+# timings on shared runners — gate collapses (3x), not drift
+_MAX_REGRESSION = 3.0
 
 
+def _probe_once() -> None:
+    """Machine-speed probe (same scheme as ``compile_time.py``): fixed
+    single-threaded work — no BLAS — timed in-process so normalizing by it
+    makes the checked-in baseline portable across machines."""
+    a = np.linspace(-1.0, 1.0, 65536)
+    for _ in range(8):
+        (np.abs(a) + a * a).sum()
+        sorted(range(20000), key=lambda i: -i)
+
+
+def _probe_ms(repeats: int = 8) -> float:
+    _probe_once()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _probe_once()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+# ------------------------------------------------------------ sync sweep
 def _per_sample_rps(prog, X) -> float:
     out = prog(x=X[0])                      # compile + warm
     jax.block_until_ready(out[next(iter(out))])
@@ -38,8 +93,8 @@ def _per_sample_rps(prog, X) -> float:
     return len(X) / (time.perf_counter() - t0)
 
 
-def _engine_rps(bench: str, X, max_batch: int, mode: str,
-                precision: str = "float32", use_pallas: bool = False) -> float:
+def _engine_row(bench: str, X, max_batch: int, mode: str,
+                precision: str = "float32", use_pallas: bool = False) -> dict:
     eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode,
                                precision=precision, use_pallas=use_pallas)
     for x in X[:max_batch]:                 # warm the bucket's jit entry
@@ -49,41 +104,158 @@ def _engine_rps(bench: str, X, max_batch: int, mode: str,
     for x in X:
         eng.submit(x)
     eng.run_to_completion()
-    return eng.throughput()
+    snap = eng.metrics()
+    return {
+        "bench": bench, "mode": mode, "precision": precision,
+        "batch": max_batch, "rps": eng.throughput(),
+        "p50_ms": snap["p50_ms"], "p99_ms": snap["p99_ms"],
+        "occupancy": snap["batch_occupancy"],
+    }
 
 
-def run() -> list[str]:
-    out = ["serve.benchmark,mode,precision,batch,requests_per_s,"
-           "speedup_vs_per_sample"]
+def _sync_sweep() -> list[dict]:
+    rows: list[dict] = []
     for bench in _BENCHES:
         ds = bench.split("/")[1]
         _, _, Xte, _ = make_dataset(ds, n_train=64, n_test=_N_REQUESTS)
-        base = None
         for precision in ("float32", "int8"):
             prog = get_program(bench, precision=precision)
-            rps = _per_sample_rps(prog, Xte)
-            if base is None:                   # speedups relative to f32 loop
-                base = rps
-            out.append(
-                f"serve.{bench},per-sample,{precision},1,{rps:.0f},"
-                f"{rps / base:.2f}")
+            rows.append({
+                "bench": bench, "mode": "per-sample",
+                "precision": precision, "batch": 1,
+                "rps": _per_sample_rps(prog, Xte),
+                "p50_ms": 0.0, "p99_ms": 0.0, "occupancy": 1.0,
+            })
             for mode in ("vmap", "map"):
                 for mb in _BATCHES:
-                    rps = _engine_rps(bench, Xte, mb, mode, precision)
-                    out.append(
-                        f"serve.{bench},{mode},{precision},{mb},{rps:.0f},"
-                        f"{rps / base:.2f}")
+                    rows.append(_engine_row(bench, Xte, mb, mode, precision))
         # fused §IV-G lanes: clusters execute through the Pallas pipeline
         # kernel (float) / its fixed-point twin (int8 goes integer
         # end-to-end through one kernel launch per chain).
         for precision in ("float32", "int8"):
-            rps = _engine_rps(bench, Xte, max(_BATCHES), "vmap", precision,
-                              use_pallas=True)
-            out.append(
-                f"serve.{bench},vmap+pallas,{precision},{max(_BATCHES)},"
-                f"{rps:.0f},{rps / base:.2f}")
+            rows.append(_engine_row(bench, Xte, max(_BATCHES), "vmap",
+                                    precision, use_pallas=True))
+            rows[-1]["mode"] = "vmap+pallas"
+    return rows
+
+
+# ------------------------------------------------------------ async tier
+async def _async_tier() -> dict:
+    """Two models, one engine, staggered arrivals under per-model SLOs —
+    the continuous-batching measurement."""
+    from repro.serve.async_engine import AsyncServeEngine
+
+    eng = AsyncServeEngine()
+    eng.register_model("bonsai-f32", _BENCHES[0], slo_ms=_ASYNC_SLO_MS,
+                       max_batch=_ASYNC_MAX_BATCH)
+    eng.register_model("protonn-int8", _BENCHES[1], slo_ms=_ASYNC_SLO_MS,
+                       max_batch=_ASYNC_MAX_BATCH, precision="int8")
+    _, _, Xte, _ = make_dataset("usps-b", n_train=64, n_test=_ASYNC_REQUESTS)
+    # warm every bucket's jit entry outside the measured window — partial
+    # flushes touch each power-of-two bucket up to max_batch
+    for name in eng.models:
+        n = 1
+        while n <= _ASYNC_MAX_BATCH:
+            for x in Xte[:n]:
+                eng.submit(name, x)
+            eng.drain()
+            n *= 2
+    for name in eng.models:
+        eng._models[name].metrics.reset()
+    eng.metrics.reset()
+
+    runner = asyncio.create_task(eng.run())
+    reqs = []
+    for i in range(_ASYNC_REQUESTS):
+        model = "bonsai-f32" if i % 2 == 0 else "protonn-int8"
+        reqs.append(await eng.submit_async(model, Xte[i % len(Xte)]))
+        await asyncio.sleep(_INTERARRIVAL_S)
+    await asyncio.gather(*(eng.result(r) for r in reqs))
+    eng.stop()
+    await runner
+    return eng.stats()
+
+
+# ---------------------------------------------------------------- payload
+def collect() -> dict:
+    return {
+        "sync": _sync_sweep(),
+        "async": asyncio.run(_async_tier()),
+        "probe_ms": _probe_ms(),
+    }
+
+
+def run(payload: dict | None = None) -> list[str]:
+    p = payload or collect()
+    out = ["serve.benchmark,mode,precision,batch,requests_per_s,"
+           "speedup_vs_per_sample,p50_ms,p99_ms,occupancy"]
+    base = None
+    for r in p["sync"]:
+        if r["mode"] == "per-sample" and base is None:
+            base = r["rps"]                 # speedups relative to f32 loop
+        out.append(
+            f"serve.{r['bench']},{r['mode']},{r['precision']},{r['batch']},"
+            f"{r['rps']:.0f},{r['rps'] / base:.2f},{r['p50_ms']:.3f},"
+            f"{r['p99_ms']:.3f},{r['occupancy']:.2f}")
+    a = p["async"]
+    out.append("serve.async,scope,served,rps,p50_ms,p99_ms,occupancy,"
+               "slo_misses")
+    out.append(
+        f"serve.async,engine,{a['served']},{a['rps']:.0f},{a['p50_ms']:.3f},"
+        f"{a['p99_ms']:.3f},{a['batch_occupancy']:.2f},{a['slo_misses']}")
+    for name, m in a["models"].items():
+        out.append(
+            f"serve.async,{name},{m['served']},{m['rps']:.0f},"
+            f"{m['p50_ms']:.3f},{m['p99_ms']:.3f},"
+            f"{m['batch_occupancy']:.2f},{m['slo_misses']}")
     return out
 
 
+def check_baseline(payload: dict, baseline_path: str) -> bool:
+    """True iff the async tier holds up against the checked-in baseline:
+    machine-normalized p99 latency within _MAX_REGRESSION× and normalized
+    throughput above 1/_MAX_REGRESSION× — plus the structural invariant
+    that continuous refill keeps batch occupancy above 1 (a collapse to
+    one-request batches is a scheduling bug regardless of machine)."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    probe, bprobe = payload["probe_ms"], base["probe_ms"]
+    a, b = payload["async"], base["async"]
+    ok = True
+    # p99 in probe units: machine speed cancels; higher = worse
+    meas_p99 = a["p99_ms"] / probe
+    lim_p99 = b["p99_ms"] / bprobe * _MAX_REGRESSION
+    if meas_p99 > lim_p99:
+        print(f"serve.check,REGRESSION,p99,measured_x_probe={meas_p99:.3f},"
+              f"limit_x_probe={lim_p99:.3f}")
+        ok = False
+    # rps * probe is machine-free; lower = worse
+    meas_rps = a["rps"] * probe
+    floor_rps = b["rps"] * bprobe / _MAX_REGRESSION
+    if meas_rps < floor_rps:
+        print(f"serve.check,REGRESSION,rps,measured_x_probe={meas_rps:.0f},"
+              f"floor_x_probe={floor_rps:.0f}")
+        ok = False
+    if a["batch_occupancy"] <= 1.0:
+        print(f"serve.check,REGRESSION,occupancy,"
+              f"measured={a['batch_occupancy']:.2f},floor=1.00")
+        ok = False
+    if ok:
+        print(f"serve.check,OK,p99_x_probe={meas_p99:.3f},"
+              f"rps_x_probe={meas_rps:.0f},"
+              f"occupancy={a['batch_occupancy']:.2f}")
+    return ok
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    args = sys.argv[1:]
+    payload = collect()
+    print("\n".join(run(payload)))
+    if "--json" in args:
+        path = args[args.index("--json") + 1]
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"serve.json,{path}")
+    if "--baseline" in args:
+        if not check_baseline(payload, args[args.index("--baseline") + 1]):
+            sys.exit(1)

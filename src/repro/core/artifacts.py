@@ -1,0 +1,381 @@
+"""Persistent compile-artifact store — shared cold-starts for the serve fleet.
+
+PR 5's PF warm-start cache dies with the process: every fresh worker re-runs
+the Best-PF search (and int-lane calibration) for programs an identical
+worker already compiled.  This module serializes everything expensive about a
+:class:`~repro.core.compiler.CompiledProgram` to a **versioned on-disk
+artifact** so a fleet of workers cold-starts from a shared store instead —
+the deployment primitive hls4ml ships as firmware bitstreams, retargeted at
+this repo's compiled-program representation.
+
+What is serialized (all plain data — numpy arrays, dataclasses of scalars):
+
+* the canonical **rewritten DFG** (nodes, params, graph inputs, outputs,
+  published set) and the rewrite **alias map** that resolves original output
+  names through hoists/folds,
+* the **PFResult** and node→PF assignment (the Best-PF search output — the
+  expensive part), the simulated :class:`~repro.core.scheduler.Schedule`,
+  and the true LUT/DSP totals,
+* the **QuantPlan** (int lanes — calibration is the other expensive part),
+  fused clusters, and every compiler knob the plan depends on,
+* the **linearized megakernel stream**: per-segment instruction lists,
+  const pools and matrix operands, stored as the program's content
+  fingerprint *and* as data.
+
+What is **not** serialized: callables.  jit/Pallas closures cannot be
+pickled; instead :func:`restore_program` re-runs the cheap back-end plan
+pipeline (quantize-rewrite → cluster → chain-decompose → plan → linearize)
+over the saved graph — milliseconds — and **rebinds** every template
+function and Pallas launch.  Best-PF, scheduling and calibration are *not*
+re-run; their saved outputs are reused verbatim.  The rebound program is
+then validated two ways:
+
+* a sha256 **content digest** over the serialized payload, checked before
+  unpickling (corrupt / truncated files never reach the deserializer), and
+* the relinearized megakernel's :meth:`fingerprint` must equal the one
+  serialized — a re-lower that produces a *different* instruction stream
+  means the artifact came from a different toolchain version, and the
+  store refuses to serve it (raising :class:`ArtifactError` on a direct
+  ``load_program``; :meth:`ArtifactStore.load` treats it as a miss).
+
+Artifacts are keyed by :func:`program_key`: the canonical graph's
+``structural_hash`` **plus** a digest of its static parameter values (the
+structural hash deliberately excludes weights — two trainings of the same
+architecture must not collide), the compiler-knob fingerprint, and the
+calibration-data digest on the int lanes.  Writes are atomic
+(temp file + ``os.replace``), so concurrent workers racing to publish the
+same artifact never expose a torn file.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+from pathlib import Path
+from typing import Any, Mapping
+
+import numpy as np
+
+__all__ = ["ARTIFACT_VERSION", "ArtifactError", "ArtifactStore",
+           "program_key", "program_self_key", "program_state",
+           "restore_program", "save_program", "load_program"]
+
+# Bump on any change to the payload schema, the plan/ISA semantics, or the
+# numeric templates: the version participates in both the artifact key and
+# the header check, so old artifacts simply miss instead of mis-executing.
+ARTIFACT_VERSION = 1
+
+_MAGIC = b"MAFIA-ARTIFACT\n"
+
+
+class ArtifactError(RuntimeError):
+    """A persisted artifact exists but cannot be trusted: bad magic/version,
+    content-digest mismatch (corruption), or a relinearize that does not
+    reproduce the serialized megakernel stream (toolchain drift)."""
+
+
+# ----------------------------------------------------------------- hashing
+def _digest_array(h: "hashlib._Hash", v: Any) -> None:
+    a = np.asarray(v)
+    h.update(repr((a.dtype.str, a.shape)).encode())
+    h.update(a.tobytes())
+
+
+def params_digest(dfg) -> str:
+    """sha256 over every node's static parameter values, in canonical
+    order.  ``DFG.structural_hash`` deliberately excludes values (the PF
+    problem doesn't depend on them); the artifact key must include them —
+    the emitted program is the weights."""
+    h = hashlib.sha256()
+    for nid in sorted(dfg.nodes):
+        node = dfg.nodes[nid]
+        for k in sorted(node.params):
+            h.update(repr((nid, k)).encode())
+            v = node.params[k]
+            if isinstance(v, (int, float, bool, str)):
+                h.update(repr((type(v).__name__, v)).encode())
+            else:
+                _digest_array(h, v)
+    return h.hexdigest()
+
+
+def calib_digest(calib: Any, *, n_samples: int) -> str:
+    """Digest of the calibration source: the batch's bytes, or the synthetic
+    fallback's identity (deterministic in ``n_samples``)."""
+    if calib is None:
+        return f"synthetic:{n_samples}"
+    h = hashlib.sha256()
+    if isinstance(calib, Mapping):
+        for k in sorted(calib):
+            h.update(repr(k).encode())
+            _digest_array(h, calib[k])
+    else:
+        _digest_array(h, calib)
+    return h.hexdigest()
+
+
+def program_key(rdfg, knobs: Mapping[str, Any], calib_dig: str) -> str:
+    """Artifact key for one (canonical graph, weights, knobs, calibration)
+    quadruple.  Any process computing the same quadruple lands on the same
+    key — that is the fleet-sharing contract."""
+    h = hashlib.sha256()
+    h.update(repr(("version", ARTIFACT_VERSION)).encode())
+    h.update(rdfg.structural_hash().encode())
+    h.update(params_digest(rdfg).encode())
+    h.update(repr(tuple(sorted((str(k), repr(v))
+                               for k, v in knobs.items()))).encode())
+    h.update(calib_dig.encode())
+    return h.hexdigest()
+
+
+def program_self_key(prog) -> str:
+    """Content-addressed store key computed from a *compiled* program alone
+    (no compiler instance) — what the serving tier evicts/restores under.
+    Covers the canonical graph, its weights, every knob the emitted plan
+    records, and the megakernel stream's own fingerprint, so two programs
+    share a key only when their artifacts are interchangeable."""
+    h = hashlib.sha256()
+    h.update(repr(("version", ARTIFACT_VERSION)).encode())
+    h.update(prog.dfg.structural_hash().encode())
+    h.update(params_digest(prog.dfg).encode())
+    h.update(repr((prog.backend, repr(prog.budget), prog.use_pallas,
+                   prog.precision, prog.exec_mode,
+                   prog.chain_split_bytes)).encode())
+    if prog.plan is not None and prog.plan.megakernel is not None:
+        h.update(prog.plan.megakernel.fingerprint().encode())
+    return h.hexdigest()
+
+
+# ----------------------------------------------------- DFG (de)serialization
+def _dfg_state(dfg) -> dict:
+    return {
+        "name": dfg.name,
+        "graph_inputs": [(gi.name, tuple(gi.shape), gi.dtype)
+                         for gi in dfg.graph_inputs.values()],
+        "nodes": [
+            {"id": n.id, "op": n.op, "dims": dict(n.dims),
+             "inputs": list(n.inputs), "params": dict(n.params),
+             "latency1": n.latency1, "lut1": n.lut1, "pf": n.pf}
+            for n in dfg.nodes.values()
+        ],
+        "outputs": list(dfg.outputs),
+        "published": sorted(dfg.published),
+    }
+
+
+def _dfg_restore(state: dict):
+    from repro.core.dfg import DFG, GraphInput, Node
+
+    dfg = DFG(state["name"])
+    for name, shape, dtype in state["graph_inputs"]:
+        dfg.graph_inputs[name] = GraphInput(name, tuple(shape), dtype)
+    for nd in state["nodes"]:
+        dfg.nodes[nd["id"]] = Node(
+            id=nd["id"], op=nd["op"], dims=dict(nd["dims"]),
+            inputs=list(nd["inputs"]), params=dict(nd["params"]),
+            latency1=nd["latency1"], lut1=nd["lut1"], pf=nd["pf"])
+    dfg.outputs = list(state["outputs"])
+    dfg.published = frozenset(state["published"])
+    return dfg
+
+
+# ------------------------------------------------- program (de)serialization
+def program_state(prog) -> dict:
+    """Reduce a :class:`CompiledProgram` to a picklable payload — data only,
+    no callables (see module docstring for the restore contract)."""
+    rw = prog.rewrite_result
+    plan = prog.plan
+    if plan is None:
+        raise ArtifactError(
+            "program has no ExecutionPlan — pre-plan programs cannot be "
+            "persisted; recompile with MafiaCompiler.compile()")
+    return {
+        "version": ARTIFACT_VERSION,
+        "dfg": _dfg_state(prog.dfg),
+        "alias": dict(rw.alias) if rw is not None else {},
+        "pruned": tuple(rw.pruned) if rw is not None else (),
+        "folded": tuple(rw.folded) if rw is not None else (),
+        "algebraic": tuple(rw.algebraic) if rw is not None else (),
+        "hoisted": tuple(rw.hoisted) if rw is not None else (),
+        "assignment": dict(prog.assignment),
+        "pf_result": prog.pf_result,
+        "schedule": prog.schedule,
+        "lut_true": prog.lut_true,
+        "dsp_true": prog.dsp_true,
+        "backend": prog.backend,
+        "budget": prog.budget,
+        "fused_clusters": [list(c) for c in prog.fused_clusters],
+        "use_pallas": prog.use_pallas,
+        "precision": prog.precision,
+        "qplan": prog.qplan,
+        "exec_mode": prog.exec_mode,
+        "chain_split_bytes": prog.chain_split_bytes,
+        # the linearized stream, both as validation fingerprint and as data
+        "megakernel_fp": plan.megakernel.fingerprint(),
+        "megakernel": plan.megakernel,
+    }
+
+
+def restore_program(state: dict):
+    """Rebuild a :class:`CompiledProgram` from a payload: re-run the cheap
+    back-end plan pipeline over the saved canonical graph (rebinding every
+    jit/Pallas callable), reuse the saved Best-PF/schedule/quantization
+    outputs verbatim, and validate the relinearized megakernel stream
+    against the serialized fingerprint."""
+    from repro.core.compiler import CompiledProgram
+    from repro.core.executor import build_callable
+    from repro.core.lowering import RewriteResult, lower
+
+    if state.get("version") != ARTIFACT_VERSION:
+        raise ArtifactError(
+            f"artifact version {state.get('version')!r} != "
+            f"supported {ARTIFACT_VERSION}")
+    rdfg = _dfg_restore(state["dfg"])
+    rw = RewriteResult(
+        source=rdfg, dfg=rdfg, alias=dict(state["alias"]),
+        pruned=tuple(state["pruned"]), folded=tuple(state["folded"]),
+        algebraic=tuple(state["algebraic"]),
+        hoisted=tuple(state["hoisted"]))
+    plan = lower(
+        rdfg, fused_clusters=state["fused_clusters"],
+        use_pallas=state["use_pallas"], precision=state["precision"],
+        qplan=state["qplan"], rewritten=rw,
+        chain_split_bytes=state["chain_split_bytes"])
+    fp = plan.megakernel.fingerprint()
+    if fp != state["megakernel_fp"]:
+        raise ArtifactError(
+            "relinearized megakernel stream does not match the serialized "
+            "fingerprint — the artifact was produced by an incompatible "
+            "toolchain; delete it and recompile")
+    fn = build_callable(rdfg, plan=plan, mode=state["exec_mode"])
+    return CompiledProgram(
+        dfg=rdfg, fn=fn,
+        assignment=dict(state["assignment"]),
+        pf_result=state["pf_result"],
+        schedule=state["schedule"],
+        lut_true=state["lut_true"],
+        dsp_true=state["dsp_true"],
+        backend=state["backend"],
+        budget=state["budget"],
+        fused_clusters=[list(c) for c in state["fused_clusters"]],
+        use_pallas=state["use_pallas"],
+        precision=state["precision"],
+        qplan=state["qplan"],
+        plan=plan,
+        exec_mode=state["exec_mode"],
+        source_dfg=rdfg,
+        rewrite_result=rw,
+        pf_source="artifact",
+        chain_split_bytes=state["chain_split_bytes"],
+    )
+
+
+# ------------------------------------------------------------------ file IO
+def _write_atomic(path: Path, blob: bytes) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            fh.write(blob)
+        os.replace(tmp, path)        # atomic publish: readers never see torn
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def save_program(prog, path: str | Path) -> str:
+    """Serialize ``prog`` to ``path``; returns the payload's sha256 digest.
+
+    Layout: magic line, one header line
+    ``version=<int> digest=<sha256hex>``, then the pickled payload.  The
+    header is fixed-format text so version/digest checks never require
+    unpickling untrusted bytes."""
+    payload = pickle.dumps(program_state(prog), protocol=4)
+    digest = hashlib.sha256(payload).hexdigest()
+    header = f"version={ARTIFACT_VERSION} digest={digest}\n".encode()
+    _write_atomic(Path(path), _MAGIC + header + payload)
+    return digest
+
+
+def load_program(path: str | Path):
+    """Load, digest-validate and restore a program from ``path``.  Raises
+    :class:`ArtifactError` on any trust failure, ``FileNotFoundError`` when
+    absent."""
+    blob = Path(path).read_bytes()
+    if not blob.startswith(_MAGIC):
+        raise ArtifactError(f"{path}: not a MAFIA artifact (bad magic)")
+    rest = blob[len(_MAGIC):]
+    nl = rest.find(b"\n")
+    if nl < 0:
+        raise ArtifactError(f"{path}: truncated header")
+    fields = dict(p.split(b"=", 1) for p in rest[:nl].split(b" ") if b"=" in p)
+    try:
+        version = int(fields[b"version"])
+        digest = fields[b"digest"].decode()
+    except (KeyError, ValueError) as exc:
+        raise ArtifactError(f"{path}: malformed header") from exc
+    if version != ARTIFACT_VERSION:
+        raise ArtifactError(
+            f"{path}: artifact version {version} != supported "
+            f"{ARTIFACT_VERSION}")
+    payload = rest[nl + 1:]
+    if hashlib.sha256(payload).hexdigest() != digest:
+        raise ArtifactError(f"{path}: content digest mismatch (corrupt file)")
+    return restore_program(pickle.loads(payload))
+
+
+# -------------------------------------------------------------------- store
+class ArtifactStore:
+    """Directory of compiled-program artifacts, one file per key.
+
+    The store is the fleet-sharing surface: every worker pointing at the
+    same ``root`` (a shared filesystem, an object-store mount) cold-starts
+    from artifacts any one of them published.  ``load`` is tolerant —
+    absent, corrupt or incompatible artifacts count as misses and the
+    caller compiles as usual (re-publishing a good artifact over the bad
+    one); ``hits``/``misses``/``saves`` feed the serving metrics.
+    """
+
+    def __init__(self, root: str | Path) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.saves = 0
+
+    def path(self, key: str) -> Path:
+        return self.root / f"{key}.mafia"
+
+    def contains(self, key: str) -> bool:
+        return self.path(key).exists()
+
+    def load(self, key: str):
+        """The program for ``key``, or None (counted as a miss)."""
+        try:
+            prog = load_program(self.path(key))
+        except FileNotFoundError:
+            self.misses += 1
+            return None
+        except ArtifactError:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return prog
+
+    def save(self, key: str, prog) -> Path:
+        path = self.path(key)
+        save_program(prog, path)
+        self.saves += 1
+        return path
+
+    def keys(self) -> list[str]:
+        return sorted(p.stem for p in self.root.glob("*.mafia"))
+
+    def __repr__(self) -> str:
+        return (f"ArtifactStore({str(self.root)!r}: {len(self.keys())} "
+                f"artifacts, {self.hits} hits / {self.misses} misses)")

@@ -76,8 +76,12 @@ class CompiledProgram:
     # how the PF assignment was obtained: "cold" (fresh search), "near"
     # (search seeded by a cached result for the same wiring), "exact"
     # (cache hit on the canonical graph's structural hash — no search ran),
-    # or "external" (caller-imposed assignment)
+    # "external" (caller-imposed assignment), or "artifact" (restored from
+    # the persistent compile-artifact store — no search, no calibration)
     pf_source: str = "cold"
+    # the chain-split budget the plan was lowered with — persisted so an
+    # artifact load re-runs the identical chain decomposition
+    chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES
 
     @property
     def latency_cycles(self) -> float:
@@ -89,6 +93,25 @@ class CompiledProgram:
 
     def __call__(self, **inputs: Any) -> dict[str, Any]:
         return self.fn(**inputs)
+
+    def save(self, path: Any) -> str:
+        """Persist this program as a versioned on-disk artifact (data only;
+        jit/Pallas callables are rebound on :meth:`load`).  Returns the
+        payload's content digest.  See :mod:`repro.core.artifacts`."""
+        from repro.core import artifacts
+
+        return artifacts.save_program(self, path)
+
+    @staticmethod
+    def load(path: Any) -> "CompiledProgram":
+        """Restore a program saved by :meth:`save`: validates the content
+        digest, re-runs the cheap back-end plan pipeline to rebind
+        callables, and checks the relinearized megakernel stream against
+        the serialized fingerprint.  The result is bitwise-equivalent to
+        the program that was saved; ``pf_source`` is ``"artifact"``."""
+        from repro.core import artifacts
+
+        return artifacts.load_program(path)
 
     def batch(self, max_batch: int = 64, *, mode: str = "vmap",
               exec_mode: str | None = None) -> "BatchedProgram":
@@ -229,6 +252,7 @@ class MafiaCompiler:
         chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
         warm_start: bool = True,
         exec_mode: str = "interpret",
+        artifact_store: Any | None = None,
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -262,7 +286,16 @@ class MafiaCompiler:
         and batched lanes alike) execute the plan through the linearize
         pass's single-launch instruction stream instead of one dispatch per
         step — see :func:`repro.core.executor.build_callable`.  Analysis is
-        unchanged: both modes interpret the same :class:`ExecutionPlan`."""
+        unchanged: both modes interpret the same :class:`ExecutionPlan`.
+
+        ``artifact_store`` (a :class:`repro.core.artifacts.ArtifactStore`)
+        enables the *persistent* compile cache: :meth:`compile` consults
+        the store — keyed on the canonical graph's structural hash, its
+        parameter values, every plan-relevant knob and the calibration
+        digest — **before** the Best-PF search, so a fresh process
+        cold-starts from artifacts any sibling worker published.  Misses
+        compile normally and publish the artifact.  The in-memory PF
+        warm-start cache layers on top (hits also prime it)."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
@@ -283,6 +316,7 @@ class MafiaCompiler:
         self.chain_split_bytes = chain_split_bytes
         self.warm_start = warm_start
         self.exec_mode = exec_mode
+        self.artifact_store = artifact_store
         # rewrite-aware PF warm-start caches, keyed on the canonical
         # rewritten graph's structural hash (exact: ids+ops+edges+dims;
         # near: dims-blind).  Per instance — all optimizer knobs are fixed.
@@ -290,6 +324,22 @@ class MafiaCompiler:
         self._near_cache: dict[str, PFResult] = {}
 
     # ----------------------------------------------------------------- stages
+    def _artifact_key(self, rdfg: DFG, calib: Any | None) -> str:
+        """Store key for compiling ``rdfg`` under this instance's knobs —
+        every knob the emitted plan or its numerics depend on participates."""
+        from repro.core import artifacts
+
+        knobs = dict(
+            backend=self.backend, budget=repr(self.budget),
+            strategy=self.strategy, metric=self.metric, order=self.order,
+            pipelining=self.pipelining, use_pallas=self.use_pallas,
+            precision=self.precision, per_channel=self.per_channel,
+            chain_split_bytes=self.chain_split_bytes,
+            exec_mode=self.exec_mode)
+        cal = ("none" if self.precision == "float32" else
+               artifacts.calib_digest(calib, n_samples=self.calib_samples))
+        return artifacts.program_key(rdfg, knobs, cal)
+
     def optimize(
         self, dfg: DFG, warm_assignment: dict[str, int] | None = None
     ) -> tuple[PFResult, PFGroups]:
@@ -345,6 +395,25 @@ class MafiaCompiler:
         # so their outputs refer only to nodes that actually execute.
         rw = rewrite(dfg, precision=self.precision)
         rdfg = rw.dfg
+        # persistent artifact store, consulted BEFORE the Best-PF search:
+        # a hit restores the full program (assignment, schedule, quant plan,
+        # megakernel stream) and rebinds callables — no search, no
+        # calibration.  External assignments bypass the store (baseline
+        # paths impose their own PFs).
+        art_key: str | None = None
+        if self.artifact_store is not None and assignment is None:
+            art_key = self._artifact_key(rdfg, calib)
+            loaded = self.artifact_store.load(art_key)
+            if loaded is not None:
+                if self.warm_start and loaded.pf_result is not None:
+                    # prime the in-memory warm-start cache so sibling
+                    # compiles of doped/edited variants near-hit off it
+                    k = loaded.dfg.structural_hash()
+                    self._pf_cache.setdefault(k, loaded.pf_result)
+                    self._near_cache.setdefault(
+                        loaded.dfg.structural_hash(include_dims=False),
+                        loaded.pf_result)
+                return loaded
         pf_result: PFResult | None = None
         pf_source = "external"
         if assignment is None:
@@ -442,7 +511,7 @@ class MafiaCompiler:
             node_types.get(n.op).dsp(assignment[n.id])
             for n in rdfg.nodes.values()
         )
-        return CompiledProgram(
+        prog = CompiledProgram(
             dfg=rdfg,
             fn=fn,
             assignment=assignment,
@@ -461,4 +530,9 @@ class MafiaCompiler:
             source_dfg=dfg,
             rewrite_result=rw,
             pf_source=pf_source,
+            chain_split_bytes=self.chain_split_bytes,
         )
+        if art_key is not None:
+            # publish for the fleet: the next fresh process cold-starts here
+            self.artifact_store.save(art_key, prog)
+        return prog

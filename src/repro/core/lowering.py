@@ -1363,7 +1363,11 @@ def _mk_alloc_slots(body: list, widths: dict[str, int]):
     out: list = []
     for i, ins in enumerate(body):
         src_slots = tuple(slot_of[s] for s in ins.src)
-        for s in set(ins.src):
+        # dedup in positional order, NOT set(): set iteration is hash-seed
+        # dependent, and the free-list order decides slot reuse — the
+        # emitted stream must be identical across processes (the artifact
+        # store validates a relinearize against the serialized stream)
+        for s in dict.fromkeys(ins.src):
             if last_use[s] == i:
                 free.setdefault(widths[s], []).append(slot_of[s])
         dst = -1

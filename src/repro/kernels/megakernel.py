@@ -137,6 +137,35 @@ class MegakernelProgram:
     def n_instrs(self) -> int:
         return sum(len(s.instrs) for s in self.segments)
 
+    def fingerprint(self) -> str:
+        """Content digest of the linearized program: every instruction
+        (opcode, slots, static operands) plus the const/matrix pools byte
+        for byte.  Two programs with equal fingerprints execute the
+        identical single-launch stream — this is what the artifact store
+        validates on load: the re-linearized plan must reproduce exactly
+        the stream that was serialized, else the artifact was produced by
+        a different toolchain and must not silently serve."""
+        import hashlib
+
+        h = hashlib.sha256()
+        for kind, payload in self.items:
+            if kind == "step":
+                h.update(repr(("step", payload)).encode())
+                continue
+            seg = payload
+            h.update(repr(("seg", seg.slot_widths, seg.in_refs, seg.out_refs,
+                           seg.out_widths, seg.out_shapes, seg.quantized,
+                           seg.bits, seg.members)).encode())
+            for ins in seg.instrs:
+                h.update(repr((ins.op, ins.dst, ins.src, ins.operand,
+                               ins.nid)).encode())
+            for pool in (seg.consts, seg.matrices):
+                for arr in pool:
+                    a = np.asarray(arr)
+                    h.update(repr((a.dtype.str, a.shape)).encode())
+                    h.update(a.tobytes())
+        return h.hexdigest()
+
     def summary(self) -> str:
         segs = self.segments
         return (f"MegakernelProgram({len(segs)} segments, "

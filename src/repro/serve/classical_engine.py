@@ -11,11 +11,22 @@ per-request outputs back.  All device work is one jit'd call per bucket
 size; the Python layer only does queue bookkeeping — mirroring the
 slot/queue split of the transformer engine.
 
+:class:`ClassicalServeEngine` is the **synchronous adapter** over the
+multi-tenant continuous-batching core
+(:class:`repro.serve.async_engine.AsyncServeEngine`): it registers one
+model and drives forced bucket flushes, so its device path — and therefore
+its outputs, bitwise — is exactly the async tier's.  Servers wanting
+staggered arrivals, SLO deadlines and per-request latency metrics use the
+async engine directly.
+
 Programs are cached per ``(benchmark, trained, seed, backend, strategy,
 metric, pipelining, use_pallas, precision, per_channel, chain_split_bytes,
-exec_mode)`` — repeat engines (and repeat benchmark sweeps) never
-recompile: :func:`configs.classical.build` is deterministic in those knobs,
-so the key fully identifies the program.
+exec_mode, artifact-store root)`` — repeat engines (and repeat benchmark
+sweeps) never recompile: :func:`configs.classical.build` is deterministic
+in those knobs, so the key fully identifies the program.  The cache is
+**thread-safe with single-flight compilation**: concurrent ``get_program``
+calls for the same key produce one compile — the first caller compiles,
+the rest block on its completion and share the result.
 
 ``exec_mode="megakernel"`` serves each bucket through the single-launch
 instruction stream of the linearize pass (one ``pallas_call`` per
@@ -33,8 +44,7 @@ compiled callable.
 
 from __future__ import annotations
 
-import dataclasses
-import time
+import threading
 from typing import Any
 
 import numpy as np
@@ -42,6 +52,7 @@ import numpy as np
 from repro.configs.classical import ClassicalBenchmark, build, training_split
 from repro.core.compiler import BatchedProgram, CompiledProgram, MafiaCompiler
 from repro.core.lowering import DEFAULT_CHAIN_SPLIT_BYTES
+from repro.serve.scheduling import InferRequest
 
 _CALIB_SAMPLES = 256     # training-split rows used for int8 scale calibration
 
@@ -51,6 +62,10 @@ __all__ = ["ClassicalServeEngine", "InferRequest", "get_program",
 
 # ----------------------------------------------------------- program cache
 _PROGRAM_CACHE: dict[tuple, CompiledProgram] = {}
+_CACHE_LOCK = threading.Lock()
+# single-flight: key -> Event set when that key's compile finishes (either
+# into the cache, or by failing — waiters re-check and may retry as leader)
+_IN_FLIGHT: dict[tuple, threading.Event] = {}
 
 
 def get_program(
@@ -67,6 +82,7 @@ def get_program(
     per_channel: bool = False,
     chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
     exec_mode: str = "interpret",
+    artifact_store: Any | None = None,
 ) -> CompiledProgram:
     """Compile (or fetch from cache) one classical benchmark program.
 
@@ -79,54 +95,64 @@ def get_program(
     ``chain_split_bytes`` is the compiler's per-chain VMEM budget; it is
     part of the cache key — two callers wanting different budgets get
     different plans, never a silently shared one.
+
+    Thread-safe, with **single-flight** compiles: when N threads race on
+    the same key, exactly one runs the compiler; the others wait on its
+    completion and return the same program object.  If the leader fails,
+    one waiter retries as the new leader (transient failures don't poison
+    the key).
+
+    ``artifact_store`` threads a persistent
+    :class:`repro.core.artifacts.ArtifactStore` through to the compiler:
+    cache misses then consult the store before the Best-PF search (a fresh
+    process cold-starts from artifacts a sibling published) and publish
+    their result.  The store's root participates in the cache key.
     """
     name = bench if isinstance(bench, str) else bench.name
     key = (name, trained, seed, backend, strategy, metric, pipelining,
-           use_pallas, precision, per_channel, chain_split_bytes, exec_mode)
-    prog = _PROGRAM_CACHE.get(key)
-    if prog is None:
-        dfg, _, _ = build(bench, trained=trained, seed=seed)
-        calib = None
-        if precision != "float32":       # fixed-point lanes (int8 / int16)
-            Xtr, _ = training_split(bench, seed=seed)
-            calib = Xtr[:_CALIB_SAMPLES]
-        compiler = MafiaCompiler(
-            backend=backend, strategy=strategy, metric=metric,
-            pipelining=pipelining, use_pallas=use_pallas, precision=precision,
-            per_channel=per_channel, chain_split_bytes=chain_split_bytes,
-            exec_mode=exec_mode)
-        prog = compiler.compile(dfg, calib=calib)
-        _PROGRAM_CACHE[key] = prog
-    return prog
+           use_pallas, precision, per_channel, chain_split_bytes, exec_mode,
+           None if artifact_store is None else str(artifact_store.root))
+    while True:
+        with _CACHE_LOCK:
+            prog = _PROGRAM_CACHE.get(key)
+            if prog is not None:
+                return prog
+            event = _IN_FLIGHT.get(key)
+            if event is None:
+                event = _IN_FLIGHT[key] = threading.Event()
+                leader = True
+            else:
+                leader = False
+        if not leader:
+            # follower: wait for the leader's outcome, then re-check — a
+            # cache hit on success, a fresh leadership race on failure
+            event.wait()
+            continue
+        try:
+            dfg, _, _ = build(bench, trained=trained, seed=seed)
+            calib = None
+            if precision != "float32":   # fixed-point lanes (int8 / int16)
+                Xtr, _ = training_split(bench, seed=seed)
+                calib = Xtr[:_CALIB_SAMPLES]
+            compiler = MafiaCompiler(
+                backend=backend, strategy=strategy, metric=metric,
+                pipelining=pipelining, use_pallas=use_pallas,
+                precision=precision, per_channel=per_channel,
+                chain_split_bytes=chain_split_bytes, exec_mode=exec_mode,
+                artifact_store=artifact_store)
+            prog = compiler.compile(dfg, calib=calib)
+            with _CACHE_LOCK:
+                _PROGRAM_CACHE[key] = prog
+            return prog
+        finally:
+            with _CACHE_LOCK:
+                _IN_FLIGHT.pop(key, None)
+            event.set()
 
 
 def clear_program_cache() -> None:
-    _PROGRAM_CACHE.clear()
-
-
-# ----------------------------------------------------------------- requests
-@dataclasses.dataclass
-class InferRequest:
-    """One classification request: a feature vector in, DFG outputs back."""
-
-    rid: int
-    x: np.ndarray
-    outputs: dict[str, np.ndarray] | None = None
-
-    @property
-    def done(self) -> bool:
-        return self.outputs is not None
-
-    @property
-    def pred(self) -> int | None:
-        """Predicted class, from the DFG's argmax output when present."""
-        if self.outputs is None:
-            return None
-        for v in self.outputs.values():
-            if np.issubdtype(np.asarray(v).dtype, np.integer):
-                return int(np.asarray(v).ravel()[0])
-        first = next(iter(self.outputs.values()))
-        return int(np.asarray(first).argmax())
+    with _CACHE_LOCK:
+        _PROGRAM_CACHE.clear()
 
 
 # ------------------------------------------------------------------- engine
@@ -140,6 +166,13 @@ class ClassicalServeEngine:
     ``"vmap"`` (throughput; Pallas pipeline clusters see the whole bucket)
     or ``"map"`` (bit-identical to per-sample execution — at int8 the two
     modes agree *bitwise*, integer arithmetic has no reassociation error).
+
+    This is a synchronous adapter over one
+    :class:`~repro.serve.async_engine.AsyncServeEngine` model:
+    ``submit``/``step``/``run_to_completion`` keep their historical
+    contract (drain-on-demand, FIFO, ``max_batch`` per forward) while the
+    batching/scatter device path is shared with the async tier — the two
+    produce bitwise-identical outputs by construction.
     """
 
     def __init__(
@@ -150,78 +183,63 @@ class ClassicalServeEngine:
         mode: str = "vmap",
         **compile_kw: Any,
     ) -> None:
-        if not isinstance(program, CompiledProgram):
-            program = get_program(program, **compile_kw)
-        elif compile_kw:
-            raise TypeError("compile kwargs only apply when passing a "
-                            "benchmark name")
-        self.program = program
-        self.batched: BatchedProgram = program.batch(max_batch, mode=mode)
+        from repro.serve.async_engine import AsyncServeEngine
+
+        if not isinstance(program, (CompiledProgram, str)):
+            program = program.name      # ClassicalBenchmark spec
+        self._core = AsyncServeEngine()
+        self._model = self._core.register_model(
+            "default", program, max_batch=max_batch, mode=mode, **compile_kw)
+        self.program: CompiledProgram = self._model.program
+        self.batched: BatchedProgram = self._model.batched
         self.max_batch = max_batch
-        gi = program.dfg.graph_inputs
-        if len(gi) != 1:
-            raise ValueError(
-                f"classical engine serves single-input DFGs; got {sorted(gi)}")
-        self._input_name = next(iter(gi))
-        self._in_shape = gi[self._input_name].shape
-        self._queue: list[InferRequest] = []
-        self._finished: list[InferRequest] = []
-        self._next_rid = 0
-        self.device_s = 0.0      # wall-clock spent in batched forwards
-        self.served = 0
+        self._input_name = self._model.input_name
+        self._in_shape = self._model.in_shape
 
     # --------------------------------------------------------- bookkeeping
     def submit(self, x: np.ndarray) -> int:
-        x = np.asarray(x, np.float32)
-        if x.shape != self._in_shape:
-            raise ValueError(
-                f"request shape {x.shape} != program input {self._in_shape}")
-        req = InferRequest(self._next_rid, x)
-        self._next_rid += 1
-        self._queue.append(req)
-        return req.rid
+        return self._core.submit("default", x).rid
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._model.queue)
+
+    @property
+    def device_s(self) -> float:
+        """Wall-clock spent in batched forwards."""
+        return self._model.metrics.device_s
+
+    @property
+    def served(self) -> int:
+        return self._model.metrics.served
 
     # ----------------------------------------------------------------- step
     def step(self) -> dict[int, InferRequest]:
         """Drain up to ``max_batch`` queued requests through one batched
         forward.  Returns {request id: finished request}."""
-        if not self._queue:
-            return {}
-        batch, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
-        X = np.stack([r.x for r in batch])
-        t0 = time.perf_counter()
-        out = self.batched(**{self._input_name: X})
-        out = {k: np.asarray(v) for k, v in out.items()}
-        self.device_s += time.perf_counter() - t0
-        done: dict[int, InferRequest] = {}
-        for i, req in enumerate(batch):
-            req.outputs = {k: v[i] for k, v in out.items()}
-            self._finished.append(req)
-            done[req.rid] = req
-        self.served += len(batch)
-        return done
+        return {r.rid: r for r in self._core.flush("default")}
 
     # --------------------------------------------------------------- driver
     def run_to_completion(self) -> list[InferRequest]:
         """Drain the queue; returns (and hands off) the finished requests in
         submission order.  Each request is returned exactly once.  Every
         step retires ≥ 1 request, so this always terminates."""
-        while self._queue:
+        while self._model.queue:
             self.step()
-        done, self._finished = self._finished, []
+        done, self._model.finished = self._model.finished, []
         return sorted(done, key=lambda r: r.rid)
 
     def reset_stats(self) -> None:
         """Zero the throughput counters and per-bucket forward counts —
         call after a warm-up pass so measurements exclude jit compiles."""
-        self.device_s = 0.0
-        self.served = 0
+        self._model.metrics.reset()
+        self._core.metrics.reset()
         self.batched.stats.clear()
+
+    def metrics(self) -> dict:
+        """Latency/occupancy snapshot of the underlying serving core."""
+        return self._model.metrics.snapshot()
 
     def throughput(self) -> float:
         """Requests/sec over the batched forwards issued so far."""
-        return self.served / self.device_s if self.device_s > 0 else 0.0
+        return self._model.metrics.device_rps()

@@ -29,6 +29,7 @@ from repro.models.transformer import (
     forward_full,
     init_cache,
 )
+from repro.serve.scheduling import SlotPool, bucket_for
 
 __all__ = ["ServeEngine", "Request"]
 
@@ -91,7 +92,10 @@ class ServeEngine:
         if self._cache_sh is not None:
             self.caches = jax.device_put(self.caches, self._cache_sh)
         self.pos = np.zeros(max_batch, np.int32)
-        self.active = np.zeros(max_batch, bool)
+        # slot occupancy lives in the shared SlotPool; ``active`` aliases
+        # its flags array so the decode mask and the pool stay one state
+        self.slots = SlotPool(max_batch)
+        self.active = self.slots.flags
         self.last_token = np.zeros(max_batch, np.int32)
         self._slots: dict[int, Request] = {}
         self._next_rid = 0
@@ -144,15 +148,12 @@ class ServeEngine:
         return req.rid
 
     def _free_slots(self) -> list[int]:
-        return [i for i in range(self.max_batch) if not self.active[i]]
+        return self.slots.free()
 
     def _bucket(self, n: int) -> int:
         if self._exact_prefill:
             return n
-        b = 8
-        while b < n:
-            b *= 2
-        return min(b, self.max_len)
+        return bucket_for(n, self.max_len, floor=8)
 
     def _sample(self, logits: jax.Array) -> int:
         lf = np.array(logits, np.float32)        # writable copy
@@ -187,7 +188,7 @@ class ServeEngine:
 
         self.caches = {k: put(k, self.caches[k], pcache[k]) for k in self.caches}
         self.pos[slot] = plen
-        self.active[slot] = True
+        self.slots.acquire(slot)
         self.last_token[slot] = first
         req.slot = slot
         req.tokens.append(first)
@@ -207,10 +208,10 @@ class ServeEngine:
         # free and run_to_completion spins to max_steps.
         for slot, req in list(self._slots.items()):
             if req.done:
-                self.active[slot] = False
+                self.slots.release(slot)
                 self._finished.append(req)
                 del self._slots[slot]
-        if not self.active.any():
+        if not self.slots.any_active:
             return {}
 
         logits, self.caches = self._decode(
@@ -226,7 +227,7 @@ class ServeEngine:
             self.last_token[slot] = tok
             self.pos[slot] += 1
             if req.done or self.pos[slot] >= self.max_len - 1:
-                self.active[slot] = False
+                self.slots.release(slot)
                 self._finished.append(req)
                 del self._slots[slot]
         return out

@@ -1,0 +1,192 @@
+"""Persistent compile-artifact store: round-trip fidelity and trust checks.
+
+The contract under test (see :mod:`repro.core.artifacts`): a program saved
+to the store and loaded back — in this process with a fresh compiler (the
+in-memory-cache-free proxy), or in a genuinely fresh interpreter — is
+bitwise-identical on every precision × exec-mode lane, skips the Best-PF
+search (``pf_source == "artifact"``), and refuses to serve corrupt or
+version-skewed artifacts.
+"""
+
+import pickle
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import build, training_split
+from repro.core.artifacts import (
+    ARTIFACT_VERSION,
+    ArtifactError,
+    ArtifactStore,
+    load_program,
+    program_self_key,
+    save_program,
+)
+from repro.core.compiler import CompiledProgram, MafiaCompiler
+
+BENCH = "bonsai/usps-b"
+
+
+def _dfg():
+    dfg, _, _ = build(BENCH, trained=False, seed=0)
+    return dfg
+
+
+def _calib(precision):
+    if precision == "float32":
+        return None
+    Xtr, _ = training_split(BENCH, seed=0)
+    return Xtr[:64]
+
+
+def _probe(dfg):
+    name, gi = next(iter(dfg.graph_inputs.items()))
+    x = np.random.default_rng(7).standard_normal(gi.shape).astype(np.float32)
+    return name, x
+
+
+@pytest.mark.parametrize("precision", ["float32", "int8", "int16"])
+@pytest.mark.parametrize("exec_mode", ["interpret", "megakernel"])
+def test_roundtrip_bitwise_and_skips_best_pf(tmp_path, precision, exec_mode):
+    """compile → save → load on a *fresh* compiler: bitwise-identical
+    outputs, pf_source='artifact', and the loaded program reuses the saved
+    assignment/schedule/quant plan verbatim."""
+    store = ArtifactStore(tmp_path / "store")
+    kw = dict(use_pallas=True, precision=precision, exec_mode=exec_mode,
+              calib_samples=64, artifact_store=store)
+    p1 = MafiaCompiler(**kw).compile(_dfg(), calib=_calib(precision))
+    assert store.saves == 1 and store.misses == 1
+    p2 = MafiaCompiler(**kw).compile(_dfg(), calib=_calib(precision))
+    assert store.hits == 1
+    assert p2.pf_source == "artifact"
+    assert p2.assignment == p1.assignment
+    assert p2.schedule.total_cycles == p1.schedule.total_cycles
+    if precision != "float32":
+        assert p2.qplan.input_exps == p1.qplan.input_exps
+        assert set(p2.qplan.nodes) == set(p1.qplan.nodes)
+        assert all(p2.qplan.nodes[n].out_exp == p1.qplan.nodes[n].out_exp
+                   for n in p1.qplan.nodes)
+    name, x = _probe(p1.dfg)
+    o1, o2 = p1(**{name: x}), p2(**{name: x})
+    assert set(o1) == set(o2)
+    for k in o1:
+        a, b = np.asarray(o1[k]), np.asarray(o2[k])
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b), (precision, exec_mode, k)
+
+
+def test_save_load_via_compiled_program_methods(tmp_path):
+    path = tmp_path / "prog.mafia"
+    p1 = MafiaCompiler(use_pallas=True).compile(_dfg())
+    p1.save(path)
+    p2 = CompiledProgram.load(path)
+    assert p2.pf_source == "artifact"
+    name, x = _probe(p1.dfg)
+    o1, o2 = p1(**{name: x}), p2(**{name: x})
+    for k in o1:
+        assert np.array_equal(np.asarray(o1[k]), np.asarray(o2[k]))
+
+
+def test_weights_participate_in_the_key(tmp_path):
+    """Two trainings of the same architecture must not collide: the
+    structural hash ignores parameter values, the artifact key must not."""
+    store = ArtifactStore(tmp_path / "store")
+    kw = dict(use_pallas=True, artifact_store=store)
+    dfg_a, _, _ = build(BENCH, trained=False, seed=0)
+    dfg_b, _, _ = build(BENCH, trained=False, seed=0)
+    # identical structure, retrained weights: scale one float parameter
+    node = next(
+        n for n in dfg_b.nodes.values()
+        if any(np.issubdtype(np.asarray(v).dtype, np.floating)
+               and np.asarray(v).size for v in n.params.values()))
+    key = next(k for k, v in node.params.items()
+               if np.issubdtype(np.asarray(v).dtype, np.floating)
+               and np.asarray(v).size)
+    node.params[key] = np.asarray(node.params[key]) * 1.5
+    assert dfg_a.structural_hash() == dfg_b.structural_hash()
+    pa = MafiaCompiler(**kw).compile(dfg_a)
+    pb = MafiaCompiler(**kw).compile(dfg_b)
+    assert store.hits == 0 and store.saves == 2
+    assert program_self_key(pa) != program_self_key(pb)
+    name, x = _probe(pa.dfg)
+    oa, ob = pa(**{name: x}), pb(**{name: x})
+    assert any(not np.array_equal(np.asarray(oa[k]), np.asarray(ob[k]))
+               for k in oa)
+
+
+def test_corrupt_artifact_is_rejected_and_store_treats_it_as_miss(tmp_path):
+    path = tmp_path / "prog.mafia"
+    prog = MafiaCompiler().compile(_dfg())
+    save_program(prog, path)
+    blob = bytearray(path.read_bytes())
+    blob[-1] ^= 0xFF                       # flip one payload byte
+    path.write_bytes(bytes(blob))
+    with pytest.raises(ArtifactError, match="digest mismatch"):
+        load_program(path)
+    store = ArtifactStore(tmp_path)
+    assert store.load("prog") is None      # tolerant path: miss, not raise
+    assert store.misses == 1
+
+
+def test_version_skew_is_rejected(tmp_path):
+    path = tmp_path / "prog.mafia"
+    prog = MafiaCompiler().compile(_dfg())
+    save_program(prog, path)
+    blob = path.read_bytes()
+    old = f"version={ARTIFACT_VERSION} ".encode()
+    new = f"version={ARTIFACT_VERSION + 1} ".encode()
+    path.write_bytes(blob.replace(old, new, 1))
+    with pytest.raises(ArtifactError, match="version"):
+        load_program(path)
+
+
+def test_payload_is_pure_data(tmp_path):
+    """The serialized payload must never smuggle a callable — that is the
+    whole rebind-on-load contract (and what keeps artifacts portable)."""
+    from repro.core.artifacts import program_state
+
+    state = program_state(MafiaCompiler(use_pallas=True).compile(_dfg()))
+    pickle.dumps(state)                    # would raise on any closure
+    assert "fn" not in state
+
+
+@pytest.mark.slow
+def test_fresh_process_cold_start(tmp_path):
+    """The real acceptance claim: a brand-new interpreter loads the
+    artifact, skips Best-PF, and reproduces the saving process's outputs
+    bit for bit."""
+    store = ArtifactStore(tmp_path / "store")
+    prog = MafiaCompiler(use_pallas=True, exec_mode="megakernel",
+                         artifact_store=store).compile(_dfg())
+    name, x = _probe(prog.dfg)
+    ref = {k: np.asarray(v) for k, v in prog(**{name: x}).items()}
+    np.savez(tmp_path / "ref.npz", x=x, **{f"out_{k}": v
+                                           for k, v in ref.items()})
+    script = f"""
+import numpy as np
+from repro.configs.classical import build
+from repro.core.artifacts import ArtifactStore
+from repro.core.compiler import MafiaCompiler
+
+dfg, _, _ = build({BENCH!r}, trained=False, seed=0)
+store = ArtifactStore({str(store.root)!r})
+prog = MafiaCompiler(use_pallas=True, exec_mode="megakernel",
+                     artifact_store=store).compile(dfg)
+assert prog.pf_source == "artifact", prog.pf_source
+assert store.hits == 1
+data = np.load({str(tmp_path / 'ref.npz')!r})
+out = prog(**{{{name!r}: data["x"]}})
+for key in data.files:
+    if not key.startswith("out_"):
+        continue
+    got = np.asarray(out[key[4:]])
+    assert got.dtype == data[key].dtype, key
+    assert np.array_equal(got, data[key]), key
+print("FRESH-PROCESS-OK")
+"""
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=300)
+    assert res.returncode == 0, res.stderr
+    assert "FRESH-PROCESS-OK" in res.stdout

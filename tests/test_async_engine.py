@@ -1,0 +1,235 @@
+"""Async continuous-batching tier: scheduling, SLOs, residency, metrics.
+
+The engine's scheduling core is synchronous and clock-injectable
+(:class:`repro.serve.async_engine.AsyncServeEngine` — ``submit``/``poll``/
+``flush`` take an explicit ``now``), so these tests drive deadlines with a
+fake clock and every batching decision is deterministic.  The asyncio
+surface is exercised end-to-end with staggered arrivals at the bottom.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.data.datasets import get_spec, make_dataset
+from repro.serve.async_engine import AsyncServeEngine
+from repro.serve.classical_engine import get_program
+from repro.serve.scheduling import QueueFull
+
+BENCH = "bonsai/usps-b"
+
+
+def _requests(n: int) -> np.ndarray:
+    _, _, Xte, _ = make_dataset(get_spec("usps-b"), n_train=16, n_test=n)
+    return Xte
+
+
+class FakeClock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _engine(clock=None, **kw) -> AsyncServeEngine:
+    return AsyncServeEngine(clock=clock or FakeClock(), **kw)
+
+
+# ------------------------------------------------------- batching decisions
+def test_partial_bucket_waits_then_flushes_on_batch_wait():
+    """Continuous batching: a partial bucket holds for ``batch_wait`` (so
+    later arrivals can join — occupancy > 1) and then flushes."""
+    clock = FakeClock()
+    eng = _engine(clock)
+    eng.register_model("m", get_program(BENCH), max_batch=16,
+                       batch_wait_ms=10.0)
+    X = _requests(5)
+    for i in range(3):
+        eng.submit("m", X[i])
+    assert eng.poll() == []                # not full, not due: hold
+    clock.t = 0.005
+    for i in range(3, 5):
+        eng.submit("m", X[i])              # stragglers join the bucket
+    assert eng.poll() == []
+    clock.t = 0.011                        # oldest has now waited > 10 ms
+    done = eng.poll()
+    assert len(done) == 5                  # one flush took all five
+    assert eng.metrics.batch_occupancy() == 5.0
+    assert eng.pending() == 0
+
+
+def test_full_bucket_flushes_immediately():
+    clock = FakeClock()
+    eng = _engine(clock)
+    eng.register_model("m", get_program(BENCH), max_batch=4,
+                       batch_wait_ms=1e6)
+    X = _requests(9)
+    for x in X:
+        eng.submit("m", x)
+    done = eng.poll()                      # two full buckets, one remainder
+    assert len(done) == 8                  # remainder is neither full nor due
+    assert eng.pending("m") == 1
+    assert [r.rid for r in done] == list(range(8))   # FIFO
+
+
+def test_slo_deadline_forces_partial_flush():
+    """A request whose deadline is within the expected batch latency must
+    not keep waiting for its bucket to fill."""
+    clock = FakeClock()
+    eng = _engine(clock)
+    eng.register_model("m", get_program(BENCH), max_batch=64, slo_ms=20.0,
+                       batch_wait_ms=1e6)   # batch_wait never fires
+    eng.submit("m", _requests(1)[0])
+    assert eng.poll() == []                # far from the deadline
+    clock.t = 0.021                        # past the 20 ms deadline
+    done = eng.poll()
+    assert len(done) == 1
+    assert done[0].t_done is not None and done[0].latency_s > 0.02
+    assert eng.metrics.slo_misses == 1     # flushed, but past deadline
+    # the next request flushes *before* its deadline: est_batch_s is now
+    # nonzero, so `due` fires margin seconds early
+    m = eng._models["m"]
+    assert m.est_batch_s > 0
+    eng.submit("m", _requests(1)[0], now=clock.t)
+    clock.t = 0.021 + 0.02 - m.est_batch_s / 2   # inside the margin window
+    assert len(eng.poll()) == 1
+    assert eng.metrics.slo_misses == 1     # this one made it
+
+
+def test_admission_queue_bound_rejects():
+    eng = _engine()
+    eng.register_model("m", get_program(BENCH), queue_limit=2,
+                       batch_wait_ms=1e6)
+    X = _requests(3)
+    eng.submit("m", X[0])
+    eng.submit("m", X[1])
+    with pytest.raises(QueueFull):
+        eng.submit("m", X[2])
+    assert eng.metrics.rejected == 1
+    assert eng._models["m"].queue.rejected == 1
+    eng.drain()                            # bound frees as requests retire
+    eng.submit("m", X[2])
+    assert eng.pending("m") == 1
+
+
+def test_submit_validates_shape_and_model():
+    eng = _engine()
+    eng.register_model("m", get_program(BENCH))
+    with pytest.raises(ValueError, match="request shape"):
+        eng.submit("m", np.zeros(7, np.float32))
+    with pytest.raises(KeyError, match="unknown model"):
+        eng.submit("ghost", _requests(1)[0])
+
+
+# ------------------------------------------------------- residency / store
+def test_lru_eviction_into_artifact_store_and_reload(tmp_path):
+    """Registering beyond ``max_resident`` evicts the least-recently-used
+    model into the artifact store; its next request restores it from the
+    store (cache hit — no Best-PF) and serves identically."""
+    from repro.core.artifacts import ArtifactStore
+
+    store = ArtifactStore(tmp_path / "store")
+    eng = _engine(max_resident=1, artifact_store=store)
+    eng.register_model("a", BENCH, strategy="none", batch_wait_ms=1e6)
+    ref_prog = eng._models["a"].program
+    X = _requests(2)
+    ref = {k: np.asarray(v) for k, v in
+           ref_prog(x=X[0]).items()}
+    eng.register_model("b", "protonn/usps-b", strategy="none",
+                       batch_wait_ms=1e6)
+    assert eng.resident_models == ("b",)   # a was evicted, parked in store
+    assert eng.metrics.evictions == 1
+    assert not eng._models["a"].resident
+    eng.submit("a", X[0])
+    done = eng.flush("a")                  # transparently restored
+    assert eng._models["a"].resident
+    assert eng.metrics.cache_hits == 1 and eng.metrics.cache_misses == 0
+    assert eng._models["a"].program.pf_source == "artifact"
+    assert eng.resident_models == ("a",)   # b took a's place in the store
+    for k, v in done[0].outputs.items():
+        assert np.array_equal(np.asarray(v), ref[k])
+
+
+def test_eviction_without_store_falls_back_to_loader():
+    eng = _engine(max_resident=1)
+    eng.register_model("a", BENCH, strategy="none", batch_wait_ms=1e6)
+    eng.register_model("b", "protonn/usps-b", strategy="none",
+                       batch_wait_ms=1e6)
+    assert not eng._models["a"].resident
+    eng.submit("a", _requests(1)[0])
+    assert len(eng.flush("a")) == 1        # recompile path (program cache)
+    assert eng._models["a"].resident
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_latency_and_rps_windows():
+    clock = FakeClock()
+    eng = _engine(clock)
+    eng.register_model("m", get_program(BENCH), batch_wait_ms=1e6)
+    X = _requests(4)
+    for i, x in enumerate(X):
+        clock.t = i * 0.01
+        eng.submit("m", x)
+    clock.t = 0.1
+    eng.poll(force=True)
+    s = eng.stats()
+    assert s["served"] == 4 and s["batches"] == 1
+    assert s["batch_occupancy"] == 4.0
+    # oldest waited 100 ms, newest 70 ms; p50 between, p99 near the max
+    assert 0.07e3 <= s["p50_ms"] <= 0.1e3
+    assert s["p99_ms"] <= 0.1e3 + 1e-6
+    # rps window = first enqueue (t=0) → completion (t=0.1)
+    assert s["rps"] == pytest.approx(4 / 0.1)
+    assert s["models"]["m"]["served"] == 4
+
+
+# ------------------------------------------------------------- async layer
+def test_async_staggered_arrivals_continuous_refill():
+    """End-to-end through the asyncio surface: one-at-a-time arrivals, yet
+    batch occupancy > 1 — the continuous-refill acceptance criterion."""
+    eng = AsyncServeEngine()               # real clock for the async path
+    eng.register_model("m", get_program(BENCH), slo_ms=500.0, max_batch=32,
+                       batch_wait_ms=20.0)
+    X = _requests(48)
+    eng.submit("m", X[0])                  # warm jit entries off-window
+    eng.drain()
+    eng.metrics.reset()
+    eng._models["m"].metrics.reset()
+
+    async def drive():
+        runner = asyncio.create_task(eng.run())
+        reqs = []
+        for x in X:
+            reqs.append(await eng.submit_async("m", x))
+            await asyncio.sleep(0.0002)
+        done = await asyncio.gather(*(eng.result(r) for r in reqs))
+        eng.stop()
+        await runner
+        return done
+
+    done = asyncio.run(drive())
+    assert len(done) == 48 and all(r.done for r in done)
+    assert {r.rid for r in done} == {r.rid for r in done}  # all distinct
+    s = eng.stats()
+    assert s["served"] == 48
+    assert s["batch_occupancy"] > 1.0      # refill happened
+    assert s["batches"] < 48               # … i.e. fewer forwards than reqs
+    assert s["p99_ms"] > 0
+
+
+def test_run_loop_drains_pending_on_stop():
+    eng = AsyncServeEngine()
+    eng.register_model("m", get_program(BENCH), batch_wait_ms=1e6)
+
+    async def drive():
+        runner = asyncio.create_task(eng.run())
+        await asyncio.sleep(0)             # let the loop start
+        req = await eng.submit_async("m", _requests(1)[0])
+        eng.stop()
+        await runner                       # shutdown path drains the queue
+        return req
+
+    req = asyncio.run(drive())
+    assert req.done and eng.pending() == 0

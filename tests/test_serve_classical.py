@@ -190,3 +190,172 @@ def test_batched_program_rejects_unknown_inputs():
         prog(x=X[0], bogus=X[0])
     out = batched(x=X)                       # exact inputs still fine
     assert next(iter(out.values())).shape[0] == 3
+
+
+# ------------------------------------------------- serving-tier satellites
+def test_engine_step_empty_after_drain_and_resubmit():
+    """step() on a drained engine is a no-op, and the engine accepts new
+    work after run_to_completion — rids keep incrementing, outputs stay
+    correct, and nothing finished is handed off twice."""
+    eng = ClassicalServeEngine(BENCHES[0], max_batch=4, mode="map")
+    X = _requests("usps-b", 6)
+    first_rids = [eng.submit(x) for x in X[:3]]
+    first = eng.run_to_completion()
+    assert [r.rid for r in first] == first_rids
+    assert eng.step() == {}                 # drained: no-op, no crash
+    assert eng.run_to_completion() == []    # nothing handed off twice
+    second_rids = [eng.submit(x) for x in X[3:]]
+    assert second_rids == [3, 4, 5]         # rids continue after the drain
+    second = eng.run_to_completion()
+    assert [r.rid for r in second] == second_rids
+    prog = get_program(BENCHES[0])
+    for r in second:
+        ref = prog(x=r.x)
+        for k in ref:
+            assert np.array_equal(r.outputs[k], np.asarray(ref[k]))
+
+
+def test_two_precisions_share_cache_without_crosstalk():
+    """A float32 engine and an int8 engine on the same benchmark hold two
+    distinct cache entries and never see each other's programs: interleaved
+    serving reproduces each lane's own per-sample outputs exactly."""
+    _PROGRAM_CACHE.clear()
+    eng_f = ClassicalServeEngine(BENCHES[0], max_batch=4, mode="map")
+    eng_q = ClassicalServeEngine(BENCHES[0], max_batch=4, mode="map",
+                                 precision="int8")
+    assert len(_PROGRAM_CACHE) == 2
+    assert eng_f.program is not eng_q.program
+    assert eng_f.program.precision == "float32"
+    assert eng_q.program.precision == "int8"
+    X = _requests("usps-b", 5)
+    for x in X:                             # interleaved submits
+        eng_f.submit(x)
+        eng_q.submit(x)
+    done_f = eng_f.run_to_completion()
+    done_q = eng_q.run_to_completion()
+    pf, pq = eng_f.program, eng_q.program
+    for rf, rq in zip(done_f, done_q):
+        ref_f, ref_q = pf(x=rf.x), pq(x=rq.x)
+        for k in ref_f:
+            assert np.array_equal(rf.outputs[k], np.asarray(ref_f[k]))
+        for k in ref_q:
+            assert np.array_equal(rq.outputs[k], np.asarray(ref_q[k]))
+
+
+def test_pred_resolves_by_declared_output_order():
+    """InferRequest.pred resolves the class prediction against the
+    program's *declared* output names: first integer-dtype output in
+    declared order wins; a program with no integer output falls back to
+    argmax over the first declared output (the documented fallback)."""
+    from repro.serve.scheduling import InferRequest
+
+    outs = {
+        "Scores": np.array([0.1, 0.9, 0.2], np.float32),
+        "Pred": np.array([2], np.int32),
+        "AltPred": np.array([0], np.int32),
+    }
+    x = np.zeros(3, np.float32)
+    # declared order picks Pred even though dict order could offer AltPred
+    r = InferRequest(0, x, outputs=outs,
+                     output_names=("Scores", "Pred", "AltPred"))
+    assert r.pred == 2
+    r = InferRequest(1, x, outputs=outs,
+                     output_names=("AltPred", "Scores", "Pred"))
+    assert r.pred == 0
+    # documented fallback: no integer output -> argmax of first declared
+    r = InferRequest(2, x, outputs={"Scores": outs["Scores"]},
+                     output_names=("Scores",))
+    assert r.pred == 1
+    # legacy: no output_names -> dict insertion order
+    r = InferRequest(3, x, outputs=outs)
+    assert r.pred == 2
+    assert InferRequest(4, x).pred is None  # not finished yet
+
+
+def test_engine_stamps_output_names_from_program():
+    eng = ClassicalServeEngine(BENCHES[0], max_batch=2)
+    eng.submit(_requests("usps-b", 1)[0])
+    (req,) = eng.run_to_completion()
+    assert req.output_names == tuple(eng.program.plan.outputs)
+    assert set(req.output_names) == set(req.outputs)
+
+
+def test_get_program_single_flight_under_concurrency(monkeypatch):
+    """N threads racing get_program on the same key must run exactly one
+    compile; everyone shares the leader's program object."""
+    import threading
+
+    from repro.serve import classical_engine as ce
+
+    ce.clear_program_cache()
+    n_compiles = 0
+    real_build = ce.build
+    barrier = threading.Barrier(6)
+
+    def counting_build(*a, **kw):
+        nonlocal n_compiles
+        n_compiles += 1
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(ce, "build", counting_build)
+    results: list = [None] * 6
+    errors: list = []
+
+    def worker(i: int) -> None:
+        try:
+            barrier.wait(timeout=30)
+            results[i] = ce.get_program(BENCHES[1], strategy="none")
+        except Exception as exc:            # pragma: no cover - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors
+    assert n_compiles == 1                  # single flight
+    assert all(r is results[0] and r is not None for r in results)
+
+
+def test_get_program_single_flight_leader_failure_retries(monkeypatch):
+    """A failing leader must not poison the key: one waiter retries as the
+    new leader and succeeds."""
+    import threading
+
+    from repro.serve import classical_engine as ce
+
+    ce.clear_program_cache()
+    real_build = ce.build
+    calls = 0
+    lock = threading.Lock()
+
+    def flaky_build(*a, **kw):
+        nonlocal calls
+        with lock:
+            calls += 1
+            mine = calls
+        if mine == 1:
+            raise RuntimeError("transient compile failure")
+        return real_build(*a, **kw)
+
+    monkeypatch.setattr(ce, "build", flaky_build)
+    barrier = threading.Barrier(2)
+    results: list = [None, None]
+
+    def worker(i: int) -> None:
+        barrier.wait(timeout=30)
+        try:
+            results[i] = ce.get_program(BENCHES[1], strategy="none")
+        except RuntimeError:
+            results[i] = "failed"
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert "failed" in results              # the first leader surfaced it
+    ok = [r for r in results if r != "failed"]
+    assert len(ok) == 1 and ok[0] is not None   # the retry succeeded
+    assert calls == 2
