@@ -56,6 +56,9 @@ def _best_of(fn, reps: int) -> float:
     return best
 
 
+_MEASURED_BUCKET = 8
+
+
 def collect_measured(trained: bool = False, *, reps: int = 5) -> list[dict]:
     """Measured per-sample wall-clock: per-chain-launch vs megakernel lane.
 
@@ -65,10 +68,17 @@ def collect_measured(trained: bool = False, *, reps: int = 5) -> list[dict]:
     single-launch per segment.  Min-of-``reps`` per lane; outputs asserted
     bitwise-equal before timing so the comparison can never drift from the
     parity contract.
+
+    Each row also times a served bucket of ``_MEASURED_BUCKET`` samples on
+    the two batched megakernel lanes: the vmapped lane (``bucket ×
+    segments`` launches) vs the batch-grid lane (``segments`` launches —
+    one per bucket when the program is island-free).  The lanes are
+    asserted bitwise-equal on the whole bucket before timing.
     """
     from repro.core.compiler import MafiaCompiler
     from repro.core.executor import build_callable
 
+    B = _MEASURED_BUCKET
     rows = []
     for bench in BENCHMARKS:
         dfg, _, _ = build(bench, trained=trained)
@@ -85,10 +95,24 @@ def collect_measured(trained: bool = False, *, reps: int = 5) -> list[dict]:
                 f"{bench.name}: megakernel lane diverged on {k}"
         fi(**{gi: x}); fm(**{gi: x})    # warm caches before timing
         mk = pm.plan.megakernel
+        # batched lanes: one bucket through vmap-megakernel vs batch-grid
+        bv = pm.batch(B, mode="vmap", exec_mode="megakernel")
+        bg = pm.batch(B, mode="vmap", exec_mode="megakernel_grid")
+        X = np.random.default_rng(1).standard_normal(
+            (B,) + tuple(spec.shape)).astype(np.float32)
+        ov, og = bv(**{gi: X}), bg(**{gi: X})
+        for k in ov:
+            assert np.array_equal(np.asarray(ov[k]), np.asarray(og[k])), \
+                f"{bench.name}: grid lane diverged from vmap lane on {k}"
+        bv(**{gi: X}); bg(**{gi: X})    # warm the bucket's jit entries
         rows.append({
             "benchmark": bench.name,
             "chain_launch_us": _best_of(lambda: fi(**{gi: x}), reps) * 1e6,
             "megakernel_us": _best_of(lambda: fm(**{gi: x}), reps) * 1e6,
+            "vmap_bucket_us": _best_of(lambda: bv(**{gi: X}), reps) * 1e6,
+            "grid_bucket_us": _best_of(lambda: bg(**{gi: X}), reps) * 1e6,
+            "vmap_launches": B * len(mk.segments),
+            "grid_launches": len(mk.segments),
             "segments": len(mk.segments),
             "islands": mk.n_islands,
             "instrs": mk.n_instrs,
@@ -122,16 +146,22 @@ def run(measured: bool = False, *,
     out.append(f"fig3.summary,mafia_over_vivado_mafia,{sp_hint:.2f},paper,2.5")
     if measured:
         out.append("fig3.measured,benchmark,chain_launch_us,megakernel_us,"
-                   "ratio,segments,islands,instrs")
+                   "ratio,vmap_bucket_us,grid_bucket_us,vmap_launches,"
+                   "grid_launches,segments,islands,instrs")
         mrows = collect_measured() if mrows is None else mrows
         for m in mrows:
             ratio = m["megakernel_us"] / m["chain_launch_us"]
             out.append(
                 f"fig3.measured,{m['benchmark']},{m['chain_launch_us']:.1f},"
-                f"{m['megakernel_us']:.1f},{ratio:.3f},{m['segments']},"
+                f"{m['megakernel_us']:.1f},{ratio:.3f},"
+                f"{m['vmap_bucket_us']:.1f},{m['grid_bucket_us']:.1f},"
+                f"{m['vmap_launches']},{m['grid_launches']},{m['segments']},"
                 f"{m['islands']},{m['instrs']}")
         sp = _geomean(m["chain_launch_us"] / m["megakernel_us"] for m in mrows)
         out.append(f"fig3.measured.summary,megakernel_speedup_geomean,{sp:.2f}")
+        sg = _geomean(m["vmap_bucket_us"] / m["grid_bucket_us"] for m in mrows)
+        out.append(f"fig3.measured.summary,grid_over_vmap_bucket_geomean,"
+                   f"{sg:.2f}")
     return out
 
 

@@ -11,6 +11,15 @@ Two sections:
   modes ("vmap" = throughput, "map" = bit-exact), and both precisions (the
   float32 lane and the paper-faithful int8 fixed-point lane).
 
+* **Megakernel lanes** — the single-launch execution modes at the serving
+  bucket: ``exec_mode="megakernel"`` (the whole-program instruction stream,
+  vmapped over the bucket → ``bucket × segments`` kernel launches) vs
+  ``exec_mode="megakernel_grid"`` (batch axis on the Pallas grid →
+  ``segments`` launches per bucket, i.e. **one** on the island-free
+  Table-I programs, with matrices DMA'd HBM→VMEM once per bucket).  Rows
+  report requests/sec plus the structural launches-per-bucket count; the
+  baseline gate holds the grid lane's throughput.
+
 * **Async tier** — the multi-tenant continuous-batching engine
   (:mod:`repro.serve.async_engine`): two models (a float32 Bonsai and an
   int8 ProtoNN) share one engine; requests arrive *staggered* through the
@@ -94,9 +103,11 @@ def _per_sample_rps(prog, X) -> float:
 
 
 def _engine_row(bench: str, X, max_batch: int, mode: str,
-                precision: str = "float32", use_pallas: bool = False) -> dict:
+                precision: str = "float32", use_pallas: bool = False,
+                **compile_kw) -> dict:
     eng = ClassicalServeEngine(bench, max_batch=max_batch, mode=mode,
-                               precision=precision, use_pallas=use_pallas)
+                               precision=precision, use_pallas=use_pallas,
+                               **compile_kw)
     for x in X[:max_batch]:                 # warm the bucket's jit entry
         eng.submit(x)
     eng.run_to_completion()
@@ -136,6 +147,35 @@ def _sync_sweep() -> list[dict]:
             rows.append(_engine_row(bench, Xte, max(_BATCHES), "vmap",
                                     precision, use_pallas=True))
             rows[-1]["mode"] = "vmap+pallas"
+    return rows
+
+
+# ------------------------------------------------------- megakernel lanes
+def _launches_per_bucket(prog, exec_mode: str, bucket: int) -> int:
+    """Kernel launches one served bucket costs: the vmap lane replays every
+    segment launch per sample; the grid lane launches each segment once
+    with the bucket on the Pallas grid."""
+    n_seg = len(prog.plan.megakernel.segments)
+    return n_seg if exec_mode == "megakernel_grid" else bucket * n_seg
+
+
+def _megakernel_sweep() -> list[dict]:
+    rows: list[dict] = []
+    bucket = max(_BATCHES)
+    for bench in _BENCHES:
+        ds = bench.split("/")[1]
+        _, _, Xte, _ = make_dataset(ds, n_train=64, n_test=_N_REQUESTS)
+        for precision in ("float32", "int8"):
+            for em in ("megakernel", "megakernel_grid"):
+                row = _engine_row(bench, Xte, bucket, "vmap", precision,
+                                  use_pallas=True, exec_mode=em)
+                prog = get_program(bench, precision=precision,
+                                   use_pallas=True, exec_mode=em)
+                row["mode"] = em
+                row["launches_per_bucket"] = _launches_per_bucket(
+                    prog, em, bucket)
+                row["islands"] = prog.plan.megakernel.n_islands
+                rows.append(row)
     return rows
 
 
@@ -180,6 +220,7 @@ async def _async_tier() -> dict:
 def collect() -> dict:
     return {
         "sync": _sync_sweep(),
+        "megakernel": _megakernel_sweep(),
         "async": asyncio.run(_async_tier()),
         "probe_ms": _probe_ms(),
     }
@@ -197,6 +238,13 @@ def run(payload: dict | None = None) -> list[str]:
             f"serve.{r['bench']},{r['mode']},{r['precision']},{r['batch']},"
             f"{r['rps']:.0f},{r['rps'] / base:.2f},{r['p50_ms']:.3f},"
             f"{r['p99_ms']:.3f},{r['occupancy']:.2f}")
+    out.append("serve.megakernel,bench,precision,exec_mode,batch,"
+               "requests_per_s,launches_per_bucket,islands")
+    for r in p.get("megakernel", []):
+        out.append(
+            f"serve.megakernel,{r['bench']},{r['precision']},{r['mode']},"
+            f"{r['batch']},{r['rps']:.0f},{r['launches_per_bucket']},"
+            f"{r['islands']}")
     a = p["async"]
     out.append("serve.async,scope,served,rps,p50_ms,p99_ms,occupancy,"
                "slo_misses")
@@ -216,12 +264,45 @@ def check_baseline(payload: dict, baseline_path: str) -> bool:
     machine-normalized p99 latency within _MAX_REGRESSION× and normalized
     throughput above 1/_MAX_REGRESSION× — plus the structural invariant
     that continuous refill keeps batch occupancy above 1 (a collapse to
-    one-request batches is a scheduling bug regardless of machine)."""
+    one-request batches is a scheduling bug regardless of machine).
+
+    The megakernel section gates two invariants of the batch-grid lane:
+    launches-per-bucket stays 1 on island-free benchmarks (structural,
+    machine-free) and the grid lane's throughput holds both within-run
+    (≥ vmap lane / slack) and against the machine-normalized baseline."""
     with open(baseline_path) as fh:
         base = json.load(fh)
     probe, bprobe = payload["probe_ms"], base["probe_ms"]
     a, b = payload["async"], base["async"]
     ok = True
+    # --- megakernel grid lane -------------------------------------------
+    rows = payload.get("megakernel", [])
+    vmap_rps = {(r["bench"], r["precision"]): r["rps"]
+                for r in rows if r["mode"] == "megakernel"}
+    base_grid = {(r["bench"], r["precision"]): r["rps"]
+                 for r in base.get("megakernel", [])
+                 if r["mode"] == "megakernel_grid"}
+    for r in rows:
+        if r["mode"] != "megakernel_grid":
+            continue
+        key = (r["bench"], r["precision"])
+        if r["islands"] == 0 and r["launches_per_bucket"] != 1:
+            print(f"serve.check,REGRESSION,mk_launches,{r['bench']},"
+                  f"{r['precision']},launches={r['launches_per_bucket']}")
+            ok = False
+        floor = vmap_rps.get(key, 0.0) / _MAX_REGRESSION
+        if r["rps"] < floor:
+            print(f"serve.check,REGRESSION,mk_grid_vs_vmap,{r['bench']},"
+                  f"{r['precision']},rps={r['rps']:.0f},floor={floor:.0f}")
+            ok = False
+        if key in base_grid:
+            bfloor = base_grid[key] * bprobe / _MAX_REGRESSION
+            if r["rps"] * probe < bfloor:
+                print(f"serve.check,REGRESSION,mk_grid_rps,{r['bench']},"
+                      f"{r['precision']},"
+                      f"measured_x_probe={r['rps'] * probe:.0f},"
+                      f"floor_x_probe={bfloor:.0f}")
+                ok = False
     # p99 in probe units: machine speed cancels; higher = worse
     meas_p99 = a["p99_ms"] / probe
     lim_p99 = b["p99_ms"] / bprobe * _MAX_REGRESSION

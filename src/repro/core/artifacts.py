@@ -65,7 +65,9 @@ __all__ = ["ARTIFACT_VERSION", "ArtifactError", "ArtifactStore",
 # Bump on any change to the payload schema, the plan/ISA semantics, or the
 # numeric templates: the version participates in both the artifact key and
 # the header check, so old artifacts simply miss instead of mis-executing.
-ARTIFACT_VERSION = 1
+# v2: megakernel ISA gained ARGMAX/REDUCE/SQL2/DOT and per-output dtypes
+# (out_dtypes) — v1 streams relinearize differently, so they must miss.
+ARTIFACT_VERSION = 2
 
 _MAGIC = b"MAFIA-ARTIFACT\n"
 
@@ -338,15 +340,25 @@ class ArtifactStore:
     from artifacts any one of them published.  ``load`` is tolerant —
     absent, corrupt or incompatible artifacts count as misses and the
     caller compiles as usual (re-publishing a good artifact over the bad
-    one); ``hits``/``misses``/``saves`` feed the serving metrics.
+    one); ``hits``/``misses``/``saves``/``evictions`` feed the serving
+    metrics.
+
+    ``max_bytes`` bounds the on-disk footprint: after every save the store
+    LRU-sweeps (by file mtime — ``load`` hits touch it, so recency tracks
+    *use*, not just publication) until the total is back under the bound.
+    The just-saved artifact is never evicted, so a single oversized program
+    still round-trips.  ``None`` (the default) keeps the store unbounded.
     """
 
-    def __init__(self, root: str | Path) -> None:
+    def __init__(self, root: str | Path,
+                 max_bytes: int | None = None) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
         self.saves = 0
+        self.evictions = 0
 
     def path(self, key: str) -> Path:
         return self.root / f"{key}.mafia"
@@ -356,14 +368,19 @@ class ArtifactStore:
 
     def load(self, key: str):
         """The program for ``key``, or None (counted as a miss)."""
+        path = self.path(key)
         try:
-            prog = load_program(self.path(key))
+            prog = load_program(path)
         except FileNotFoundError:
             self.misses += 1
             return None
         except ArtifactError:
             self.misses += 1
             return None
+        try:
+            os.utime(path)                 # LRU recency: a hit is a use
+        except OSError:
+            pass                           # raced an eviction/rewrite
         self.hits += 1
         return prog
 
@@ -371,11 +388,51 @@ class ArtifactStore:
         path = self.path(key)
         save_program(prog, path)
         self.saves += 1
+        self._sweep(keep=path)
         return path
+
+    def size_bytes(self) -> int:
+        return sum(self._stat_sizes().values())
+
+    def _stat_sizes(self) -> dict[Path, int]:
+        sizes: dict[Path, int] = {}
+        for p in self.root.glob("*.mafia"):
+            try:
+                sizes[p] = p.stat().st_size
+            except OSError:
+                continue                   # raced a concurrent eviction
+        return sizes
+
+    def _sweep(self, keep: Path | None = None) -> None:
+        """Evict least-recently-used artifacts until the store fits
+        ``max_bytes``.  ``keep`` (the artifact just saved) is exempt."""
+        if self.max_bytes is None:
+            return
+        sizes = self._stat_sizes()
+        total = sum(sizes.values())
+        if total <= self.max_bytes:
+            return
+        def mtime(p: Path) -> float:
+            try:
+                return p.stat().st_mtime
+            except OSError:
+                return float("inf")        # gone already: skip via sort end
+        for p in sorted(sizes, key=mtime):
+            if total <= self.max_bytes:
+                break
+            if keep is not None and p == keep:
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue                   # another process got there first
+            total -= sizes[p]
+            self.evictions += 1
 
     def keys(self) -> list[str]:
         return sorted(p.stem for p in self.root.glob("*.mafia"))
 
     def __repr__(self) -> str:
         return (f"ArtifactStore({str(self.root)!r}: {len(self.keys())} "
-                f"artifacts, {self.hits} hits / {self.misses} misses)")
+                f"artifacts, {self.hits} hits / {self.misses} misses, "
+                f"{self.evictions} evicted)")

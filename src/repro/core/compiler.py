@@ -70,7 +70,9 @@ class CompiledProgram:
     precision: str = "float32"
     qplan: Any | None = None     # QuantPlan on the fixed-point lanes
     plan: ExecutionPlan | None = None  # static plan every lane interprets
-    exec_mode: str = "interpret"  # "interpret" | "megakernel" (single-launch)
+    # "interpret" | "megakernel" (single-launch) | "megakernel_grid"
+    # (single-launch with the serving bucket on the Pallas grid)
+    exec_mode: str = "interpret"
     source_dfg: DFG | None = None      # the pre-rewrite graph, for reference
     rewrite_result: RewriteResult | None = None
     # how the PF assignment was obtained: "cold" (fresh search), "near"
@@ -133,10 +135,13 @@ class CompiledProgram:
         no reassociation error.
 
         ``exec_mode`` selects the step-execution strategy inside each lane
-        (``"interpret"`` or ``"megakernel"``, see
+        (``"interpret"``, ``"megakernel"`` or ``"megakernel_grid"``, see
         :func:`repro.core.executor.build_callable`); it defaults to the
         mode this program was compiled with, so a megakernel-compiled
         program serves single-launch buckets without further plumbing.
+        Under ``"megakernel_grid"`` the ``mode="vmap"`` lane stops vmapping
+        the kernel launch: each segment runs once per bucket with the batch
+        axis on the Pallas grid (one launch, matrices DMA'd once).
         """
         return BatchedProgram.build(
             self, max_batch=max_batch, mode=mode,
@@ -300,7 +305,7 @@ class MafiaCompiler:
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
             raise ValueError(f"unknown precision {precision!r}")
-        if exec_mode not in ("interpret", "megakernel"):
+        if exec_mode not in ("interpret", "megakernel", "megakernel_grid"):
             raise ValueError(f"unknown exec_mode {exec_mode!r}")
         self.backend = backend
         self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())

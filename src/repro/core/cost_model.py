@@ -100,6 +100,8 @@ _TRAIN_DIMS: dict[str, list[dict[str, int]]] = {
     "tanh": [{"n": 32}, {"n": 256}],
     "dot": [{"n": 64}, {"n": 400}, {"n": 1024}],
     "reduce_sum": [{"n": 64}, {"n": 400}],
+    "reduce_max": [{"n": 64}, {"n": 400}],
+    "reduce_min": [{"n": 64}, {"n": 400}],
     "argmax": [{"n": 8}, {"n": 64}],
     "const": [{"n": 64}, {"n": 400}],
 }

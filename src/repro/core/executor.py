@@ -89,9 +89,14 @@ def build_callable(
       :class:`~repro.kernels.megakernel.MegakernelProgram`: whole runs of
       encodable steps execute as a single ``pallas_call`` over a static
       instruction stream (one launch for a fully-encodable plan); steps
-      without an ISA encoding (reductions, argmax, ...) stay interpreted as
-      plan-ordered islands.  Bitwise identical to ``"interpret"`` at
-      float32 and lane-bitwise at int8/int16.
+      without an ISA encoding (matmul, outer, 2-D reductions, ...) stay
+      interpreted as plan-ordered islands.  Bitwise identical to
+      ``"interpret"`` at float32 and lane-bitwise at int8/int16.
+    * ``"megakernel_grid"`` — same instruction stream, but a batched lane
+      puts the bucket on the Pallas grid (``grid=(bucket,)``) instead of
+      vmapping the launch: matrices cross HBM→VMEM once per bucket and the
+      whole bucket costs one launch per segment.  Bitwise identical to the
+      vmapped ``"megakernel"`` lane; identical to it per-sample.
     """
     if plan is None:
         plan = lower(dfg, fused_clusters=fused_clusters, use_pallas=use_pallas,
@@ -104,8 +109,10 @@ def _interpret(
     mode: str = "interpret",
 ) -> Callable[..., dict[str, Any]]:
     """Thin interpreter over a static plan (per-sample or batched lane)."""
-    if mode not in ("interpret", "megakernel"):
+    if mode not in ("interpret", "megakernel", "megakernel_grid"):
         raise ValueError(f"unknown execution mode {mode!r}")
+    mk = mode in ("megakernel", "megakernel_grid")
+    grid = mode == "megakernel_grid" and batch
     quantized = plan.precision != "float32"
     if quantized:
         from repro.core import quantize as quantize_mod
@@ -114,12 +121,12 @@ def _interpret(
             fused_linear_chain,
             fused_linear_chain_q,
         )
-    if mode == "megakernel":
+    if mk:
         if plan.megakernel is None:
             raise ValueError(
                 "plan has no megakernel program — it predates the linearize "
                 "pass; re-lower the DFG (lower()/MafiaCompiler.compile())")
-        from repro.kernels.megakernel import run_segment
+        from repro.kernels.megakernel import run_segment, run_segment_grid
     allowed = set(plan.dfg.graph_inputs)
     bits = plan.bits or 8
     # output name -> env ref, resolved through the rewrite alias once here;
@@ -162,7 +169,12 @@ def _interpret(
         refs.  The batched lane vmaps the whole launch over the bucket."""
         args = [env[r] for r in seg.in_refs]
         if batch and args:
-            outs = jax.vmap(lambda *a: tuple(run_segment(seg, a)))(*args)
+            if grid:
+                # batch-grid lane: the bucket rides the Pallas grid — one
+                # launch per segment per bucket, matrices DMA'd once.
+                outs = run_segment_grid(seg, args)
+            else:
+                outs = jax.vmap(lambda *a: tuple(run_segment(seg, a)))(*args)
             for i, r in enumerate(seg.out_refs):
                 env[r] = outs[i].reshape((bdim,) + seg.out_shapes[i])
         else:
@@ -192,7 +204,7 @@ def _interpret(
             env = {k: jnp.asarray(v) for k, v in inputs.items()}
         bdim = next((v.shape[0] for v in env.values()), None) if batch else None
 
-        if mode == "megakernel":
+        if mk:
             for kind, payload in plan.megakernel.items:
                 if kind == "seg":
                     exec_segment(payload, env, bdim)

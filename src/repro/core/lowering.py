@@ -1320,6 +1320,7 @@ def _pass_plan(st: _Lowering) -> ExecutionPlan:
 
 # pass: linearize ---------------------------------------------------------
 _ISA_MATVEC = {"gemv": "MATVEC", "spmv": "SPMV"}
+_ISA_REDUCE = {"reduce_sum": "sum", "reduce_max": "max", "reduce_min": "min"}
 _FLOAT_VEC_STAGES = ("add_vec", "sub_vec", "hadamard_vec")
 _FLOAT_ARR_STAGES = ("add_arr", "sub_arr", "hadamard_arr")
 
@@ -1327,11 +1328,13 @@ _FLOAT_ARR_STAGES = ("add_arr", "sub_arr", "hadamard_arr")
 def _mk_schedule_mats(body: list) -> list:
     """Double-buffered DMA schedule: ``LOAD_MAT[0]`` opens the segment and
     ``LOAD_MAT[k]`` issues immediately before ``MATVEC[k-1]`` — at most two
-    HBM→VMEM copies in flight, and copy ``k`` overlaps matvec ``k-1``."""
+    HBM→VMEM copies in flight, and copy ``k`` overlaps matvec ``k-1``.
+    SQL2 rides the same schedule: its ``operand[0]`` is the matrix index of
+    the ProtoNN points tile, waited exactly like a MATVEC weight tile."""
     from repro.kernels.megakernel import Instr
 
     mv = [(i, ins) for i, ins in enumerate(body)
-          if ins.op in ("MATVEC", "SPMV")]
+          if ins.op in ("MATVEC", "SPMV", "SQL2")]
     loads_at: dict[int, list] = {}
     for k, (pos, ins) in enumerate(mv):
         at = 0 if k == 0 else mv[k - 1][0]
@@ -1426,6 +1429,10 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
         for r in rs:
             consumers.setdefault(r, set()).add(i)
     out_refs = {_resolve(plan.alias, o) for o in plan.outputs}
+    # refs holding integer *values* (ARGMAX indices): any step consuming one
+    # must island — the float32 carrier (float lane) and the exponent-tagged
+    # int32 carrier (quantized lane) would both silently mistype them.
+    int_refs: set[str] = set()
 
     class _Seg:
         """One in-flight segment: symbolic instructions (dst/src are value
@@ -1440,6 +1447,7 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
             self.order: list[str] = []       # definition order
             self.steps: set[int] = set()
             self.members: list[str] = []
+            self.dtypes: dict[str, str] = {}  # per-ref STORE dtype overrides
 
         def emit(self, op, dst=None, src=(), operand=None, nid="") -> None:
             self.body.append(Instr(op, dst=dst, src=tuple(src),
@@ -1560,6 +1568,74 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
                 b.emit(kind, dst=nid, src=(xr,), operand=(mi, bci), nid=nid)
             b.define(nid, width(nid))
             return True
+        if op == "argmax":
+            # ARGMAX runs directly on the carrier: dequantize is a strictly
+            # monotone pow2 scale, so the winning index (ties included)
+            # matches argmax over the dequantized floats bitwise.  The index
+            # is an integer *value* — dtype int32 on STORE, and the ref is
+            # poisoned for further in-segment consumption (int_refs).
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if nq.in_exps[0] is None or nq.out_exp is not None:
+                    return False
+            xr = b.use(step.inputs[0])
+            b.emit("ARGMAX", dst=nid, src=(xr,), nid=nid)
+            b.define(nid, width(nid))
+            b.dtypes[nid] = "int32"
+            int_refs.add(nid)
+            return True
+        if op in _ISA_REDUCE:
+            # only effectively-1-D inputs: the kernel reduces the flattened
+            # slot, the per-node op reduces axis -1 — identical iff the
+            # input has a single non-unit leading structure.
+            sh = shape_of(step.inputs[0])
+            if not sh or int(np.prod(sh, dtype=np.int64)) != int(sh[-1]):
+                return False
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if nq.out_exp is None or nq.in_exps[0] is None:
+                    return False
+                e_in, e_out = nq.in_exps[0], nq.out_exp
+            else:
+                e_in = e_out = None
+            xr = b.use(step.inputs[0])
+            b.emit("REDUCE", dst=nid, src=(xr,),
+                   operand=(_ISA_REDUCE[op], e_in, e_out), nid=nid)
+            b.define(nid, width(nid))
+            return True
+        if op == "sq_l2":
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if nq.out_exp is None or nq.in_exps[0] is None:
+                    return False
+                e_in, e_out = nq.in_exps[0], nq.out_exp
+            else:
+                e_in = e_out = None
+            xr = b.use(step.inputs[0])
+            # the points matrix stays float32 on every lane: sq_l2 has no
+            # integer template, so the per-node quantized path dequantizes
+            # the stream and subtracts the *float* points (dq fallback) —
+            # the pooled tile must match that bit for bit.
+            mi = b.mat(np.asarray(node.params["points"], np.float32))
+            b.emit("SQL2", dst=nid, src=(xr,), operand=(mi, e_in, e_out),
+                   nid=nid)
+            b.define(nid, width(nid))
+            return True
+        if op == "dot":
+            if qz:
+                nq = st.qplan.nodes[nid]
+                if (nq.out_exp is None or nq.in_exps[0] is None
+                        or nq.in_exps[1] is None):
+                    return False
+                e_a, e_b, e_out = nq.in_exps[0], nq.in_exps[1], nq.out_exp
+            else:
+                e_a = e_b = e_out = None
+            ra = b.use(step.inputs[0])
+            rb = b.use(step.inputs[1])
+            b.emit("DOT", dst=nid, src=(ra, rb),
+                   operand=(e_a, e_b, e_out), nid=nid)
+            b.define(nid, width(nid))
+            return True
         if op in STAGEABLE_OPS:
             extras: list[str] = []
             vecs: list[Any] = []
@@ -1604,6 +1680,10 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
             b.emit("STORE", src=(r,), operand=oi, nid=r)
         body = _mk_schedule_mats(b.body)
         instrs, slot_widths = _mk_alloc_slots(body, b.widths)
+        from repro.core.quantize import int_dtype
+
+        default_dt = (np.dtype(int_dtype(st.bits or 8)).name if qz
+                      else "float32")
         items.append(("seg", MegakernelSegment(
             instrs=tuple(instrs),
             slot_widths=tuple(slot_widths),
@@ -1616,11 +1696,18 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
             quantized=qz,
             bits=st.bits or 8,
             members=tuple(b.members),
+            out_dtypes=tuple(b.dtypes.get(r, default_dt) for r in stores),
         )))
         b = _Seg()
 
     for idx, step in enumerate(plan.steps):
-        if isinstance(step, ChainStep):
+        reads = (({step.stream, *step.extras}) if isinstance(step, ChainStep)
+                 else set(step.inputs))
+        if reads & int_refs:
+            # consumes an integer-valued ref (ARGMAX index): island it —
+            # the carrier has no integer lane for downstream arithmetic.
+            ok = False
+        elif isinstance(step, ChainStep):
             enc_chain(b, step)
             ok = True
         else:

@@ -453,6 +453,42 @@ def _reduce_sum_spec() -> OpSpec:
 _reduce_sum_spec()
 
 
+def _reduce_minmax_spec(name: str, fname: str) -> OpSpec:
+    """reduce_max / reduce_min — same shape/cost contract as reduce_sum but a
+    comparator tree instead of an adder tree (no DSPs, LUT compare lanes)."""
+
+    def out_shape(dfg, node):
+        s = dfg.in_shapes(node.id)[0]
+        return s[:-1] if len(s) > 1 else (1,)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        x = inputs[0]
+        r = getattr(jnp, fname)(x, axis=-1)
+        return r[None] if r.ndim == 0 else r
+
+    return register(
+        OpSpec(
+            name=name,
+            linear_time=True,
+            has_reduction=True,
+            dsp_per_pe=0,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: float(d["n"]),
+            mem_bytes=lambda d: d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + 2 * _log2c(pf) + _FILL,
+            lut=lambda d, pf: 90 + _LUT_CMP * pf,
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_reduce_minmax_spec("reduce_max", "max")
+_reduce_minmax_spec("reduce_min", "min")
+
+
 def _argmax_spec() -> OpSpec:
     def jax_fn(inputs, params, dims):
         jnp = _jnp()

@@ -27,8 +27,24 @@ compile time by ``_pass_linearize``):
     ``REQUANTIZE``  int lanes: requantizing shift of the int32 accumulator
                     after a MATVEC/SPMV (per-tensor shift, or per-row shifts
                     for per-channel scales)
-    ``STORE``       ``outputs[oi] ← reg[src0]`` (saturating to the narrow
-                    activation dtype on the int lanes)
+    ``ARGMAX``      ``reg[dst] ← argmax(reg[src0])`` — the index as a width-1
+                    value.  On the int lanes this runs directly on the int32
+                    carrier: the dequantize scale is a positive power of two
+                    (strictly monotone), so carrier argmax is bitwise the
+                    dequantized argmax, ties included
+    ``REDUCE``      ``reg[dst] ← sum/max/min(reg[src0])`` (width 1).  Int
+                    lanes mirror the per-node dequantize → float reduce →
+                    requantize fallback exactly (operand carries the
+                    calibrated exponents)
+    ``SQL2``        squared-L2 distances of ``reg[src0]`` to each column of a
+                    matrix-pool operand (ProtoNN's RBF distance kernel) —
+                    matvec-like: the points matrix rides the double-buffered
+                    DMA schedule; int lanes dequantize → float → requantize
+    ``DOT``         ``reg[dst] ← reg[src0] · reg[src1]`` (width 1); int lanes
+                    dequantize both operands → float dot → requantize
+    ``STORE``       ``outputs[oi] ← reg[src0]`` (cast to that output's dtype:
+                    the narrow activation dtype on the int lanes, int32 for
+                    integer-valued outputs such as ARGMAX indices)
     ==============  ==========================================================
 
 The register file is a set of VMEM scratch rows, one ``(1, n)`` buffer per
@@ -49,6 +65,15 @@ per-node integer eval, like the fused chains.
 
 The pure-jnp twin (:func:`repro.kernels.ref.run_segment_ref`) executes the
 same stream without Pallas and is the parity oracle for interpret mode.
+
+**Batch-grid lane** (:func:`run_segment_grid`): the serving path used to
+``jax.vmap`` the whole launch over the bucket — one *logical* kernel program
+per sample, each with its own HBM→VMEM matrix DMAs.  The grid lane instead
+puts the batch axis into the Pallas grid: ``grid=(bucket,)``, per-sample
+vector rows indexed by ``pl.program_id(0)`` through the BlockSpec index
+maps, and every matrix DMA'd **once** on grid step 0 (TPU grid steps are
+sequential, so the VMEM tile persists across samples) — one launch per
+bucket per segment, which is exactly one launch for an island-free program.
 """
 
 from __future__ import annotations
@@ -66,10 +91,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import apply_stage, apply_stage_q
 
-__all__ = ["Instr", "MegakernelSegment", "MegakernelProgram", "run_segment"]
+__all__ = ["Instr", "MegakernelSegment", "MegakernelProgram", "run_segment",
+           "run_segment_grid"]
 
 ISA_OPS = ("LOAD_VEC", "LOAD_MAT", "MATVEC", "SPMV", "ELEMENTWISE",
-           "REQUANTIZE", "STORE")
+           "REQUANTIZE", "ARGMAX", "REDUCE", "SQL2", "DOT", "STORE")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +116,12 @@ class Instr:
       ``src[1]``); q-stage ``vi`` operand indices address ``vec_cis``
       positionally, a float ``*_vec`` stage's operand is ``vec_cis[0]``
     * ``REQUANTIZE`` — ``("tensor", shift)`` or ``("rows", shifts_ci)``
+    * ``ARGMAX`` — None (the int32 carrier / float32 slot holds the index)
+    * ``REDUCE`` — ``(kind, e_in, e_out)`` with ``kind`` in ``sum/max/min``;
+      exponents are None on the float lane (no dequantize/requantize)
+    * ``SQL2`` — ``(mi, e_in, e_out)``: matrix index of the (d, m) points
+      operand plus the int-lane exponents (None on the float lane)
+    * ``DOT`` — ``(e_a, e_b, e_out)`` (all None on the float lane)
     * ``STORE`` — ``oi`` (output index)
     """
 
@@ -115,6 +147,10 @@ class MegakernelSegment:
     quantized: bool = False
     bits: int = 8
     members: tuple[str, ...] = ()         # DFG nodes realized by this segment
+    # per-output dtype names ("float32"/"int8"/.../"int32"): integer-valued
+    # outputs (ARGMAX indices) stay int32 while quantized activations narrow.
+    # Empty = legacy uniform dtype (activation dtype / float32).
+    out_dtypes: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +191,7 @@ class MegakernelProgram:
             seg = payload
             h.update(repr(("seg", seg.slot_widths, seg.in_refs, seg.out_refs,
                            seg.out_widths, seg.out_shapes, seg.quantized,
-                           seg.bits, seg.members)).encode())
+                           seg.bits, seg.members, seg.out_dtypes)).encode())
             for ins in seg.instrs:
                 h.update(repr((ins.op, ins.dst, ins.src, ins.operand,
                                ins.nid)).encode())
@@ -176,8 +212,23 @@ class MegakernelProgram:
 
 _VEC_STAGES = ("add_vec", "sub_vec", "hadamard_vec")
 
+_REDUCE_F = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}
 
-def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
+
+def _seg_out_dtypes(seg: MegakernelSegment) -> list:
+    """Effective per-output dtypes: the segment's ``out_dtypes`` when set,
+    else the legacy uniform dtype (narrow activation dtype / float32)."""
+    if getattr(seg, "out_dtypes", ()):
+        return [jnp.dtype(d) for d in seg.out_dtypes]
+    if seg.quantized:
+        from repro.core.quantize import int_dtype
+
+        return [jnp.dtype(int_dtype(seg.bits))] * len(seg.out_refs)
+    return [jnp.dtype(jnp.float32)] * len(seg.out_refs)
+
+
+def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False,
+                    grid: bool = False):
     """On-core interpreter: the instruction stream unrolls into straight-line
     code at trace time (every operand is static), exactly like MAFIA's
     generated pipeline — there is no runtime dispatch left to do.
@@ -186,7 +237,16 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
     hardware-motivated data movement, not arithmetic — on the CPU emulation
     the "DMA" lowers to real array copies that only add latency.  The
     emulation reads matrix operands in place instead; every arithmetic op
-    is identical, so parity with the DMA path is bitwise."""
+    is identical, so parity with the DMA path is bitwise.
+
+    ``grid`` (batch-grid lane): the launch carries ``grid=(bucket,)`` and
+    this body runs once per sample.  Matrix DMAs are predicated on
+    ``pl.program_id(0) == 0`` — grid steps execute sequentially on TPU, so
+    the VMEM tiles loaded on step 0 serve every later sample: one HBM→VMEM
+    copy per matrix per *bucket* instead of per sample."""
+    from repro.core.quantize import (dequantize, quantize_core,
+                                     requantize_core, requantize_rows)
+
     n_in, n_const, n_mat = len(seg.in_refs), len(seg.consts), len(seg.matrices)
     n_out, n_slot = len(seg.out_refs), len(seg.slot_widths)
     ins = refs[:n_in]
@@ -200,6 +260,23 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
     carrier = jnp.int32 if seg.quantized else jnp.float32
     copies: dict[int, Any] = {}          # in-flight DMAs (trace-time only)
 
+    def dma(fn):
+        """Issue one DMA start/wait — predicated to grid step 0 on the
+        batch-grid lane (the tile persists across sequential grid steps)."""
+        if grid:
+            pl.when(pl.program_id(0) == 0)(fn)
+        else:
+            fn()
+
+    def dq(x, e):
+        """Dequantize-or-passthrough, exactly the per-node dq fallback."""
+        return x if e is None else dequantize(x, e)
+
+    def q(x, e):
+        """Quantize-or-passthrough on the int32 carrier (value-identical to
+        the per-node ``quantize_jnp`` — STORE narrows on exit)."""
+        return x if e is None else quantize_core(x, e, seg.bits)
+
     for instr in seg.instrs:
         op = instr.op
         if op == "LOAD_VEC":
@@ -211,12 +288,12 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
                 continue
             mi = instr.operand
             cp = pltpu.make_async_copy(mats[mi], mbufs[mi], sems[mi])
-            cp.start()
+            dma(cp.start)
             copies[mi] = cp
         elif op in ("MATVEC", "SPMV"):
             mi, bias_ci = instr.operand
             if not skip_dma:
-                copies.pop(mi).wait()
+                dma(copies.pop(mi).wait)
             tile = mats[mi] if skip_dma else mbufs[mi]
             # exact shapes end to end: (m, n) @ (n,) is the same XLA dot the
             # per-node template issues, hence bitwise at float32.
@@ -225,8 +302,6 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
                 acc = jnp.add(acc, crefs[bias_ci][0, :])
             slots[instr.dst][...] = acc.reshape(1, -1)
         elif op == "REQUANTIZE":
-            from repro.core.quantize import requantize_core, requantize_rows
-
             kind, sh = instr.operand
             x = slots[instr.src[0]][...]
             if kind == "rows":           # per-channel: one shift per row
@@ -234,6 +309,32 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
             else:
                 y = requantize_core(x, sh, seg.bits)
             slots[instr.dst][...] = y.astype(carrier)
+        elif op == "ARGMAX":
+            # directly on the carrier: the dequantize scale is a positive
+            # power of two (strictly monotone), so the index — ties included
+            # — matches argmax over the dequantized floats bitwise.
+            x = slots[instr.src[0]][0, :]
+            slots[instr.dst][...] = jnp.argmax(x).reshape(1, 1).astype(carrier)
+        elif op == "REDUCE":
+            kind, e_in, e_out = instr.operand
+            x = dq(slots[instr.src[0]][0, :], e_in)
+            r = _REDUCE_F[kind](x, axis=-1)
+            slots[instr.dst][...] = q(r, e_out).reshape(1, 1).astype(carrier)
+        elif op == "SQL2":
+            mi, e_in, e_out = instr.operand
+            if not skip_dma:
+                dma(copies.pop(mi).wait)
+            pts = (mats[mi] if skip_dma else mbufs[mi])[...]
+            x = dq(slots[instr.src[0]][0, :], e_in)
+            diff = pts - x[:, None]
+            acc = jnp.sum(diff * diff, axis=0)
+            slots[instr.dst][...] = q(acc, e_out).reshape(1, -1).astype(carrier)
+        elif op == "DOT":
+            e_a, e_b, e_out = instr.operand
+            a = dq(slots[instr.src[0]][0, :], e_a)
+            b = dq(slots[instr.src[1]][0, :], e_b)
+            r = jnp.dot(a, b)
+            slots[instr.dst][...] = q(r, e_out).reshape(1, 1).astype(carrier)
         elif op == "ELEMENTWISE":
             stage, vec_cis = instr.operand
             x = slots[instr.src[0]][...]
@@ -253,7 +354,18 @@ def _segment_kernel(*refs, seg: MegakernelSegment, skip_dma: bool = False):
             raise ValueError(f"unknown megakernel op {op!r}")
 
 
-_launch_cache: dict[tuple[int, bool], Any] = {}
+_launch_cache: dict[tuple[int, bool, int | None], Any] = {}
+
+
+def _launch_pools(seg: MegakernelSegment):
+    """Host-side const/matrix pools.  They stay numpy: the launch builders
+    may first run inside an outer trace (vmap/jit of the whole program), and
+    any jnp op here would bake that trace's tracers into the cached
+    closure."""
+    np_carrier = np.int32 if seg.quantized else np.float32
+    crows = [np.asarray(c, np_carrier).reshape(1, -1) for c in seg.consts]
+    mats = [np.asarray(m) for m in seg.matrices]
+    return crows, mats
 
 
 def _build_launch(seg: MegakernelSegment, interpret: bool):
@@ -265,18 +377,8 @@ def _build_launch(seg: MegakernelSegment, interpret: bool):
     eager call would re-trace the whole ``pallas_call``.  In interpret mode
     the DMA emulation buffers are dropped entirely (see ``skip_dma``)."""
     carrier = jnp.int32 if seg.quantized else jnp.float32
-    if seg.quantized:
-        from repro.core.quantize import int_dtype
-
-        out_dtype = jnp.dtype(int_dtype(seg.bits))
-    else:
-        out_dtype = jnp.float32
-    # const/matrix pools stay host-side numpy: _build_launch may first run
-    # inside an outer trace (vmap/jit of the whole program), and any jnp op
-    # here would bake that trace's tracers into the cached closure.
-    np_carrier = np.int32 if seg.quantized else np.float32
-    crows = [np.asarray(c, np_carrier).reshape(1, -1) for c in seg.consts]
-    mats = [np.asarray(m) for m in seg.matrices]
+    out_dts = _seg_out_dtypes(seg)
+    crows, mats = _launch_pools(seg)
     kernel = functools.partial(_segment_kernel, seg=seg, skip_dma=interpret)
     scratch = [pltpu.VMEM((1, w), carrier) for w in seg.slot_widths]
     if not interpret:
@@ -289,8 +391,8 @@ def _build_launch(seg: MegakernelSegment, interpret: bool):
              for _ in range(len(seg.in_refs) + len(crows))]
             + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY) for _ in mats]
         ),
-        out_shape=[jax.ShapeDtypeStruct((1, w), out_dtype)
-                   for w in seg.out_widths],
+        out_shape=[jax.ShapeDtypeStruct((1, w), dt)
+                   for w, dt in zip(seg.out_widths, out_dts)],
         scratch_shapes=scratch,
         interpret=interpret,
     )
@@ -304,16 +406,73 @@ def _build_launch(seg: MegakernelSegment, interpret: bool):
     return jax.jit(launch)
 
 
-def _cached_launch(seg: MegakernelSegment, interpret: bool):
-    key = (id(seg), interpret)
+def _build_launch_grid(seg: MegakernelSegment, interpret: bool, nb: int):
+    """Build the batch-grid launch: ``grid=(nb,)``, one kernel invocation
+    per sample, matrices DMA'd into VMEM once on grid step 0 and shared by
+    every later step (grid steps are sequential on the same core).  This is
+    the one-launch-per-bucket lane: the whole bucket costs a single
+    ``pallas_call`` per segment instead of ``nb`` vmapped launches."""
+    carrier = jnp.int32 if seg.quantized else jnp.float32
+    out_dts = _seg_out_dtypes(seg)
+    crows, mats = _launch_pools(seg)
+    kernel = functools.partial(_segment_kernel, seg=seg, skip_dma=interpret,
+                               grid=True)
+    scratch = [pltpu.VMEM((1, w), carrier) for w in seg.slot_widths]
+    if not interpret:
+        scratch += [pltpu.VMEM(m.shape, m.dtype) for m in mats]
+        scratch += [pltpu.SemaphoreType.DMA for _ in mats]
+    # every in_ref is materialized by exactly one LOAD_VEC ("in", ii), so the
+    # slot it fills gives the input's (flattened) width.
+    in_w = {ins.operand[1]: seg.slot_widths[ins.dst]
+            for ins in seg.instrs
+            if ins.op == "LOAD_VEC" and ins.operand[0] == "in"}
+    call = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=(
+            # per-sample input rows: grid step i sees row i.
+            [pl.BlockSpec((1, in_w[ii]), lambda i: (i, 0),
+                          memory_space=pltpu.TPUMemorySpace.VMEM)
+             for ii in range(len(seg.in_refs))]
+            # const rows are shared: every step maps to row 0.
+            + [pl.BlockSpec((1, c.shape[1]), lambda i: (0, 0),
+                            memory_space=pltpu.TPUMemorySpace.VMEM)
+               for c in crows]
+            # matrices stay whole in ANY; the kernel DMAs them on step 0.
+            + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+               for _ in mats]
+        ),
+        out_shape=[jax.ShapeDtypeStruct((nb, w), dt)
+                   for w, dt in zip(seg.out_widths, out_dts)],
+        out_specs=[pl.BlockSpec((1, w), lambda i: (i, 0),
+                                memory_space=pltpu.TPUMemorySpace.VMEM)
+                   for w in seg.out_widths],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+    def launch(*xs):
+        outs = call(*xs, *crows, *mats)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        return list(outs)
+
+    return jax.jit(launch)
+
+
+def _cached_launch(seg: MegakernelSegment, interpret: bool,
+                   nb: int | None = None):
+    key = (id(seg), interpret, nb)
     fn = _launch_cache.get(key)
     if fn is None:
-        fn = _build_launch(seg, interpret)
+        fn = (_build_launch(seg, interpret) if nb is None
+              else _build_launch_grid(seg, interpret, nb))
         _launch_cache[key] = fn
         sid = id(seg)
         weakref.finalize(
             seg,
-            lambda: [_launch_cache.pop((sid, b), None) for b in (False, True)],
+            lambda: [_launch_cache.pop(k, None)
+                     for k in list(_launch_cache) if k[0] == sid],
         )
     return fn
 
@@ -337,3 +496,26 @@ def run_segment(
         interpret = jax.default_backend() == "cpu"
     xs = [jnp.asarray(x).reshape(1, -1) for x in inputs]
     return _cached_launch(seg, interpret)(*xs)
+
+
+def run_segment_grid(
+    seg: MegakernelSegment,
+    inputs: Sequence[jax.Array],
+    *,
+    interpret: bool | None = None,
+) -> list[jax.Array]:
+    """Execute one segment for a whole bucket in a single ``pallas_call``.
+
+    ``inputs`` are batched env values of ``seg.in_refs`` (leading batch
+    axis, any trailing shape — flattened to ``(nb, width)`` here).  The
+    batch axis rides the Pallas grid: ``grid=(nb,)`` with per-sample rows
+    selected by ``program_id``, and matrix DMAs issued only on grid step 0
+    so every matrix crosses HBM→VMEM once per bucket.  Returns one
+    ``(nb, width)`` value per ``seg.out_refs``; bitwise identical to
+    ``jax.vmap(run_segment)`` on every lane.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nb = int(jnp.asarray(inputs[0]).shape[0])
+    xs = [jnp.asarray(x).reshape(nb, -1) for x in inputs]
+    return _cached_launch(seg, interpret, nb)(*xs)

@@ -179,11 +179,19 @@ def run_segment_ref(seg, inputs: Sequence[jax.Array]) -> list[jax.Array]:
     same instruction stream executed without Pallas (register file as plain
     arrays, DMA start/wait as no-ops).  ``seg`` is duck-typed (a
     ``MegakernelSegment``) so this module stays import-cycle free."""
-    from repro.core.quantize import (int_dtype, requantize_core,
-                                     requantize_rows)
+    from repro.core.quantize import (dequantize, quantize_core,
+                                     requantize_core, requantize_rows)
+    from repro.kernels.megakernel import _REDUCE_F, _seg_out_dtypes
 
     carrier = jnp.int32 if seg.quantized else jnp.float32
-    out_dtype = jnp.dtype(int_dtype(seg.bits)) if seg.quantized else jnp.float32
+    out_dts = _seg_out_dtypes(seg)
+
+    def dq(x, e):
+        return x if e is None else dequantize(x, e)
+
+    def q(x, e):
+        return x if e is None else quantize_core(x, e, seg.bits)
+
     ins = [jnp.asarray(x).reshape(1, -1) for x in inputs]
     crows = [jnp.asarray(c, carrier).reshape(1, -1) for c in seg.consts]
     slots: dict[int, jax.Array] = {}
@@ -211,6 +219,27 @@ def run_segment_ref(seg, inputs: Sequence[jax.Array]) -> list[jax.Array]:
             else:
                 y = requantize_core(x, sh, seg.bits)
             slots[instr.dst] = y.astype(carrier)
+        elif op == "ARGMAX":
+            x = slots[instr.src[0]][0, :]
+            slots[instr.dst] = jnp.argmax(x).reshape(1, 1).astype(carrier)
+        elif op == "REDUCE":
+            kind, e_in, e_out = instr.operand
+            x = dq(slots[instr.src[0]][0, :], e_in)
+            r = _REDUCE_F[kind](x, axis=-1)
+            slots[instr.dst] = q(r, e_out).reshape(1, 1).astype(carrier)
+        elif op == "SQL2":
+            mi, e_in, e_out = instr.operand
+            pts = jnp.asarray(seg.matrices[mi])
+            x = dq(slots[instr.src[0]][0, :], e_in)
+            diff = pts - x[:, None]
+            acc = jnp.sum(diff * diff, axis=0)
+            slots[instr.dst] = q(acc, e_out).reshape(1, -1).astype(carrier)
+        elif op == "DOT":
+            e_a, e_b, e_out = instr.operand
+            a = dq(slots[instr.src[0]][0, :], e_a)
+            b = dq(slots[instr.src[1]][0, :], e_b)
+            r = jnp.dot(a, b)
+            slots[instr.dst] = q(r, e_out).reshape(1, 1).astype(carrier)
         elif op == "ELEMENTWISE":
             stage, vec_cis = instr.operand
             x = slots[instr.src[0]]
@@ -223,7 +252,7 @@ def run_segment_ref(seg, inputs: Sequence[jax.Array]) -> list[jax.Array]:
                     stage = (stage[0], crows[vec_cis[0]])
                 slots[instr.dst] = apply_stage(x, stage, extras)
         elif op == "STORE":
-            outs[instr.operand] = slots[instr.src[0]].astype(out_dtype)
+            outs[instr.operand] = slots[instr.src[0]].astype(out_dts[instr.operand])
         else:
             raise ValueError(f"unknown megakernel op {op!r}")
     return [outs[i][0] for i in range(len(seg.out_refs))]

@@ -11,12 +11,20 @@ decode_32k shape cell measures.
 
 All device work happens in two jit'd functions (`_prefill`, `_decode`);
 the Python layer only does slot bookkeeping.
+
+The engine reports through the shared :class:`repro.serve.metrics
+.ServeMetrics` (same surface as the classical tiers): one ``record_batch``
+per batched decode (active slots = occupancy, wall time around the forward
+= device seconds, so ``served`` counts generated tokens — the decode tier's
+unit of work) and one ``record_request`` per retirement (submit→finish
+latency feeds p50/p99).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -29,6 +37,7 @@ from repro.models.transformer import (
     forward_full,
     init_cache,
 )
+from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduling import SlotPool, bucket_for
 
 __all__ = ["ServeEngine", "Request"]
@@ -43,6 +52,7 @@ class Request:
     max_new_tokens: int
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None
+    t_submit: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -102,6 +112,7 @@ class ServeEngine:
         self._queue: list[Request] = []
         self._finished: list[Request] = []
         self._exact_prefill = cfg.family in ("ssm", "hybrid")
+        self.metrics = ServeMetrics()
 
     # ------------------------------------------------------------- jit fns
     @functools.cached_property
@@ -142,7 +153,8 @@ class ServeEngine:
                 f"prompt length {len(prompt)} >= engine max_len {self.max_len}")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        req = Request(self._next_rid, prompt, max_new_tokens)
+        req = Request(self._next_rid, prompt, max_new_tokens,
+                      t_submit=time.monotonic())
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
@@ -194,6 +206,14 @@ class ServeEngine:
         req.tokens.append(first)
         self._slots[slot] = req
 
+    def _retire(self, slot: int, req: Request) -> None:
+        now = time.monotonic()
+        self.slots.release(slot)
+        self._finished.append(req)
+        del self._slots[slot]
+        self.metrics.record_request(now - req.t_submit,
+                                    t_submit=req.t_submit, t_done=now)
+
     # ----------------------------------------------------------------- step
     def step(self) -> dict[int, int]:
         """Admit queued requests into free slots, then decode one token for
@@ -208,18 +228,21 @@ class ServeEngine:
         # free and run_to_completion spins to max_steps.
         for slot, req in list(self._slots.items()):
             if req.done:
-                self.slots.release(slot)
-                self._finished.append(req)
-                del self._slots[slot]
+                self._retire(slot, req)
         if not self.slots.any_active:
             return {}
 
+        n_active = len(self._slots)
+        t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self.last_token), self.caches,
             jnp.asarray(self.pos),
         )
-        out: dict[int, int] = {}
         lg = np.asarray(logits, np.float32)      # _sample copies its own row
+        # np.asarray blocked on the device result, so the window around the
+        # forward is honest device time for this decode batch.
+        self.metrics.record_batch(n_active, time.perf_counter() - t0)
+        out: dict[int, int] = {}
         for slot, req in list(self._slots.items()):
             tok = self._sample(lg[slot])         # masks padding + greedy/categorical
             req.tokens.append(tok)
@@ -227,9 +250,7 @@ class ServeEngine:
             self.last_token[slot] = tok
             self.pos[slot] += 1
             if req.done or self.pos[slot] >= self.max_len - 1:
-                self.slots.release(slot)
-                self._finished.append(req)
-                del self._slots[slot]
+                self._retire(slot, req)
         return out
 
     # ------------------------------------------------------------ driver

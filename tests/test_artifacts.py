@@ -48,7 +48,8 @@ def _probe(dfg):
 
 
 @pytest.mark.parametrize("precision", ["float32", "int8", "int16"])
-@pytest.mark.parametrize("exec_mode", ["interpret", "megakernel"])
+@pytest.mark.parametrize("exec_mode",
+                         ["interpret", "megakernel", "megakernel_grid"])
 def test_roundtrip_bitwise_and_skips_best_pf(tmp_path, precision, exec_mode):
     """compile → save → load on a *fresh* compiler: bitwise-identical
     outputs, pf_source='artifact', and the loaded program reuses the saved
@@ -150,6 +151,88 @@ def test_payload_is_pure_data(tmp_path):
     state = program_state(MafiaCompiler(use_pallas=True).compile(_dfg()))
     pickle.dumps(state)                    # would raise on any closure
     assert "fn" not in state
+
+
+def test_store_gc_evicts_lru_under_size_bound(tmp_path):
+    """With ``max_bytes`` set, saves sweep least-recently-*used* artifacts:
+    a load refreshes recency, the just-saved file is never evicted, and the
+    footprint lands back under the bound."""
+    prog = MafiaCompiler(use_pallas=True).compile(_dfg())
+    probe = ArtifactStore(tmp_path / "probe")
+    one = probe.save("probe", prog).stat().st_size
+    # room for two artifacts, not three
+    store = ArtifactStore(tmp_path / "store", max_bytes=int(2.5 * one))
+    store.save("a", prog)
+    store.save("b", prog)
+    assert store.evictions == 0 and set(store.keys()) == {"a", "b"}
+    # touch "a" so "b" is the LRU victim when "c" arrives
+    import time
+
+    time.sleep(0.05)
+    assert store.load("a") is not None
+    time.sleep(0.05)
+    store.save("c", prog)
+    assert store.evictions == 1
+    assert set(store.keys()) == {"a", "c"}
+    assert store.size_bytes() <= store.max_bytes
+    # an oversized single artifact still round-trips (keep=just-saved)
+    tiny = ArtifactStore(tmp_path / "tiny", max_bytes=1)
+    tiny.save("only", prog)
+    assert tiny.keys() == ["only"]
+    assert tiny.load("only") is not None
+
+
+def test_store_unbounded_by_default(tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    assert store.max_bytes is None
+    prog = MafiaCompiler().compile(_dfg())
+    for k in ("a", "b", "c"):
+        store.save(k, prog)
+    assert store.evictions == 0 and len(store.keys()) == 3
+
+
+@pytest.mark.slow
+def test_cross_process_store_coherence(tmp_path):
+    """Two writer processes racing the same key publish atomically while a
+    reader hammers ``load_program``: the reader may miss (file not yet
+    there) but must never observe a torn/partial file (ArtifactError), and
+    both writers' artifacts load cleanly afterwards."""
+    store = ArtifactStore(tmp_path / "store")
+    prog = MafiaCompiler(use_pallas=True).compile(_dfg())
+    save_program(prog, tmp_path / "seed.mafia")    # bytes the writers copy
+    writer = f"""
+import pathlib, sys
+from repro.core.artifacts import _write_atomic
+blob = pathlib.Path({str(tmp_path / 'seed.mafia')!r}).read_bytes()
+target = pathlib.Path({str(store.path('race'))!r})
+for _ in range(200):
+    _write_atomic(target, blob)
+print("WRITER-OK")
+"""
+    reader = f"""
+from repro.core.artifacts import ArtifactError, load_program
+hits = 0
+for _ in range(400):
+    try:
+        load_program({str(store.path('race'))!r})
+        hits += 1
+    except FileNotFoundError:
+        continue            # not yet published: a miss, never torn
+    except ArtifactError as exc:
+        print("TORN:", exc)
+        raise SystemExit(2)
+print("READER-OK", hits)
+"""
+    procs = [subprocess.Popen([sys.executable, "-c", src],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True)
+             for src in (writer, writer, reader)]
+    outs = [p.communicate(timeout=300) for p in procs]
+    for p, (out, err) in zip(procs, outs):
+        assert p.returncode == 0, (out, err)
+    assert "WRITER-OK" in outs[0][0] and "WRITER-OK" in outs[1][0]
+    assert "READER-OK" in outs[2][0]
+    assert store.load("race") is not None   # final file is a good artifact
 
 
 @pytest.mark.slow

@@ -116,6 +116,27 @@ def test_interleaved_batch_isolation():
         assert r.tokens == ref.tokens, f"request {r.rid} affected by batchmates"
 
 
+def test_token_engine_reports_shared_metrics():
+    """The token tier reports through the shared ServeMetrics surface like
+    the classical engines: one record_batch per batched decode (occupancy =
+    active slots, served = generated tokens) and one record_request per
+    retirement (p50/p99 from submit→finish latency)."""
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=2, max_len=64)
+    rids = [eng.submit([1 + i, 2, 3], max_new_tokens=3) for i in range(4)]
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == rids
+    snap = eng.metrics.snapshot()
+    # 4 requests × 3 tokens, one from each prefill: 8 decoded tokens
+    assert snap["served"] == 8
+    assert snap["batches"] == 4              # 2 slots × (2+2 requests) × 2 decodes
+    assert snap["batch_occupancy"] == 2.0    # both slots full every decode
+    assert snap["p50_ms"] > 0 and snap["p99_ms"] >= snap["p50_ms"]
+    assert snap["device_s"] > 0 and snap["rps"] > 0
+    assert len(eng.metrics._latencies) == 4  # one latency per retired request
+    eng.metrics.reset()
+    assert eng.metrics.snapshot()["served"] == 0
+
+
 def test_engine_with_mesh_plan_single_device():
     """Distributed-serving path exercised on a 1×1 mesh (same code path a
     pod uses; the decode_32k dry-run cells prove the 256/512-chip layouts)."""
