@@ -54,23 +54,32 @@ def _render(records: list[dict], label: str) -> list[str]:
 
 
 _MEGA_BENCHES = ("bonsai/usps-b", "protonn/usps-b", "bonsai/cifar-b")
+_GRID_BUCKET = 8
 
 
 def megakernel_lane(benches: tuple[str, ...] = _MEGA_BENCHES) -> list[str]:
-    """Launches and intermediate-HBM bytes: per-chain walk vs megakernel."""
+    """Launches and intermediate-HBM bytes: per-chain walk vs megakernel,
+    plus the batched lanes for a served ``_GRID_BUCKET``-sample bucket —
+    the vmapped megakernel (one launch per sample per segment, weights and
+    const pool DMA'd per launch) versus ``exec_mode="megakernel_grid"``
+    (batch axis on the Pallas grid: one launch per segment per bucket,
+    weights DMA'd once)."""
     import numpy as np
 
     from repro.configs.classical import build
     from repro.core.compiler import MafiaCompiler
     from repro.core.lowering import ChainStep
 
+    B = _GRID_BUCKET
     out = ["roofline.megakernel.benchmark,chain_launches,node_dispatches,"
            "mega_launches,islands,instrs,reg_slots,"
-           "interm_hbm_bytes,mega_interm_hbm_bytes"]
+           "interm_hbm_bytes,mega_interm_hbm_bytes,"
+           f"vmap_launches_b{B},grid_launches_b{B},"
+           f"vmap_weight_hbm_bytes_b{B},grid_weight_hbm_bytes_b{B}"]
     for bench in benches:
         dfg, _, _ = build(bench, seed=0)
         prog = MafiaCompiler(use_pallas=True,
-                             exec_mode="megakernel").compile(dfg)
+                             exec_mode="megakernel_grid").compile(dfg)
         plan, mk = prog.plan, prog.plan.megakernel
         chains = sum(1 for s in plan.steps if isinstance(s, ChainStep))
         nodes = len(plan.steps) - chains
@@ -90,11 +99,23 @@ def megakernel_lane(benches: tuple[str, ...] = _MEGA_BENCHES) -> list[str]:
                              for k, p in mk.items if k == "step")
             if nid not in outputs)
         segs = mk.segments
+        # served-bucket lanes: the vmapped megakernel launches every segment
+        # once per sample (weights + const pool cross HBM per launch); the
+        # batch-grid lane launches each segment once per bucket and DMAs
+        # the static operands a single time.
+        weight_bytes = sum(
+            int(np.asarray(m).nbytes) for s in segs for m in s.matrices)
+        weight_bytes += sum(
+            int(np.asarray(c).nbytes) for s in segs for c in s.consts)
+        vmap_launches = B * len(segs) + B * mk.n_islands
+        grid_launches = len(segs) + B * mk.n_islands
         out.append(
             f"roofline.megakernel.{bench},{chains},{nodes},"
             f"{len(segs)},{mk.n_islands},{mk.n_instrs},"
             f"{sum(len(s.slot_widths) for s in segs)},"
-            f"{interm},{mega_interm}")
+            f"{interm},{mega_interm},"
+            f"{vmap_launches},{grid_launches},"
+            f"{B * weight_bytes},{weight_bytes}")
     return out
 
 

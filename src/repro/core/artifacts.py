@@ -58,9 +58,10 @@ from typing import Any, Mapping
 
 import numpy as np
 
-__all__ = ["ARTIFACT_VERSION", "ArtifactError", "ArtifactStore",
-           "program_key", "program_self_key", "program_state",
-           "restore_program", "save_program", "load_program"]
+__all__ = ["ARTIFACT_VERSION", "CALIBRATION_VERSION", "ArtifactError",
+           "ArtifactStore", "program_key", "program_self_key",
+           "program_state", "restore_program", "save_program",
+           "load_program", "save_calibration", "load_calibration"]
 
 # Bump on any change to the payload schema, the plan/ISA semantics, or the
 # numeric templates: the version participates in both the artifact key and
@@ -69,7 +70,12 @@ __all__ = ["ARTIFACT_VERSION", "ArtifactError", "ArtifactStore",
 # (out_dtypes) — v1 streams relinearize differently, so they must miss.
 ARTIFACT_VERSION = 2
 
+# Calibration tables version independently of program artifacts: a harness
+# or fit-schema change invalidates measurements without evicting programs.
+CALIBRATION_VERSION = 1
+
 _MAGIC = b"MAFIA-ARTIFACT\n"
+_CALIB_MAGIC = b"MAFIA-CALIB\n"
 
 
 class ArtifactError(RuntimeError):
@@ -214,6 +220,7 @@ def program_state(prog) -> dict:
         "qplan": prog.qplan,
         "exec_mode": prog.exec_mode,
         "chain_split_bytes": prog.chain_split_bytes,
+        "cost_source": getattr(prog, "cost_source", "analytic"),
         # the linearized stream, both as validation fingerprint and as data
         "megakernel_fp": plan.megakernel.fingerprint(),
         "megakernel": plan.megakernel,
@@ -271,6 +278,7 @@ def restore_program(state: dict):
         rewrite_result=rw,
         pf_source="artifact",
         chain_split_bytes=state["chain_split_bytes"],
+        cost_source=state.get("cost_source", "analytic"),
     )
 
 
@@ -329,6 +337,57 @@ def load_program(path: str | Path):
     if hashlib.sha256(payload).hexdigest() != digest:
         raise ArtifactError(f"{path}: content digest mismatch (corrupt file)")
     return restore_program(pickle.loads(payload))
+
+
+# -------------------------------------------------------- calibration tables
+def save_calibration(table, path: str | Path) -> str:
+    """Serialize a :class:`~repro.core.autotune.CalibrationTable` to
+    ``path`` (same magic/header/digest discipline as program artifacts,
+    distinct magic + version so the two kinds never cross-load); returns
+    the payload digest."""
+    payload = pickle.dumps(
+        {"version": CALIBRATION_VERSION,
+         "device_class": table.device_class,
+         "samples": list(table.samples),
+         "knobs": dict(table.knobs),
+         "meta": dict(table.meta)}, protocol=4)
+    digest = hashlib.sha256(payload).hexdigest()
+    header = f"version={CALIBRATION_VERSION} digest={digest}\n".encode()
+    _write_atomic(Path(path), _CALIB_MAGIC + header + payload)
+    return digest
+
+
+def load_calibration(path: str | Path):
+    """Load and validate a calibration table.  Raises
+    :class:`ArtifactError` on any trust failure (bad magic, version
+    mismatch — a harness/schema change — or digest mismatch),
+    ``FileNotFoundError`` when absent."""
+    from repro.core.autotune import CalibrationTable
+
+    blob = Path(path).read_bytes()
+    if not blob.startswith(_CALIB_MAGIC):
+        raise ArtifactError(f"{path}: not a MAFIA calibration table")
+    rest = blob[len(_CALIB_MAGIC):]
+    nl = rest.find(b"\n")
+    if nl < 0:
+        raise ArtifactError(f"{path}: truncated header")
+    fields = dict(p.split(b"=", 1) for p in rest[:nl].split(b" ") if b"=" in p)
+    try:
+        version = int(fields[b"version"])
+        digest = fields[b"digest"].decode()
+    except (KeyError, ValueError) as exc:
+        raise ArtifactError(f"{path}: malformed header") from exc
+    if version != CALIBRATION_VERSION:
+        raise ArtifactError(
+            f"{path}: calibration version {version} != supported "
+            f"{CALIBRATION_VERSION}")
+    payload = rest[nl + 1:]
+    if hashlib.sha256(payload).hexdigest() != digest:
+        raise ArtifactError(f"{path}: content digest mismatch (corrupt file)")
+    state = pickle.loads(payload)
+    return CalibrationTable(
+        device_class=state["device_class"], samples=list(state["samples"]),
+        knobs=dict(state["knobs"]), meta=dict(state["meta"]))
 
 
 # -------------------------------------------------------------------- store
@@ -428,6 +487,40 @@ class ArtifactStore:
                 continue                   # another process got there first
             total -= sizes[p]
             self.evictions += 1
+
+    # ---------------------------------------------------------- calibration
+    # Calibration tables live beside the program artifacts but under their
+    # own extension: the LRU sweep globs ``*.mafia`` only, so a table is
+    # never evicted to make room for programs — it is the cheapest artifact
+    # in the store and the most expensive to regenerate correctly (needs an
+    # idle machine of the right device class).
+
+    def calibration_path(self, device_class: str) -> Path:
+        slug = "".join(c if c.isalnum() or c in "._-" else "-"
+                       for c in device_class)
+        return self.root / f"calib-{slug}.mafia-calib"
+
+    def save_calibration(self, table) -> Path:
+        path = self.calibration_path(table.device_class)
+        save_calibration(table, path)
+        self.saves += 1
+        return path
+
+    def load_calibration(self, device_class: str):
+        """The calibration table published for ``device_class``, or None
+        (missing, corrupt, wrong version, or recorded for a *different*
+        device class — all count as misses; callers fall back to the
+        analytic model or a fresh profile)."""
+        try:
+            table = load_calibration(self.calibration_path(device_class))
+        except (FileNotFoundError, ArtifactError):
+            self.misses += 1
+            return None
+        if table.device_class != device_class:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return table
 
     def keys(self) -> list[str]:
         return sorted(p.stem for p in self.root.glob("*.mafia"))

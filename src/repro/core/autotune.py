@@ -1,0 +1,522 @@
+"""Profile-guided compilation (ROADMAP item 4): microbenchmark, fit, autotune.
+
+The analytic cost model (:mod:`repro.core.cost_model`) prices nodes in
+*paper cycles* — a regression over the hand-written FPGA templates that has
+never seen the live Pallas backend.  On real hardware the dominant cost of
+a small classical program is not MAC work at all but per-dispatch overhead:
+a 30×400 spmv and a 400-wide add cost nearly the same wall time, because
+both are one kernel launch.  An optimizer ranking candidates by cycles is
+therefore optimizing the wrong thing (rule4ml makes the same observation
+for analytic FPGA estimators, and fixes it the same way: fit the model to
+measurements).
+
+This module is the measurement-and-fit half of the story:
+
+* **Microbenchmark harness** — :func:`bench_op` times one op template on
+  the live backend (deterministic inputs, warmup + min-of-repeats);
+  :func:`bench_chain` times fused linear-pipeline chains of varying depth
+  and width; :func:`bench_segments` times compiled megakernel segments.
+  Every observation is a :class:`MicrobenchSample` keyed by
+  ``(op, dims-bucket, pf, precision, exec_mode, device_class)``.
+* **:class:`CalibrationTable`** — the raw samples plus autotuned knobs,
+  persisted through :mod:`repro.core.artifacts` (versioned, device-class
+  keyed, atomic publish) so profiling cost is paid once per machine.
+* **:class:`CalibratedCostModel`** — an :class:`EstimatorBank`-compatible
+  bank fitted from the samples: per-op ``wall_us ≈ t_op + s_op · cycles``
+  (the intercept *is* the dispatch overhead the analytic model lacks),
+  with a global fallback fit for ops the table never measured.  The PF
+  curve stays the analytic regression shape — the Pallas backend has no
+  PF axis, so only the op/dims weighting is re-learned — which keeps the
+  ``estimators`` coefficient dict exactly what ``blackbox_best_pf`` reads.
+* **Autotuner** — :func:`autotune_knobs` sweeps ``chain_split_bytes`` and
+  the linear-pipeline ``(bb, bn)`` tile sizes on the live device and
+  records the winners in the table's ``knobs``.
+
+``MafiaCompiler(cost_source="measured", autotune=…)`` is the consumer: it
+swaps this bank in for the analytic one, rewrites each node's ``latency1``
+from cycles to measured µs after PF-1 profiling, and hands the scheduler
+measured node/chain costs — greedy/blackbox Best-PF, chain splitting and
+the schedule simulation then all optimize hardware truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import node_types
+from repro.core.cost_model import _TRAIN_DIMS, EstimatorBank, default_bank
+
+__all__ = [
+    "CalibratedCostModel",
+    "CalibrationTable",
+    "MicrobenchSample",
+    "autotune_knobs",
+    "bench_chain",
+    "bench_op",
+    "bench_segments",
+    "default_calibration",
+    "device_class",
+    "profile_device",
+]
+
+# fill cycles of the template pipeline model — must match node_types._FILL
+_FILL = 6.0
+
+
+def device_class() -> str:
+    """Stable identifier of the execution device the samples were taken on —
+    calibration tables are only valid on the device class that produced
+    them (the persistence layer treats a mismatch as a miss)."""
+    import jax
+
+    dev = jax.devices()[0]
+    kind = str(getattr(dev, "device_kind", "") or dev.platform)
+    return f"{jax.default_backend()}:{kind}".replace(" ", "_").lower()
+
+
+def _bucket(v: int) -> int:
+    """Power-of-two dims bucket: shapes within 2× share a sample key."""
+    return 1 << max(0, int(v) - 1).bit_length()
+
+
+def dims_bucket(dims: dict[str, int]) -> tuple[tuple[str, int], ...]:
+    return tuple(sorted((k, _bucket(v)) for k, v in dims.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class MicrobenchSample:
+    """One timed observation of an op template / chain / segment shape."""
+
+    op: str                                  # op name, "__chain__", "__segment__"
+    dims_bucket: tuple[tuple[str, int], ...]
+    pf: int
+    precision: str
+    exec_mode: str                           # "op" | "chain" | "megakernel"
+    device_class: str
+    wall_us: float                           # min-of-repeats wall time
+    work_cycles: float                       # analytic template cycles (regressor)
+    extent: float = 0.0                      # chain depth / segment instrs
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """Raw microbenchmark samples + autotuned knobs for one device class.
+
+    Persisted through :func:`repro.core.artifacts.save_calibration` /
+    :class:`~repro.core.artifacts.ArtifactStore` (versioned header, atomic
+    publish, ``.mafia-calib`` extension so the program-artifact LRU sweep
+    never evicts it)."""
+
+    device_class: str
+    samples: list[MicrobenchSample] = dataclasses.field(default_factory=list)
+    knobs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def digest(self) -> str:
+        import hashlib
+
+        h = hashlib.sha256()
+        h.update(self.device_class.encode())
+        for s in self.samples:
+            h.update(repr((s.op, s.dims_bucket, s.pf, s.precision,
+                           s.exec_mode, round(s.wall_us, 3))).encode())
+        h.update(repr(sorted(self.knobs.items())).encode())
+        return h.hexdigest()
+
+
+# ------------------------------------------------------------ deterministic cases
+def _op_case(op: str, dims: dict[str, int],
+             rng: np.random.Generator) -> tuple[list[np.ndarray], dict[str, Any]]:
+    """Deterministic inputs/params exercising one op template at ``dims``."""
+    f32 = lambda *shape: rng.standard_normal(shape).astype(np.float32)
+    if op in ("gemv", "spmv"):
+        w = f32(dims["m"], dims["n"])
+        if op == "spmv":
+            # thin the matrix to ~the requested nnz so the analytic
+            # regressor (nnz-driven) matches the measured operand
+            keep = min(1.0, dims.get("nnz", w.size) / w.size)
+            w = np.where(rng.random(w.shape) < keep, w, 0.0).astype(np.float32)
+            w.flat[0] = 1.0                       # nnz >= 1
+        return [f32(dims["n"])], {"matrix": w}
+    if op == "matmul":
+        return [f32(dims["m"], dims["k"]), f32(dims["k"], dims["n"])], {}
+    if op == "outer":
+        return [f32(dims["m"]), f32(dims["n"])], {}
+    if op == "sq_l2":
+        return [f32(dims["d"])], {"points": f32(dims["d"], dims["m"])}
+    if op in ("add", "sub", "hadamard", "dot"):
+        return [f32(dims["n"]), f32(dims["n"])], {}
+    if op == "scalar_mul":
+        return [f32(dims["n"])], {"scalar": 1.5}
+    if op == "const":
+        return [], {"value": f32(dims["n"])}
+    # unary elementwise + reductions + argmax
+    return [f32(dims["n"])], {}
+
+
+def _time_us(fn: Callable[[], Any], *, warmup: int, reps: int) -> float:
+    """Min-of-``reps`` wall µs of ``fn()``, blocking on device completion."""
+    for _ in range(max(0, warmup)):
+        out = fn()
+        for v, in [(out,)]:
+            _block(v)
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        _block(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _block(out: Any) -> None:
+    if isinstance(out, (tuple, list)):
+        for v in out:
+            np.asarray(v)
+    elif isinstance(out, dict):
+        for v in out.values():
+            np.asarray(v)
+    else:
+        np.asarray(out)
+
+
+def bench_op(op: str, dims: dict[str, int], *, pf: int = 1,
+             precision: str = "float32", warmup: int = 1,
+             reps: int = 3, device: str | None = None) -> MicrobenchSample:
+    """Time one op template on the live backend.
+
+    The measurement is a jitted call of the op's ``jax_fn`` (the same
+    semantics every execution lane runs) on deterministic inputs — warm
+    caches, min-of-``reps``.  ``pf`` is recorded in the key but the wall
+    time is PF-independent: the Pallas backend has no parallelization-
+    factor axis, which is precisely the kind of truth a measured cost
+    model is allowed to discover."""
+    import jax
+    import jax.numpy as jnp
+
+    spec = node_types.get(op)
+    inputs, params = _op_case(op, dims, np.random.default_rng(0))
+    args = [jnp.asarray(a) for a in inputs]
+    fn = jax.jit(lambda *xs: spec.jax_fn(list(xs), params, dims))
+    wall = _time_us(lambda: fn(*args), warmup=warmup, reps=reps)
+    return MicrobenchSample(
+        op=op, dims_bucket=dims_bucket(dims), pf=pf, precision=precision,
+        exec_mode="op", device_class=device or device_class(),
+        wall_us=wall, work_cycles=float(spec.cycles(dims, pf)))
+
+
+def bench_chain(n: int, depth: int, *, warmup: int = 1, reps: int = 3,
+                bb: int | None = None, bn: int | None = None,
+                jit: bool = False,
+                device: str | None = None) -> MicrobenchSample:
+    """Time one fused linear-pipeline chain launch of ``depth`` relu stages
+    over an ``n``-wide stream — the unit the chain splitter prices.
+
+    ``jit=False`` (the default) measures the eager launch, matching the
+    per-sample interpret lane the estimation-error gate measures against;
+    ``jit=True`` measures the compiled kernel alone (what the jitted
+    serving path pays) — the tile autotuner uses this, since tracing
+    overhead would otherwise drown the tile effect."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.linear_pipeline import fused_linear_chain
+
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(n).astype(np.float32))
+    stages = (("relu", None),) * max(1, depth)
+    kw: dict[str, Any] = {}
+    if bb is not None:
+        kw["bb"] = bb
+    if bn is not None:
+        kw["bn"] = bn
+    call = lambda v: fused_linear_chain(v, stages, **kw)
+    if jit:
+        call = jax.jit(call)
+    wall = _time_us(lambda: call(x), warmup=warmup, reps=reps)
+    spec = node_types.get("relu")
+    return MicrobenchSample(
+        op="__chain__", dims_bucket=dims_bucket({"n": n}), pf=1,
+        precision="float32", exec_mode="chain",
+        device_class=device or device_class(), wall_us=wall,
+        work_cycles=float(depth * spec.cycles({"n": n}, 1)),
+        extent=float(depth))
+
+
+def bench_segments(benches: Sequence[str] = ("bonsai/usps-b",), *,
+                   warmup: int = 1, reps: int = 3,
+                   device: str | None = None) -> list[MicrobenchSample]:
+    """Time whole megakernel segments of compiled Table-I programs — the
+    per-launch overhead of the single-launch lane, keyed by instruction
+    count."""
+    from repro.configs.classical import build
+    from repro.core.compiler import MafiaCompiler
+    from repro.core.executor import build_callable
+
+    out: list[MicrobenchSample] = []
+    dev = device or device_class()
+    for bench in benches:
+        dfg, _, _ = build(bench)
+        prog = MafiaCompiler(use_pallas=True,
+                             exec_mode="megakernel").compile(dfg)
+        fn = build_callable(prog.dfg, plan=prog.plan, mode="megakernel",
+                            jit=False)
+        (gi, spec), = prog.dfg.graph_inputs.items()
+        x = np.random.default_rng(0).standard_normal(
+            tuple(spec.shape)).astype(np.float32)
+        wall = _time_us(lambda: fn(**{gi: x}), warmup=warmup, reps=reps)
+        mk = prog.plan.megakernel
+        out.append(MicrobenchSample(
+            op="__segment__", dims_bucket=dims_bucket(
+                {"instrs": mk.n_instrs}), pf=1, precision="float32",
+            exec_mode="megakernel", device_class=dev, wall_us=wall,
+            work_cycles=float(prog.schedule.total_cycles),
+            extent=float(mk.n_instrs)))
+    return out
+
+
+def profile_device(*, quick: bool = True, ops: Sequence[str] | None = None,
+                   include_chains: bool = True,
+                   include_segments: bool = True,
+                   reps: int | None = None) -> CalibrationTable:
+    """Run the microbenchmark harness and return a fresh table.
+
+    ``quick=True`` (the nightly/CI and compile-time-fallback mode) limits
+    each op to two dimension sets and three repeats — a few seconds end to
+    end; the full mode sweeps every training dimension set."""
+    dev = device_class()
+    reps = reps if reps is not None else (3 if quick else 7)
+    table = CalibrationTable(device_class=dev,
+                             meta={"quick": quick, "reps": reps})
+    for op in (ops if ops is not None else sorted(_TRAIN_DIMS)):
+        dim_sets = _TRAIN_DIMS[op][: 2 if quick else None]
+        for dims in dim_sets:
+            table.samples.append(bench_op(op, dims, reps=reps, device=dev))
+    if include_chains:
+        widths = (64, 400) if quick else (64, 400, 1024)
+        for n in widths:
+            for depth in (1, 4):
+                table.samples.append(
+                    bench_chain(n, depth, reps=reps, device=dev))
+    if include_segments:
+        benches = ("bonsai/usps-b",) if quick else (
+            "bonsai/usps-b", "protonn/usps-b", "bonsai/cifar-b")
+        table.samples.extend(
+            bench_segments(benches, reps=reps, device=dev))
+    return table
+
+
+# ----------------------------------------------------------------- fitted model
+def _affine_fit(xs: Sequence[float], ys: Sequence[float],
+                fallback: tuple[float, float]) -> tuple[float, float]:
+    """Nonnegative affine fit ``y ≈ t + s·x`` (least squares, clamped).
+    A negative slope (noise on near-constant data) degrades to the mean
+    wall time as pure overhead — monotonicity in work is preserved."""
+    xs_a, ys_a = np.asarray(xs, float), np.asarray(ys, float)
+    if xs_a.size == 0:
+        return fallback
+    if xs_a.size == 1 or float(np.ptp(xs_a)) == 0.0:
+        return (float(ys_a.mean()), 0.0)
+    A = np.stack([np.ones_like(xs_a), xs_a], axis=1)
+    (t, s), *_ = np.linalg.lstsq(A, ys_a, rcond=None)
+    if s < 0.0:
+        return (float(ys_a.mean()), 0.0)
+    return (max(0.0, float(t)), float(s))
+
+
+@dataclasses.dataclass
+class CalibratedCostModel(EstimatorBank):
+    """Measurement-fitted cost bank, drop-in compatible with the analytic
+    :class:`EstimatorBank`.
+
+    ``estimators`` carries the *analytic* per-op PF-curve coefficients —
+    the coefficient arrays ``blackbox_best_pf`` reads stay exactly the
+    regression form the paper fits — while latency magnitudes come from
+    the measured fits:
+
+    * ``lat1_us(op, cycles1)`` — measured PF-1 latency in µs; the compiler
+      writes this into ``node.latency1`` after profiling, so both Best-PF
+      strategies transparently optimize measured time.
+    * ``latency(op, lat1_us, pf)`` — overhead-aware PF scaling: only the
+      work term ``lat1_us − t_op`` rides the analytic PF curve; the
+      dispatch overhead ``t_op`` is incompressible on this backend.
+    * ``node_us`` / ``chain_us`` / ``segment_us`` — the scheduler-facing
+      costs (:func:`repro.core.scheduler.simulate`'s ``node_cost`` /
+      ``chain_cost`` overrides).
+
+    Ops the table never measured fall back to the global fit (µs per
+    analytic cycle across all sampled ops), so every latency the
+    optimizer compares is in one unit.
+    """
+
+    device_class: str = ""
+    op_fit: dict[str, tuple[float, float]] = dataclasses.field(
+        default_factory=dict)                 # op -> (t_us, us_per_cycle)
+    global_fit: tuple[float, float] = (0.0, 1.0)
+    chain_fit: tuple[float, float] = (0.0, 0.0)   # (launch_us, per_stage_us)
+    segment_fit: tuple[float, float] = (0.0, 0.0)  # (launch_us, per_instr_us)
+    knobs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    table_digest: str = ""
+
+    @classmethod
+    def fit(cls, table: CalibrationTable,
+            bank: EstimatorBank | None = None) -> "CalibratedCostModel":
+        bank = bank or default_bank()
+        by_op: dict[str, tuple[list[float], list[float]]] = {}
+        chain_x: list[list[float]] = []
+        chain_y: list[float] = []
+        seg_x: list[float] = []
+        seg_y: list[float] = []
+        for s in table.samples:
+            if s.exec_mode == "op":
+                xs, ys = by_op.setdefault(s.op, ([], []))
+                xs.append(s.work_cycles)
+                ys.append(s.wall_us)
+            elif s.exec_mode == "chain":
+                chain_x.append([1.0, s.extent])
+                chain_y.append(s.wall_us)
+            elif s.exec_mode == "megakernel":
+                seg_x.append(s.extent)
+                seg_y.append(s.wall_us)
+        all_x = [x for xs, _ in by_op.values() for x in xs]
+        all_y = [y for _, ys in by_op.values() for y in ys]
+        global_fit = _affine_fit(all_x, all_y, (0.0, 1.0))
+        op_fit = {op: _affine_fit(xs, ys, global_fit)
+                  for op, (xs, ys) in by_op.items()}
+        if chain_x:
+            (c0, c1), *_ = np.linalg.lstsq(
+                np.asarray(chain_x), np.asarray(chain_y), rcond=None)
+            chain_fit = (max(0.0, float(c0)), max(0.0, float(c1)))
+            if chain_fit == (0.0, 0.0):
+                chain_fit = (float(np.mean(chain_y)), 0.0)
+        else:
+            chain_fit = (global_fit[0], 0.0)
+        segment_fit = _affine_fit(seg_x, seg_y, (global_fit[0], 0.0))
+        return cls(
+            estimators=dict(bank.estimators),
+            device_class=table.device_class,
+            op_fit=op_fit, global_fit=global_fit, chain_fit=chain_fit,
+            segment_fit=segment_fit, knobs=dict(table.knobs),
+            table_digest=table.digest())
+
+    # --------------------------------------------------------------- latency
+    def _fit_for(self, op: str) -> tuple[float, float]:
+        return self.op_fit.get(op, self.global_fit)
+
+    def lat1_us(self, op: str, lat1_cycles: float) -> float:
+        t, s = self._fit_for(op)
+        return t + s * float(lat1_cycles)
+
+    def latency(self, op: str, latency1: float, pf: int) -> float:
+        """``latency1`` here is measured µs (the measured-mode profiler
+        writes :meth:`lat1_us` into ``node.latency1``); only the work
+        share above the dispatch overhead scales with the PF curve."""
+        t, _ = self._fit_for(op)
+        est = self.estimators[op]
+        work = max(0.0, float(latency1) - t)
+        return t + (est.aL + est.bL * pf + est.cL / pf) * work
+
+    # ------------------------------------------------------- scheduler costs
+    def node_us(self, node: Any, pf: int) -> float:
+        t, s = self._fit_for(node.op)
+        return t + s * float(node_types.get(node.op).cycles(node.dims, pf))
+
+    def chain_us(self, nodes: Sequence[Any], pfs: Sequence[int]) -> float:
+        """One fused-chain launch: measured launch overhead + per-stage
+        cost + the bottleneck stage's measured streaming work.  The PF
+        axis is deliberately absent from the launch terms — a fused chain
+        is one kernel regardless of PF, a truth the analytic pipeline
+        model cannot express."""
+        c0, c1 = self.chain_fit
+        work = 0.0
+        for node, pf in zip(nodes, pfs):
+            t, s = self._fit_for(node.op)
+            cyc = node_types.get(node.op).cycles(node.dims, pf)
+            work = max(work, s * max(0.0, float(cyc) - _FILL))
+        return c0 + c1 * len(nodes) + work
+
+    def segment_us(self, n_instrs: int) -> float:
+        c0, c1 = self.segment_fit
+        return c0 + c1 * float(n_instrs)
+
+
+# ---------------------------------------------------------------- autotuner
+_SPLIT_SWEEP = (256 * 1024, 1024 * 1024, 4 * 1024 * 1024, None)
+_TILE_SWEEP = ((128, 256), (256, 512), (512, 512))
+
+
+def autotune_knobs(table: CalibrationTable, *,
+                   bench: str = "bonsai/usps-b",
+                   reps: int = 3) -> CalibrationTable:
+    """Sweep ``chain_split_bytes`` and the linear-pipeline ``(bb, bn)``
+    tiles on the live device; record the winners in ``table.knobs``.
+
+    The tile sweep times a representative fused-chain launch per
+    candidate; the split sweep compiles ``bench`` at each budget and
+    times the emitted per-sample callable.  Both knobs are
+    bitwise-neutral (tiling and chain cuts never change per-element
+    arithmetic), so applying the winners is always safe."""
+    from repro.configs.classical import build
+    from repro.core.compiler import MafiaCompiler
+    from repro.core.executor import build_callable
+
+    best_tile, best_tile_us = None, float("inf")
+    for bb, bn in _TILE_SWEEP:
+        wall = bench_chain(400, 4, bb=bb, bn=bn, reps=reps, jit=True,
+                           device=table.device_class).wall_us
+        if wall < best_tile_us:
+            best_tile, best_tile_us = (bb, bn), wall
+    best_split, best_split_us = None, float("inf")
+    for split in _SPLIT_SWEEP:
+        dfg, _, _ = build(bench)
+        prog = MafiaCompiler(use_pallas=True,
+                             chain_split_bytes=split).compile(dfg)
+        fn = build_callable(prog.dfg, plan=prog.plan, mode="interpret",
+                            jit=False)
+        (gi, spec), = prog.dfg.graph_inputs.items()
+        x = np.random.default_rng(0).standard_normal(
+            tuple(spec.shape)).astype(np.float32)
+        wall = _time_us(lambda: fn(**{gi: x}), warmup=1, reps=reps)
+        if wall < best_split_us:
+            best_split, best_split_us = split, wall
+    table.knobs.update(
+        bb=best_tile[0], bn=best_tile[1],
+        chain_split_bytes=best_split,
+        tile_us=best_tile_us, split_us=best_split_us,
+        autotune_bench=bench)
+    return table
+
+
+# -------------------------------------------------------- in-process default
+@functools.lru_cache(maxsize=4)
+def _cached_profile(dev: str, quick: bool) -> CalibrationTable:
+    return profile_device(quick=quick)
+
+
+def default_calibration(*, quick: bool = True,
+                        store: Any | None = None,
+                        autotune: bool = False) -> CalibratedCostModel:
+    """The device's calibrated cost model: store-first, profile on miss.
+
+    Resolution order: a table published for this device class in
+    ``store`` (an :class:`~repro.core.artifacts.ArtifactStore`), else a
+    quick in-process profile (cached per device class, so a fleet of
+    ``cost_source="measured"`` compilers pays the harness once).  A fresh
+    profile is published back to ``store`` when one is given.  With
+    ``autotune=True`` a fresh table additionally runs
+    :func:`autotune_knobs` before publication."""
+    dev = device_class()
+    table: CalibrationTable | None = None
+    if store is not None:
+        table = store.load_calibration(dev)
+    if table is None:
+        table = _cached_profile(dev, quick)
+        if autotune and "chain_split_bytes" not in table.knobs:
+            autotune_knobs(table)
+        if store is not None:
+            store.save_calibration(table)
+    return CalibratedCostModel.fit(table)

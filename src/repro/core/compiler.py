@@ -84,6 +84,11 @@ class CompiledProgram:
     # the chain-split budget the plan was lowered with — persisted so an
     # artifact load re-runs the identical chain decomposition
     chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES
+    # "analytic" (paper cycle model) or "measured" (profile-guided:
+    # calibrated µs — the schedule's units are then µs, not cycles).
+    # Cost source is compile-time metadata only: it steers PF search,
+    # chain splitting and the schedule, never the emitted numerics.
+    cost_source: str = "analytic"
 
     @property
     def latency_cycles(self) -> float:
@@ -91,6 +96,8 @@ class CompiledProgram:
 
     @property
     def latency_us(self) -> float:
+        if self.cost_source == "measured":
+            return self.schedule.total_cycles   # measured schedules are µs
         return self.budget.cycles_to_us(self.schedule.total_cycles)
 
     def __call__(self, **inputs: Any) -> dict[str, Any]:
@@ -254,10 +261,13 @@ class MafiaCompiler:
         precision: str = "float32",
         calib_samples: int = 64,
         per_channel: bool = False,
-        chain_split_bytes: float | None = DEFAULT_CHAIN_SPLIT_BYTES,
+        chain_split_bytes: float | str | None = DEFAULT_CHAIN_SPLIT_BYTES,
         warm_start: bool = True,
         exec_mode: str = "interpret",
         artifact_store: Any | None = None,
+        cost_source: str = "analytic",
+        autotune: bool = False,
+        calibration: Any | None = None,
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -300,13 +310,37 @@ class MafiaCompiler:
         digest — **before** the Best-PF search, so a fresh process
         cold-starts from artifacts any sibling worker published.  Misses
         compile normally and publish the artifact.  The in-memory PF
-        warm-start cache layers on top (hits also prime it)."""
+        warm-start cache layers on top (hits also prime it).
+
+        ``cost_source="measured"`` enables profile-guided compilation
+        (ROADMAP item 4): the Best-PF search, chain splitting and the
+        schedule simulation all consume a
+        :class:`~repro.core.autotune.CalibratedCostModel` fitted from
+        microbenchmarks of the live backend instead of the analytic paper
+        cycle model.  ``calibration`` supplies the measurements — a
+        ``CalibrationTable``, a pre-fitted ``CalibratedCostModel``, or
+        ``None`` to resolve one automatically (published table in
+        ``artifact_store`` for this device class, else a quick in-process
+        profile, published back to the store).  A table recorded for a
+        *different* device class is rejected and the compiler falls back
+        to the analytic model (``cost_source`` degrades to
+        ``"analytic"``).  Cost source never changes emitted numerics —
+        outputs are bitwise-identical across sources; only the PF
+        assignment, chain cuts and the schedule's units (µs) differ.
+
+        ``autotune=True`` additionally applies the calibration table's
+        swept kernel knobs: the linear-pipeline ``(bb, bn)`` tile winner
+        is installed process-wide, and ``chain_split_bytes="auto"``
+        resolves to the swept split budget (falling back to the built-in
+        default when the table has no knob record)."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
             raise ValueError(f"unknown precision {precision!r}")
         if exec_mode not in ("interpret", "megakernel", "megakernel_grid"):
             raise ValueError(f"unknown exec_mode {exec_mode!r}")
+        if cost_source not in ("analytic", "measured"):
+            raise ValueError(f"unknown cost_source {cost_source!r}")
         self.backend = backend
         self.budget = budget or (ARTY_A7 if backend == "fpga" else TpuBudget())
         self.strategy = strategy
@@ -322,11 +356,73 @@ class MafiaCompiler:
         self.warm_start = warm_start
         self.exec_mode = exec_mode
         self.artifact_store = artifact_store
+        self.autotune = autotune
+        self.cost_source = cost_source
+        self.calibrated: Any | None = None
+        if cost_source == "measured" or autotune:
+            self._resolve_calibration(calibration)
+        if self.chain_split_bytes == "auto":
+            knobs = self.calibrated.knobs if self.calibrated else {}
+            self.chain_split_bytes = knobs.get(
+                "chain_split_bytes", DEFAULT_CHAIN_SPLIT_BYTES)
         # rewrite-aware PF warm-start caches, keyed on the canonical
         # rewritten graph's structural hash (exact: ids+ops+edges+dims;
         # near: dims-blind).  Per instance — all optimizer knobs are fixed.
         self._pf_cache: dict[str, PFResult] = {}
         self._near_cache: dict[str, PFResult] = {}
+
+    # ----------------------------------------------- profile-guided plumbing
+    def _resolve_calibration(self, calibration: Any | None) -> None:
+        """Resolve ``calibration`` into ``self.calibrated`` and (in measured
+        mode) swap the calibrated bank in.  See ``__init__``'s docstring for
+        the resolution and device-class-mismatch rules."""
+        from repro.core import autotune as autotune_mod
+
+        dev = autotune_mod.device_class()
+        model: Any | None = None
+        if calibration is None:
+            model = autotune_mod.default_calibration(
+                store=self.artifact_store, autotune=self.autotune)
+        elif isinstance(calibration, autotune_mod.CalibratedCostModel):
+            model = calibration
+        elif isinstance(calibration, autotune_mod.CalibrationTable):
+            if calibration.device_class == dev:
+                if (self.autotune
+                        and "chain_split_bytes" not in calibration.knobs):
+                    autotune_mod.autotune_knobs(calibration)
+                model = autotune_mod.CalibratedCostModel.fit(calibration)
+        else:
+            raise TypeError(
+                "calibration must be a CalibrationTable, a "
+                f"CalibratedCostModel or None, got {type(calibration)!r}")
+        if model is not None and model.device_class != dev:
+            model = None
+        if model is None:
+            # mismatched/unusable calibration: measured mode would price
+            # this device with another device's numbers — refuse and fall
+            # back to the analytic model instead.
+            self.cost_source = "analytic"
+            return
+        self.calibrated = model
+        if self.cost_source == "measured":
+            self.bank = model
+        if self.autotune and "bb" in model.knobs:
+            from repro.kernels import linear_pipeline
+
+            linear_pipeline.set_tuned_tiles(model.knobs["bb"],
+                                            model.knobs["bn"])
+
+    def _profile(self, rdfg: DFG) -> None:
+        """PF-1 profiling for this instance's cost source: the analytic
+        template sweep, then — in measured mode — rewrite each node's
+        ``latency1`` from cycles to calibrated µs, so both Best-PF
+        strategies (greedy reads ``bank.latency``; blackbox reads the
+        ``latency1`` array against the bank's PF-curve coefficients)
+        transparently optimize measured time."""
+        profile_pf1(rdfg, backend=self.backend)
+        if self.cost_source == "measured" and self.calibrated is not None:
+            for node in rdfg.nodes.values():
+                node.latency1 = self.calibrated.lat1_us(node.op, node.latency1)
 
     # ----------------------------------------------------------------- stages
     def _artifact_key(self, rdfg: DFG, calib: Any | None) -> str:
@@ -340,7 +436,11 @@ class MafiaCompiler:
             pipelining=self.pipelining, use_pallas=self.use_pallas,
             precision=self.precision, per_channel=self.per_channel,
             chain_split_bytes=self.chain_split_bytes,
-            exec_mode=self.exec_mode)
+            exec_mode=self.exec_mode, cost_source=self.cost_source)
+        if self.cost_source == "measured" and self.calibrated is not None:
+            # measured-cost compiles may pick different PFs/chain cuts per
+            # calibration — the table digest keeps their artifacts distinct
+            knobs["calibration"] = self.calibrated.table_digest
         cal = ("none" if self.precision == "float32" else
                artifacts.calib_digest(calib, n_samples=self.calib_samples))
         return artifacts.program_key(rdfg, knobs, cal)
@@ -352,7 +452,7 @@ class MafiaCompiler:
         a near-hit in the warm-start cache) seeds the search at the prior
         solution — group start PFs are derived per node id, so the seeding
         is robust to group renumbering."""
-        profile_pf1(dfg, backend=self.backend)
+        self._profile(dfg)
         groups = PFGroups.build(dfg)
         ctx = CostContext(dfg, groups, self.budget, backend=self.backend, bank=self.bank)
         warm: list[int] | None = None
@@ -436,7 +536,7 @@ class MafiaCompiler:
                 # tagged graph), but they are cheap closed-form sweeps.
                 pf_source = "exact"
                 pf_result = cached
-                profile_pf1(rdfg, backend=self.backend)
+                self._profile(rdfg)
                 groups = PFGroups.build(rdfg)
                 # defensive copy: prog.assignment is a public, mutable
                 # field (the ablation baselines tweak it) — it must never
@@ -474,7 +574,7 @@ class MafiaCompiler:
                 if rid in rdfg.nodes:
                     eff[rid] = max(eff.get(rid, 1), int(pf))
             assignment = {nid: eff.get(nid, 1) for nid in rdfg.nodes}
-            profile_pf1(rdfg, backend=self.backend)
+            self._profile(rdfg)
             groups = PFGroups.build(rdfg)
             for nid, pf in assignment.items():
                 rdfg.nodes[nid].pf = pf
@@ -485,6 +585,11 @@ class MafiaCompiler:
         if self.use_pallas:
             sim_kw.update(decompose_chains=True,
                           chain_split_bytes=self.chain_split_bytes)
+        if self.cost_source == "measured" and self.calibrated is not None:
+            # price schedule units in measured µs: direct nodes by the
+            # per-op fit, fused sub-chains as one launch (PF-independent)
+            sim_kw.update(node_cost=self.calibrated.node_us,
+                          chain_cost=self.calibrated.chain_us)
         if self.pipelining == "auto":
             sched_p = simulate(rdfg, assignment, pipelining=True, **sim_kw)
             sched_n = simulate(rdfg, assignment, pipelining=False, **sim_kw)
@@ -536,6 +641,7 @@ class MafiaCompiler:
             rewrite_result=rw,
             pf_source=pf_source,
             chain_split_bytes=self.chain_split_bytes,
+            cost_source=self.cost_source,
         )
         if art_key is not None:
             # publish for the fleet: the next fresh process cold-starts here

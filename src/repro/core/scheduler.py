@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Callable, Sequence
 
 from repro.core import node_types
 from repro.core.constraints import PFGroups
@@ -86,24 +87,44 @@ def _reentrant(dfg: DFG, mem: set[str]) -> bool:
     return False
 
 
-def _node_cycles(dfg: DFG, nid: str, assignment: dict[str, int]) -> float:
+def _node_cycles(dfg: DFG, nid: str, assignment: dict[str, int],
+                 node_cost: Callable | None = None) -> float:
     node = dfg.nodes[nid]
+    if node_cost is not None:
+        return float(node_cost(node, assignment[nid]))
     return node_types.get(node.op).cycles(node.dims, assignment[nid])
 
 
-def _pipelined_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int]) -> float:
+def _chain_cost_of(dfg: DFG, sub: Sequence[str], assignment: dict[str, int],
+                   node_cost: Callable | None,
+                   chain_cost: Callable | None) -> float:
+    """Cost of one fused sub-chain: the measured ``chain_cost`` override
+    when installed (one launch regardless of PF), else the paper's
+    pipeline model over the (possibly overridden) per-node costs."""
+    if chain_cost is not None:
+        return float(chain_cost([dfg.nodes[nid] for nid in sub],
+                                [assignment[nid] for nid in sub]))
+    stage = [max(0.0, _node_cycles(dfg, nid, assignment, node_cost) - _FILL)
+             for nid in sub]
+    return max(stage) + _FILL * len(sub)
+
+
+def _pipelined_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int],
+                      node_cost: Callable | None = None,
+                      chain_cost: Callable | None = None) -> float:
     """Super-node latency: elements stream through all stages concurrently —
     bottleneck stage's streaming time + per-stage fill.  A stage shorter than
     its own fill overhead streams for 0 cycles, never a negative number (a
     negative bottleneck would understate the cluster below its fill total)."""
-    stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL) for nid in cluster]
-    return max(stage) + _FILL * len(cluster)
+    return _chain_cost_of(dfg, cluster, assignment, node_cost, chain_cost)
 
 
 def _decomposed_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int],
                        split_bytes: float | None,
                        topo_idx: dict[str, int],
-                       succ: dict[str, list[str]]) -> float:
+                       succ: dict[str, list[str]],
+                       node_cost: Callable | None = None,
+                       chain_cost: Callable | None = None) -> float:
     """Pipelined-cluster latency under the *same* structural decomposition
     the chain-decompose pass lowers (``decompose_chains=True``): each grown
     chain — after cost-guided splitting — is one pipeline (bottleneck
@@ -125,11 +146,10 @@ def _decomposed_cycles(dfg: DFG, cluster: list[str], assignment: dict[str, int],
     for kind, subs in units:
         for sub in subs:
             if kind == "node":
-                dur = _node_cycles(dfg, sub[0], assignment)
+                dur = _node_cycles(dfg, sub[0], assignment, node_cost)
             else:
-                stage = [max(0.0, _node_cycles(dfg, nid, assignment) - _FILL)
-                         for nid in sub]
-                dur = max(stage) + _FILL * len(sub)
+                dur = _chain_cost_of(dfg, sub, assignment,
+                                     node_cost, chain_cost)
             ai = len(atoms)
             atoms.append((tuple(sub), dur))
             for nid in sub:
@@ -158,6 +178,8 @@ def simulate(
     groups: PFGroups | None = None,
     decompose_chains: bool = False,
     chain_split_bytes: float | None = None,
+    node_cost: Callable | None = None,
+    chain_cost: Callable | None = None,
 ) -> Schedule:
     """Cycle-level discrete-event model of the data-flow controller.
 
@@ -166,7 +188,14 @@ def simulate(
     ``chain_split_bytes`` — that the lowering pipeline emits for the
     executor, so the simulated latency matches the chain-split plan (the
     compiler sets this whenever the fused Pallas path is active).  The
-    default keeps the paper's single-pipeline §IV-G model."""
+    default keeps the paper's single-pipeline §IV-G model.
+
+    ``node_cost(node, pf)`` / ``chain_cost(nodes, pfs)`` override the
+    template cycle model with measured costs (profile-guided mode): direct
+    nodes are priced by ``node_cost`` and each fused sub-chain by
+    ``chain_cost`` — the event-driven controller itself is unchanged, only
+    the unit durations (and hence the schedule's *units*: µs instead of
+    cycles) come from the calibration."""
     groups = groups or PFGroups.build(dfg)
     clusters = pipeline_clusters(dfg, groups, assignment) if pipelining else []
     cluster_of: dict[str, int] = {}
@@ -205,9 +234,11 @@ def simulate(
         if len(mem) > 1:
             if decompose_chains:
                 return _decomposed_cycles(dfg, mem, assignment,
-                                          chain_split_bytes, _topo_idx, _succ)
-            return _pipelined_cycles(dfg, mem, assignment)
-        return _node_cycles(dfg, mem[0], assignment)
+                                          chain_split_bytes, _topo_idx, _succ,
+                                          node_cost, chain_cost)
+            return _pipelined_cycles(dfg, mem, assignment,
+                                     node_cost, chain_cost)
+        return _node_cycles(dfg, mem[0], assignment, node_cost)
 
     def atom_preds(ai: int) -> set[int]:
         _, mem = atoms[ai]

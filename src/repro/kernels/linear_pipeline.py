@@ -33,14 +33,38 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.ref import Stage, apply_stage_q
 
-__all__ = ["fused_linear_chain", "fused_linear_chain_q", "chain_vmem_bytes"]
+__all__ = ["fused_linear_chain", "fused_linear_chain_q", "chain_vmem_bytes",
+           "set_tuned_tiles", "tuned_tiles"]
 
 DEFAULT_BB = 256   # batch tile
 DEFAULT_BN = 512   # feature tile (VPU lane-friendly multiple of 128)
 
+# Device-class tile override, installed by the autotuner (ROADMAP item 4):
+# ``MafiaCompiler(autotune=True)`` calls :func:`set_tuned_tiles` with the
+# sweep winner from the calibration table, and every call site that omits
+# bb/bn (the executor, the vmem-budget model) picks it up.  Tiling never
+# changes per-element arithmetic, so swapping tiles is bitwise-neutral.
+_TUNED: dict[str, int] = {}
 
-def chain_vmem_bytes(n: int, n_vec: int, n_arr: int, *, bb: int = DEFAULT_BB,
-                     bn: int = DEFAULT_BN, itemsize: int = 4) -> int:
+
+def set_tuned_tiles(bb: int | None = None, bn: int | None = None) -> None:
+    """Install (or with both None, clear) the process-wide tuned tile sizes
+    used when a chain call does not pass ``bb``/``bn`` explicitly."""
+    _TUNED.clear()
+    if bb is not None:
+        _TUNED["bb"] = int(bb)
+    if bn is not None:
+        _TUNED["bn"] = int(bn)
+
+
+def tuned_tiles() -> tuple[int, int]:
+    """The effective default ``(bb, bn)`` — tuned override or the builtins."""
+    return _TUNED.get("bb", DEFAULT_BB), _TUNED.get("bn", DEFAULT_BN)
+
+
+def chain_vmem_bytes(n: int, n_vec: int, n_arr: int, *,
+                     bb: int | None = None, bn: int | None = None,
+                     itemsize: int = 4) -> int:
     """Peak VMEM bytes one fused-chain launch keeps resident, mirroring
     :func:`_tiled_chain_call`'s tiling: the stream tile, the output tile and
     one ``(bb, bn)`` tile per ``*_arr`` extra, plus one ``(1, bn)`` row per
@@ -48,6 +72,9 @@ def chain_vmem_bytes(n: int, n_vec: int, n_arr: int, *, bb: int = DEFAULT_BB,
     use fewer rows; the splitter budgets for the worst case).  This is the
     unit the cost-guided chain splitter's ``chain_split_bytes`` budget is
     expressed in."""
+    tb, tn = tuned_tiles()
+    bb = tb if bb is None else bb
+    bn = tn if bn is None else bn
     bn_eff = min(bn, max(128, 1 << max(0, int(n) - 1).bit_length()))
     return (2 + n_arr) * bb * bn_eff * itemsize + n_vec * bn_eff * itemsize
 
@@ -69,13 +96,17 @@ def _tiled_chain_call(
     arrs: Sequence[jax.Array],
     kernel,
     *,
-    bb: int,
-    bn: int,
+    bb: int | None,
+    bn: int | None,
     interpret: bool | None,
 ) -> jax.Array:
     """Shared scaffolding of both chain kernels: flatten leading axes onto
     the batch grid axis, round tiles, pad, launch, crop.  ``vecs`` are
-    (n,)-broadcast operands, ``arrs`` are full arrays shaped like ``x``."""
+    (n,)-broadcast operands, ``arrs`` are full arrays shaped like ``x``.
+    ``bb``/``bn`` of None resolve to the tuned (or builtin) defaults."""
+    tb, tn = tuned_tiles()
+    bb = tb if bb is None else bb
+    bn = tn if bn is None else bn
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     x = jnp.asarray(x)
@@ -136,8 +167,8 @@ def fused_linear_chain(
     stages: Sequence[Stage],
     extras: Sequence[jax.Array] = (),
     *,
-    bb: int = DEFAULT_BB,
-    bn: int = DEFAULT_BN,
+    bb: int | None = None,
+    bn: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Apply a linear-time stage chain to ``x`` in one fused kernel.
@@ -188,8 +219,8 @@ def fused_linear_chain_q(
     extras: Sequence[jax.Array] = (),
     *,
     bits: int = 8,
-    bb: int = DEFAULT_BB,
-    bn: int = DEFAULT_BN,
+    bb: int | None = None,
+    bn: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Apply a quantized stage chain to the fixed-point stream ``x`` in one

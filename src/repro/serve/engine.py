@@ -18,6 +18,14 @@ per batched decode (active slots = occupancy, wall time around the forward
 = device seconds, so ``served`` counts generated tokens — the decode tier's
 unit of work) and one ``record_request`` per retirement (submit→finish
 latency feeds p50/p99).
+
+Admission runs through the shared
+:class:`~repro.serve.scheduling.AdmissionQueue` (the classical async
+tier's primitive): ``queue_limit`` turns overflow into ``QueueFull``
+backpressure, and two SLO *classes* report separately — **prefill**
+(time-to-first-token, deadline stamped at submit) via ``metrics_prefill``
+and **decode** (full completion) via ``metrics_decode`` — while the
+aggregate ``metrics`` surface stays exactly as before.
 """
 
 from __future__ import annotations
@@ -38,7 +46,7 @@ from repro.models.transformer import (
     init_cache,
 )
 from repro.serve.metrics import ServeMetrics
-from repro.serve.scheduling import SlotPool, bucket_for
+from repro.serve.scheduling import AdmissionQueue, SlotPool, bucket_for
 
 __all__ = ["ServeEngine", "Request"]
 
@@ -53,10 +61,21 @@ class Request:
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int | None = None
     t_submit: float = 0.0
+    # prefill-class SLO deadline (absolute monotonic seconds): the instant
+    # by which the first token must be sampled.  Also what the shared
+    # AdmissionQueue's ``due``/``next_due_in`` bookkeeping reads.
+    deadline: float | None = None
+    t_first_token: float | None = None
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit → first-token latency (the prefill-class SLO unit)."""
+        return (None if self.t_first_token is None
+                else self.t_first_token - self.t_submit)
 
 
 class ServeEngine:
@@ -71,12 +90,27 @@ class ServeEngine:
         seed: int = 0,
         mesh: Any | None = None,
         plan: Any | None = None,
+        prefill_slo_s: float | None = None,
+        decode_slo_s: float | None = None,
+        queue_limit: int | None = None,
     ) -> None:
         """``mesh``/``plan`` (from :func:`repro.sharding.planner.plan_for`
         with ``mode="decode"``) turn the engine distributed: params live on
         the plan's shardings, the cache pytree on the plan's cache specs,
         and both jit'd step functions carry explicit in/out shardings — the
-        same layout the decode_32k dry-run cells prove out."""
+        same layout the decode_32k dry-run cells prove out.
+
+        ``prefill_slo_s`` / ``decode_slo_s`` are the two token-tier SLO
+        classes served off the shared :class:`AdmissionQueue` (the same
+        primitive the classical async tier schedules against): the prefill
+        class is time-to-first-token (submit → first sampled token — queue
+        wait plus one prefill), the decode class is full completion
+        (submit → last token).  Each class reports through its own
+        :class:`ServeMetrics` (``metrics_prefill`` / ``metrics_decode``,
+        with per-class ``slo_misses``); the aggregate ``metrics`` surface
+        is unchanged.  ``queue_limit`` bounds admission — ``submit``
+        raises :class:`~repro.serve.scheduling.QueueFull` beyond it, the
+        same backpressure contract as the async classical tier."""
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
@@ -109,10 +143,16 @@ class ServeEngine:
         self.last_token = np.zeros(max_batch, np.int32)
         self._slots: dict[int, Request] = {}
         self._next_rid = 0
-        self._queue: list[Request] = []
+        # shared scheduling primitive: same bounded FIFO + deadline
+        # bookkeeping the classical async tier admits through
+        self._queue = AdmissionQueue(queue_limit)
         self._finished: list[Request] = []
         self._exact_prefill = cfg.family in ("ssm", "hybrid")
+        self.prefill_slo_s = prefill_slo_s
+        self.decode_slo_s = decode_slo_s
         self.metrics = ServeMetrics()
+        self.metrics_prefill = ServeMetrics()
+        self.metrics_decode = ServeMetrics()
 
     # ------------------------------------------------------------- jit fns
     @functools.cached_property
@@ -153,10 +193,12 @@ class ServeEngine:
                 f"prompt length {len(prompt)} >= engine max_len {self.max_len}")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
-        req = Request(self._next_rid, prompt, max_new_tokens,
-                      t_submit=time.monotonic())
+        now = time.monotonic()
+        req = Request(self._next_rid, prompt, max_new_tokens, t_submit=now,
+                      deadline=(None if self.prefill_slo_s is None
+                                else now + self.prefill_slo_s))
+        self._queue.push(req)      # QueueFull propagates as backpressure
         self._next_rid += 1
-        self._queue.append(req)
         return req.rid
 
     def _free_slots(self) -> list[int]:
@@ -205,14 +247,27 @@ class ServeEngine:
         req.slot = slot
         req.tokens.append(first)
         self._slots[slot] = req
+        # prefill SLO class: the first token was just sampled — TTFT is
+        # queue wait + this prefill, judged against the admission deadline
+        req.t_first_token = time.monotonic()
+        self.metrics_prefill.record_request(
+            req.ttft_s, t_submit=req.t_submit, t_done=req.t_first_token,
+            missed_slo=(req.deadline is not None
+                        and req.t_first_token > req.deadline))
 
     def _retire(self, slot: int, req: Request) -> None:
         now = time.monotonic()
         self.slots.release(slot)
         self._finished.append(req)
         del self._slots[slot]
-        self.metrics.record_request(now - req.t_submit,
+        latency = now - req.t_submit
+        self.metrics.record_request(latency,
                                     t_submit=req.t_submit, t_done=now)
+        # decode SLO class: full completion (submit → last token)
+        self.metrics_decode.record_request(
+            latency, t_submit=req.t_submit, t_done=now,
+            missed_slo=(self.decode_slo_s is not None
+                        and latency > self.decode_slo_s))
 
     # ----------------------------------------------------------------- step
     def step(self) -> dict[int, int]:
@@ -221,7 +276,8 @@ class ServeEngine:
         for slot in self._free_slots():
             if not self._queue:
                 break
-            self._insert(self._queue.pop(0), slot)
+            (req,) = self._queue.take(1)
+            self._insert(req, slot)
         # Retire requests already satisfied by prefill (max_new_tokens=1:
         # _insert sampled their one token) *before* decoding — the decode
         # loop skips done requests, so without this sweep their slots never

@@ -1,0 +1,237 @@
+"""Profile-guided compilation: microbenchmark harness, calibrated cost
+model, calibration-table persistence, and the ``cost_source`` compiler knob.
+
+The expensive end-to-end lanes (rank-correlation dominance, never-slower
+wall clock) live in ``benchmarks/estimation_error.py --measured`` and
+``benchmarks/fig3_latency.py --measured``; here we pin the contracts that
+must hold on any machine: persistence round-trips, device-class gating,
+version invalidation, analytic fallback, and the bitwise-identity of
+compiled outputs across cost sources and tuned tiles.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.classical import build
+from repro.core import artifacts
+from repro.core.artifacts import ArtifactError, ArtifactStore
+from repro.core.autotune import (
+    CalibratedCostModel,
+    CalibrationTable,
+    MicrobenchSample,
+    bench_op,
+    device_class,
+    dims_bucket,
+    profile_device,
+)
+from repro.core.compiler import MafiaCompiler
+from repro.core.executor import build_callable
+
+# A restricted quick profile: three ops, no megakernel segment bench.
+# ~2 s total; shared across the module via the fixture below.
+_OPS = ("gemv", "add", "relu")
+
+
+@pytest.fixture(scope="module")
+def table():
+    return profile_device(quick=True, ops=_OPS, include_segments=False,
+                          reps=2)
+
+
+@pytest.fixture(scope="module")
+def model(table):
+    return CalibratedCostModel.fit(table)
+
+
+# --------------------------------------------------------------- harness
+def test_bench_op_sample_key():
+    s = bench_op("add", {"n": 400}, reps=1, warmup=0)
+    assert s.op == "add" and s.exec_mode == "op"
+    assert s.device_class == device_class()
+    assert s.dims_bucket == dims_bucket({"n": 400}) == (("n", 512),)
+    assert s.wall_us > 0 and s.work_cycles > 0
+
+
+def test_profile_device_covers_requested_ops(table):
+    ops = {s.op for s in table.samples}
+    assert set(_OPS) <= ops
+    assert "__chain__" in ops                 # include_chains default
+    assert "__segment__" not in ops           # include_segments=False
+    assert all(s.device_class == table.device_class for s in table.samples)
+
+
+# ---------------------------------------------------------- fitted model
+def test_calibrated_model_units_and_fallback(table, model):
+    assert model.device_class == table.device_class
+    assert model.table_digest == table.digest()
+    # measured ops get their own fit; unmeasured ops fall back to the
+    # global µs-per-cycle fit so every compared latency is in one unit
+    assert "gemv" in model.op_fit
+    assert "matmul" not in model.op_fit
+    assert model._fit_for("matmul") == model.global_fit
+    assert model.lat1_us("matmul", 100.0) >= 0.0
+    # latency must stay monotone in work for measured ops too
+    assert model.lat1_us("gemv", 2000.0) >= model.lat1_us("gemv", 100.0)
+    # the analytic PF-curve coefficients survive (blackbox Best-PF reads
+    # these arrays) — full op coverage, not just the measured subset
+    from repro.core.cost_model import default_bank
+
+    assert set(model.estimators) == set(default_bank().estimators)
+
+
+def test_chain_cost_charges_one_launch(table, model):
+    dfg, _, _ = build("bonsai/usps-b")
+    nodes = [n for n in dfg.nodes.values() if n.op in _OPS][:3] or list(
+        dfg.nodes.values())[:3]
+    one = model.chain_us(nodes[:1], [1])
+    three = model.chain_us(nodes[:3], [1, 1, 1])
+    # launch overhead is charged once: a 3-stage chain costs far less
+    # than three 1-stage launches
+    assert three < 3 * one
+
+
+# ------------------------------------------------------------ persistence
+def test_calibration_store_round_trip(tmp_path, table):
+    store = ArtifactStore(tmp_path)
+    store.save_calibration(table)
+    back = store.load_calibration(table.device_class)
+    assert back is not None
+    assert back.device_class == table.device_class
+    assert back.digest() == table.digest()
+    assert len(back.samples) == len(table.samples)
+    assert back.samples[0] == table.samples[0]    # frozen dataclass equality
+    assert back.knobs == table.knobs
+
+
+def test_calibration_store_device_class_mismatch_is_a_miss(tmp_path, table):
+    store = ArtifactStore(tmp_path)
+    store.save_calibration(table)
+    assert store.load_calibration("tpu:v9") is None
+    assert store.load_calibration(table.device_class) is not None
+
+
+def test_calibration_version_bump_invalidates(tmp_path, table, monkeypatch):
+    path = tmp_path / "calib.mafia-calib"
+    store = ArtifactStore(tmp_path)
+    artifacts.save_calibration(table, path)
+    store.save_calibration(table)
+    assert artifacts.load_calibration(path).digest() == table.digest()
+    monkeypatch.setattr(artifacts, "CALIBRATION_VERSION",
+                        artifacts.CALIBRATION_VERSION + 1)
+    with pytest.raises(ArtifactError, match="version"):
+        artifacts.load_calibration(path)
+    # the store treats the stale file as a miss, not an error
+    assert store.load_calibration(table.device_class) is None
+
+
+def test_calibration_corruption_detected(tmp_path, table):
+    path = tmp_path / "calib.mafia-calib"
+    artifacts.save_calibration(table, path)
+    blob = path.read_bytes()
+    path.write_bytes(blob[:-7] + bytes(7))
+    with pytest.raises(ArtifactError):
+        artifacts.load_calibration(path)
+
+
+def test_calibration_survives_program_lru_sweep(tmp_path, table):
+    """The .mafia-calib file must escape the program-artifact LRU sweep."""
+    store = ArtifactStore(tmp_path, max_bytes=1)   # evict every program
+    store.save_calibration(table)
+    dfg, _, _ = build("bonsai/usps-b")
+    MafiaCompiler(use_pallas=True, artifact_store=store).compile(dfg)
+    assert store.load_calibration(table.device_class) is not None
+
+
+# --------------------------------------------------------- compiler knob
+def test_measured_mode_falls_back_on_device_mismatch(table):
+    foreign = dataclasses.replace(table, device_class="fpga:zcu104")
+    comp = MafiaCompiler(use_pallas=True, cost_source="measured",
+                         calibration=foreign)
+    assert comp.cost_source == "analytic"
+    assert comp.calibrated is None
+
+
+def test_cost_source_validated():
+    with pytest.raises(ValueError, match="cost_source"):
+        MafiaCompiler(cost_source="vibes")
+
+
+def test_cost_sources_bitwise_identical_outputs(model):
+    """PF assignment and schedule may differ under the measured model, but
+    the emitted numerics must not: cost is compile-time metadata only."""
+    dfg_a, _, _ = build("bonsai/usps-b")
+    dfg_m, _, _ = build("bonsai/usps-b")
+    pa = MafiaCompiler(use_pallas=True).compile(dfg_a)
+    pm = MafiaCompiler(use_pallas=True, cost_source="measured",
+                       calibration=model).compile(dfg_m)
+    assert pa.cost_source == "analytic" and pm.cost_source == "measured"
+    # measured schedule totals are µs, surfaced unconverted
+    assert pm.latency_us == pm.schedule.total_cycles
+    fa = build_callable(pa.dfg, plan=pa.plan, mode="interpret", jit=False)
+    fm = build_callable(pm.dfg, plan=pm.plan, mode="interpret", jit=False)
+    (gi, spec), = pa.dfg.graph_inputs.items()
+    x = np.random.default_rng(0).standard_normal(
+        tuple(spec.shape)).astype(np.float32)
+    oa, om = fa(**{gi: x}), fm(**{gi: x})
+    assert set(oa) == set(om)
+    for k in oa:
+        np.testing.assert_array_equal(np.asarray(oa[k]), np.asarray(om[k]))
+
+
+def test_measured_mode_artifact_key_disjoint(tmp_path, model):
+    """Analytic and measured compiles of one DFG must not collide in the
+    artifact store — the key carries cost_source + table digest."""
+    store = ArtifactStore(tmp_path)
+    dfg, _, _ = build("protonn/usps-b")
+    MafiaCompiler(use_pallas=True, artifact_store=store).compile(dfg)
+    dfg2, _, _ = build("protonn/usps-b")
+    comp = MafiaCompiler(use_pallas=True, cost_source="measured",
+                         calibration=model, artifact_store=store)
+    prog = comp.compile(dfg2)
+    assert store.misses == 2                  # no false hit across sources
+    assert prog.cost_source == "measured"
+
+
+def test_program_round_trip_preserves_cost_source(tmp_path, model):
+    dfg, _, _ = build("bonsai/usps-b")
+    prog = MafiaCompiler(use_pallas=True, cost_source="measured",
+                         calibration=model).compile(dfg)
+    path = tmp_path / "prog.mafia"
+    artifacts.save_program(prog, path)
+    back = artifacts.load_program(path)
+    assert back.cost_source == "measured"
+
+
+def test_chain_split_auto_resolves_from_knobs(table):
+    tuned = dataclasses.replace(
+        table, knobs={**table.knobs, "chain_split_bytes": 123456,
+                      "bb": 256, "bn": 512})
+    comp = MafiaCompiler(use_pallas=True, cost_source="measured",
+                         calibration=tuned, chain_split_bytes="auto")
+    assert comp.chain_split_bytes == 123456
+
+
+# ------------------------------------------------------------ tuned tiles
+def test_tuned_tiles_bitwise_neutral():
+    """Tile sizes partition work, never change per-element arithmetic."""
+    from repro.kernels.linear_pipeline import (
+        fused_linear_chain,
+        set_tuned_tiles,
+        tuned_tiles,
+    )
+
+    x = np.random.default_rng(0).standard_normal(400).astype(np.float32)
+    stages = (("relu", None), ("scalar_mul", 1.5), ("sigmoid", None))
+    ref = np.asarray(fused_linear_chain(x, stages))
+    try:
+        set_tuned_tiles(128, 256)
+        assert tuned_tiles() == (128, 256)
+        out = np.asarray(fused_linear_chain(x, stages))
+    finally:
+        set_tuned_tiles()                     # reset to defaults
+    np.testing.assert_array_equal(ref, out)
+    from repro.kernels.linear_pipeline import DEFAULT_BB, DEFAULT_BN
+
+    assert tuned_tiles() == (DEFAULT_BB, DEFAULT_BN)

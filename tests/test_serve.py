@@ -137,6 +137,50 @@ def test_token_engine_reports_shared_metrics():
     assert eng.metrics.snapshot()["served"] == 0
 
 
+def test_token_engine_slo_classes():
+    """Prefill (TTFT) and decode (completion) SLO classes report through
+    separate ServeMetrics on the shared AdmissionQueue, without changing
+    the aggregate surface."""
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=2, max_len=64,
+                               prefill_slo_s=30.0, decode_slo_s=30.0)
+    rids = [eng.submit([1 + i, 2, 3], max_new_tokens=3) for i in range(4)]
+    assert all(r.deadline is not None for r in eng._queue._items)
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == rids
+    # one prefill-class record per admitted request, one decode-class per
+    # retirement; generous SLOs → no misses
+    assert len(eng.metrics_prefill._latencies) == 4
+    assert len(eng.metrics_decode._latencies) == 4
+    assert eng.metrics_prefill.snapshot()["slo_misses"] == 0
+    assert eng.metrics_decode.snapshot()["slo_misses"] == 0
+    # TTFT (queue wait + one prefill) never exceeds completion latency
+    for r in done:
+        assert r.ttft_s is not None
+        assert r.t_first_token <= eng.metrics_decode.t_last
+    # aggregate surface unchanged
+    assert len(eng.metrics._latencies) == 4
+
+
+def test_token_engine_slo_misses_and_backpressure():
+    """Impossible deadlines count per class; a bounded queue rejects."""
+    from repro.serve.scheduling import QueueFull
+
+    cfg, params, eng = _engine("qwen2.5-3b", max_batch=1, max_len=64,
+                               prefill_slo_s=0.0, decode_slo_s=0.0,
+                               queue_limit=2)
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.submit([4, 5, 6], max_new_tokens=2)
+    with pytest.raises(QueueFull):
+        eng.submit([7, 8, 9], max_new_tokens=2)
+    assert eng._queue.rejected == 1
+    done = eng.run_to_completion()
+    assert len(done) == 2                       # the rejected one never ran
+    assert eng.metrics_prefill.snapshot()["slo_misses"] == 2
+    assert eng.metrics_decode.snapshot()["slo_misses"] == 2
+    # aggregate metrics never count class-level misses
+    assert eng.metrics.snapshot()["slo_misses"] == 0
+
+
 def test_engine_with_mesh_plan_single_device():
     """Distributed-serving path exercised on a 1×1 mesh (same code path a
     pod uses; the decode_32k dry-run cells prove the 256/512-chip layouts)."""
