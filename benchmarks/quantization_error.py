@@ -11,14 +11,25 @@ output row) with its gain over per-tensor int8.  A second section measures
 batched serving throughput (requests/sec through
 :class:`ClassicalServeEngine`) at both precisions.
 
+A third section covers the ONNX frontend's MLPerf-Tiny-shaped workloads
+(``repro.configs.mlperf_tiny``): each fixture compiles at float32 and int8
+(per-tensor and per-channel) and reports label agreement against the float32
+teacher.  The int8 accuracy-drop gate extends to these rows — a drop above
+``_ONNX_GATE`` fails the script (non-zero exit), so CI catches a regression
+in the tensor-op quantized templates, not just the classical vector lane.
+
     PYTHONPATH=src python benchmarks/quantization_error.py
     PYTHONPATH=src python benchmarks/quantization_error.py --quick   # 4 benches
+    PYTHONPATH=src python benchmarks/quantization_error.py \
+        --onnx-only --json quantization_error.json   # CI nightly artifact
 
-Expected: ≤ 2% absolute accuracy drop on every benchmark (typically ≤ 1%).
+Expected: ≤ 2% absolute accuracy drop on every benchmark (typically ≤ 1%);
+≤ 1.5% on the ONNX workloads (hard gate).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 import numpy as np
@@ -34,16 +45,19 @@ from repro.data.datasets import make_dataset
 from repro.models import bonsai, protonn
 
 try:                          # shared engine-throughput measurement protocol
-    from benchmarks.serve_throughput import _engine_rps
+    from benchmarks.serve_throughput import _engine_row
 except ImportError:           # run as a script: benchmarks/ is sys.path[0]
-    from serve_throughput import _engine_rps
+    from serve_throughput import _engine_row
 
-__all__ = ["run"]
+__all__ = ["run", "run_onnx"]
 
 _N_TEST = 512
 _SERVE_BENCH = "bonsai/usps-b"
 _SERVE_BATCH = 64
 _SERVE_REQUESTS = 256
+_ONNX_EVAL = 256
+_ONNX_CALIB = 128
+_ONNX_GATE = 0.015  # ≤1.5% absolute drop vs the float32 teacher
 
 
 def _accuracy_row(bench: ClassicalBenchmark, trained: bool) -> str:
@@ -75,11 +89,56 @@ def _accuracy_row(bench: ClassicalBenchmark, trained: bool) -> str:
 
 def _serve_rps(precision: str, mode: str) -> float:
     _, _, X, _ = make_dataset("usps-b", n_train=64, n_test=_SERVE_REQUESTS)
-    return _engine_rps(_SERVE_BENCH, X, _SERVE_BATCH, mode, precision)
+    return float(_engine_row(_SERVE_BENCH, X, _SERVE_BATCH, mode,
+                             precision)["rps"])
+
+
+def run_onnx() -> tuple[list[str], list[dict]]:
+    """ONNX MLPerf-Tiny workload rows: int8 label agreement vs the float32
+    teacher at per-tensor and per-channel scales, gated at ``_ONNX_GATE``.
+
+    Returns the CSV lines plus one JSON-able record per workload (consumed
+    by ``--json`` for the CI artifact).
+    """
+    from repro.configs import mlperf_tiny as mt
+
+    lines = ["quant.onnx.workload,acc_int8,drop_int8,"
+             "acc_int8_perchannel,drop_perchannel,gate"]
+    records: list[dict] = []
+    for name in mt.WORKLOADS:
+        dfg = mt.build(name)
+        teacher = MafiaCompiler(use_pallas=True).compile(dfg)
+        x = mt.sample_inputs(name, _ONNX_EVAL)
+        labels = mt.teacher_labels(teacher, x)
+        calib = mt.sample_inputs(name, _ONNX_CALIB, seed=7)
+        acc: dict[str, float] = {}
+        for key, pc in (("int8", False), ("int8_pc", True)):
+            p8 = MafiaCompiler(use_pallas=True, precision="int8",
+                               per_channel=pc).compile(
+                dfg, calib={"input": calib})
+            pred = np.asarray(list(p8.batch(_SERVE_BATCH, mode="map")(
+                input=x).values())[0]).argmax(-1)
+            acc[key] = float((pred == labels).mean())
+        drop, drop_pc = 1.0 - acc["int8"], 1.0 - acc["int8_pc"]
+        passed = drop <= _ONNX_GATE and drop_pc <= _ONNX_GATE
+        lines.append(f"quant.onnx.{name},{acc['int8']:.4f},{drop:+.4f},"
+                     f"{acc['int8_pc']:.4f},{drop_pc:+.4f},"
+                     f"{'pass' if passed else 'FAIL'}")
+        records.append({
+            "workload": name,
+            "n_eval": _ONNX_EVAL,
+            "acc_int8": acc["int8"],
+            "drop_int8": drop,
+            "acc_int8_perchannel": acc["int8_pc"],
+            "drop_perchannel": drop_pc,
+            "max_drop": _ONNX_GATE,
+            "pass": passed,
+        })
+    return lines, records
 
 
 def run(benches: list[ClassicalBenchmark] | None = None,
-        trained: bool = True) -> list[str]:
+        trained: bool = True, onnx: bool = True) -> list[str]:
     out = ["quant.benchmark,acc_float32,acc_int8,delta_abs,agreement,"
            "acc_int8_perchannel,perchannel_gain"]
     for bench in (benches or BENCHMARKS):
@@ -89,9 +148,40 @@ def run(benches: list[ClassicalBenchmark] | None = None,
         for mode in ("vmap", "map"):
             rps = _serve_rps(precision, mode)
             out.append(f"quant.serve,{precision},{mode},{_SERVE_BATCH},{rps:.0f}")
+    if onnx:
+        out.extend(run_onnx()[0])
     return out
 
 
+def _main(argv: list[str]) -> int:
+    quick = "--quick" in argv
+    onnx_only = "--onnx-only" in argv
+    json_path = None
+    if "--json" in argv:
+        json_path = argv[argv.index("--json") + 1]
+
+    onnx_lines, onnx_records = run_onnx()
+    if onnx_only:
+        lines = onnx_lines
+    else:
+        lines = run(benches=BENCHMARKS[:4] if quick else None, onnx=False)
+        lines += onnx_lines
+    print("\n".join(lines))
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"rows": lines, "onnx": onnx_records,
+                       "gate": {"max_drop": _ONNX_GATE,
+                                "pass": all(r["pass"] for r in onnx_records)}},
+                      fh, indent=2)
+        print(f"# wrote {json_path}")
+
+    if not all(r["pass"] for r in onnx_records):
+        print(f"# ONNX int8 gate FAILED (max drop {_ONNX_GATE:.3f})",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    quick = "--quick" in sys.argv
-    print("\n".join(run(benches=BENCHMARKS[:4] if quick else None)))
+    raise SystemExit(_main(sys.argv[1:]))

@@ -117,6 +117,22 @@ class CalibrationTable:
     knobs: dict[str, Any] = dataclasses.field(default_factory=dict)
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self) -> None:
+        # creation stamp — MafiaCompiler(max_age_days=...) gates on it; a
+        # loaded table keeps the stamp it was saved with (meta round-trips
+        # through save_calibration/load_calibration), and the stamp stays
+        # out of digest() so artifact keys don't churn per run.
+        self.meta.setdefault("created_at", time.time())
+
+    @property
+    def created_at(self) -> float:
+        """Unix time the measurements were taken."""
+        return float(self.meta["created_at"])
+
+    def age_days(self, now: float | None = None) -> float:
+        now = time.time() if now is None else now
+        return max(0.0, (now - self.created_at) / 86400.0)
+
     def digest(self) -> str:
         import hashlib
 
@@ -155,7 +171,21 @@ def _op_case(op: str, dims: dict[str, int],
         return [f32(dims["n"])], {"scalar": 1.5}
     if op == "const":
         return [], {"value": f32(dims["n"])}
-    # unary elementwise + reductions + argmax
+    if op == "conv2d":
+        params: dict[str, Any] = {
+            "kernel": f32(dims["cout"], dims["cin"], dims["kh"], dims["kw"])}
+        if dims.get("bias"):
+            params["bias"] = f32(dims["cout"])
+        return [f32(dims["cin"], dims["h"], dims["w"])], params
+    if op in ("maxpool2d", "avgpool2d"):
+        return ([f32(dims["c"], dims["h"], dims["w"])],
+                {"ksize": (dims["kh"], dims["kw"])})
+    if op == "layernorm":
+        return [f32(dims["n"])], {"gamma": f32(dims["n"]),
+                                  "beta": f32(dims["n"])}
+    if op == "reshape":
+        return [f32(dims["n"])], {"shape": (dims["n"],)}
+    # unary elementwise (relu6/softmax/flatten included) + reductions + argmax
     return [f32(dims["n"])], {}
 
 
@@ -361,6 +391,7 @@ class CalibratedCostModel(EstimatorBank):
     segment_fit: tuple[float, float] = (0.0, 0.0)  # (launch_us, per_instr_us)
     knobs: dict[str, Any] = dataclasses.field(default_factory=dict)
     table_digest: str = ""
+    created_at: float = 0.0                   # source table's creation stamp
 
     @classmethod
     def fit(cls, table: CalibrationTable,
@@ -401,7 +432,8 @@ class CalibratedCostModel(EstimatorBank):
             device_class=table.device_class,
             op_fit=op_fit, global_fit=global_fit, chain_fit=chain_fit,
             segment_fit=segment_fit, knobs=dict(table.knobs),
-            table_digest=table.digest())
+            table_digest=table.digest(),
+            created_at=float(table.meta.get("created_at", 0.0)))
 
     # --------------------------------------------------------------- latency
     def _fit_for(self, op: str) -> tuple[float, float]:

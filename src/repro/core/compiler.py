@@ -25,6 +25,8 @@ the optimizer strategy/benefit metric (§VI-C).
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Callable
 
 from repro.core import node_types
@@ -246,6 +248,26 @@ class BatchedProgram:
         }
 
 
+# stale-calibration warnings fire once per table per process — a fleet of
+# compilers sharing one expired table should not spam N identical lines
+_STALE_CALIB_WARNED: set[str] = set()
+
+
+def _warn_stale_calibration(key: str, age_days: float,
+                            max_age_days: float) -> None:
+    if key in _STALE_CALIB_WARNED:
+        return
+    _STALE_CALIB_WARNED.add(key)
+    age = ("of unknown age (no created_at stamp)" if age_days == float("inf")
+           else f"{age_days:.1f} days old")
+    warnings.warn(
+        f"calibration table {key[:12]} is {age} (max_age_days="
+        f"{max_age_days:g}); measurements may no longer reflect the device "
+        "— falling back to the analytic cost model. Re-run "
+        "repro.core.autotune.profile_device() to refresh.",
+        UserWarning, stacklevel=3)
+
+
 class MafiaCompiler:
     def __init__(
         self,
@@ -268,6 +290,7 @@ class MafiaCompiler:
         cost_source: str = "analytic",
         autotune: bool = False,
         calibration: Any | None = None,
+        max_age_days: float | None = 30.0,
     ) -> None:
         """``precision="int8"`` / ``"int16"`` emits the fixed-point program
         the paper's SeeDot-lineage workloads actually run, at either
@@ -332,7 +355,14 @@ class MafiaCompiler:
         swept kernel knobs: the linear-pipeline ``(bb, bn)`` tile winner
         is installed process-wide, and ``chain_split_bytes="auto"``
         resolves to the swept split budget (falling back to the built-in
-        default when the table has no knob record)."""
+        default when the table has no knob record).
+
+        ``max_age_days`` bounds how old a calibration table may be before
+        its measurements stop being trusted: a table stamped (``meta
+        ["created_at"]``) more than ``max_age_days`` days ago — or one with
+        no stamp at all — is rejected with a once-per-process warning and
+        the compiler degrades to the analytic model, exactly as for a
+        device-class mismatch.  ``None`` disables the check."""
         if backend not in ("fpga", "tpu"):
             raise ValueError(f"unknown backend {backend!r}")
         if precision not in ("float32", "int8", "int16"):
@@ -358,6 +388,7 @@ class MafiaCompiler:
         self.artifact_store = artifact_store
         self.autotune = autotune
         self.cost_source = cost_source
+        self.max_age_days = max_age_days
         self.calibrated: Any | None = None
         if cost_source == "measured" or autotune:
             self._resolve_calibration(calibration)
@@ -397,6 +428,13 @@ class MafiaCompiler:
                 f"CalibratedCostModel or None, got {type(calibration)!r}")
         if model is not None and model.device_class != dev:
             model = None
+        if model is not None and self.max_age_days is not None:
+            age = ((time.time() - model.created_at) / 86400.0
+                   if model.created_at > 0.0 else float("inf"))
+            if age > self.max_age_days:
+                _warn_stale_calibration(model.table_digest or dev, age,
+                                        self.max_age_days)
+                model = None
         if model is None:
             # mismatched/unusable calibration: measured mode would price
             # this device with another device's numbers — refuse and fall

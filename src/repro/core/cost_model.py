@@ -104,6 +104,25 @@ _TRAIN_DIMS: dict[str, list[dict[str, int]]] = {
     "reduce_min": [{"n": 64}, {"n": 400}],
     "argmax": [{"n": 8}, {"n": 64}],
     "const": [{"n": 64}, {"n": 400}],
+    "conv2d": [
+        {"cout": 8, "cin": 1, "kh": 3, "kw": 3, "h": 28, "w": 28,
+         "hout": 26, "wout": 26},
+        {"cout": 16, "cin": 8, "kh": 3, "kw": 3, "h": 14, "w": 14,
+         "hout": 12, "wout": 12, "bias": 1},
+    ],
+    "maxpool2d": [
+        {"c": 8, "h": 26, "w": 26, "hout": 13, "wout": 13, "kh": 2, "kw": 2},
+        {"c": 16, "h": 12, "w": 12, "hout": 6, "wout": 6, "kh": 2, "kw": 2},
+    ],
+    "avgpool2d": [
+        {"c": 8, "h": 26, "w": 26, "hout": 13, "wout": 13, "kh": 2, "kw": 2},
+        {"c": 16, "h": 12, "w": 12, "hout": 6, "wout": 6, "kh": 2, "kw": 2},
+    ],
+    "relu6": [{"n": 64}, {"n": 512}],
+    "softmax": [{"n": 10}, {"n": 64}],
+    "layernorm": [{"n": 64}, {"n": 256}],
+    "flatten": [{"n": 256}, {"n": 1024}],
+    "reshape": [{"n": 256}, {"n": 1024}],
 }
 
 _PF_SWEEP_POINTS = 24

@@ -92,6 +92,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core import node_types
+from repro.core import shapes as shp
 from repro.core.dfg import DFG, Node
 
 __all__ = [
@@ -274,12 +275,75 @@ class ExecutionPlan:
                     raise AssertionError(
                         f"chain suppresses {nid!r} but it is consumed by "
                         f"{sorted(outside) or 'outputs'}")
+        # per-node shape audit: the declared out_shape rule must match what
+        # the float template actually produces — a mismatched rule surfaces
+        # here with the node named, instead of as a cryptic broadcast error
+        # deep inside the executor.
+        for nid in live:
+            node = self.dfg.nodes[nid]
+            declared = tuple(self.dfg.out_shape(nid))
+            actual = _template_out_shape(node, self.dfg.in_shapes(nid))
+            if actual is not None and actual != declared:
+                raise ValueError(
+                    f"node {nid!r} ({node.op}): declared out_shape "
+                    f"{declared} does not match the template's output "
+                    f"{actual}")
 
 
 def _resolve(alias: dict[str, str], ref: str) -> str:
     while ref in alias:
         ref = alias[ref]
     return ref
+
+
+_TEMPLATE_SHAPE_CACHE: dict[tuple, tuple | None] = {}
+
+
+def _param_sig(params: dict[str, Any]) -> tuple:
+    """Hashable abstract signature of a node's static params — scalar attrs
+    by value (they steer shapes: strides, paddings, reshape targets), arrays
+    by shape/dtype only (their values never do)."""
+    sig = []
+    for k in sorted(params):
+        v = params[k]
+        if isinstance(v, (int, float, bool, str)):
+            sig.append((k, v))
+        elif isinstance(v, (tuple, list)) and all(
+                isinstance(x, (int, float)) for x in v):
+            sig.append((k, tuple(v)))
+        else:
+            try:
+                a = np.asarray(v)
+                sig.append((k, "arr", tuple(a.shape), str(a.dtype)))
+            except Exception:
+                sig.append((k, "obj", type(v).__name__))
+    return tuple(sig)
+
+
+def _template_out_shape(node: Node, in_shapes: list) -> tuple | None:
+    """Output shape the node's float template actually produces, via
+    ``jax.eval_shape`` (abstract trace, no FLOPs).  Memoized on the node's
+    abstract signature so the plan-time audit costs one trace per distinct
+    layer shape per process, not one per compile (the nightly compile-time
+    gate budgets per-pass milliseconds).  Returns None when the template
+    cannot be traced from float32 placeholders (e.g. host-side params a
+    tracer cannot stand in for) — the audit then skips the node."""
+    key = (node.op, tuple(tuple(s) for s in in_shapes),
+           _param_sig(node.params))
+    if key in _TEMPLATE_SHAPE_CACHE:
+        return _TEMPLATE_SHAPE_CACHE[key]
+    import jax
+
+    spec = node_types.get(node.op)
+    try:
+        out = jax.eval_shape(
+            lambda *xs: spec.jax_fn(list(xs), node.params, node.dims),
+            *[jax.ShapeDtypeStruct(tuple(s), np.float32) for s in in_shapes])
+        shape: tuple | None = tuple(out.shape)
+    except Exception:
+        shape = None
+    _TEMPLATE_SHAPE_CACHE[key] = shape
+    return shape
 
 
 # ================================================================ front-end
@@ -896,6 +960,19 @@ def split_chain(dfg: DFG, chain: list[str], budget: float | None,
             + split_chain(dfg, chain[best_i:], budget, prev=chain[best_i - 1]))
 
 
+def _chainable(dfg: DFG, nid: str) -> bool:
+    """Stageable AND still shaped like the paper's ``(1, n)`` vectors.  The
+    fused pipeline kernel streams flat element vectors (vec operands are
+    reshaped ``(1, -1)``), so a rank>1 node — a conv output map, a pooled
+    feature plane — executes as a direct node instead of joining a chain:
+    the decomposition declines it cleanly rather than crashing the kernel."""
+    if dfg.nodes[nid].op not in STAGEABLE_OPS:
+        return False
+    return all(
+        shp.is_vector_like(s)
+        for s in (*dfg.in_shapes(nid), dfg.out_shape(nid)))
+
+
 def cluster_chains(
     dfg: DFG,
     members: list[str] | tuple[str, ...],
@@ -933,7 +1010,7 @@ def cluster_chains(
     while pending:
         head = next(n for n in pending if ready(n))
         pending.remove(n := head)
-        if dfg.nodes[n].op not in STAGEABLE_OPS:
+        if not _chainable(dfg, n):
             units.append(("node", ((n,),)))
             produced.add(n)
             continue
@@ -946,7 +1023,7 @@ def cluster_chains(
                 for s in succ.get(tail, [])
                 if s in mset
                 and s in pending
-                and dfg.nodes[s].op in STAGEABLE_OPS
+                and _chainable(dfg, s)
                 and all(
                     p == tail or (p not in mset) or (p in produced)
                     for p in dfg.nodes[s].inputs
@@ -1253,7 +1330,7 @@ def _decompose_atom(st: _Lowering, atom: tuple[str, ...],
     """Decompose a fused cluster into stage chains (one kernel launch each)
     plus direct steps, using the structural decomposition shared with the
     scheduler's latency model (:func:`cluster_chains`)."""
-    if not any(st.dfg.nodes[n].op in STAGEABLE_OPS for n in atom):
+    if not any(_chainable(st.dfg, n) for n in atom):
         topo = sorted(atom, key=topo_idx.__getitem__)
         return [_node_step(st, nid) for nid in topo]
     units = cluster_chains(st.dfg, atom, succ=st.succ, topo_idx=topo_idx,
@@ -1637,6 +1714,12 @@ def _pass_linearize(st: _Lowering, plan: ExecutionPlan) -> None:
             b.define(nid, width(nid))
             return True
         if op in STAGEABLE_OPS:
+            # the kernel streams flattened slots; a rank>1 elementwise node
+            # (tensor-shaped operands) islands instead — same policy as the
+            # chain decomposition's _chainable guard.
+            if not all(shp.is_vector_like(shape_of(r))
+                       for r in (*step.inputs, nid)):
+                return False
             extras: list[str] = []
             vecs: list[Any] = []
             low = (_lower_stage_q(st, nid, None, None, extras, vecs) if qz

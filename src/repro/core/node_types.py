@@ -46,6 +46,8 @@ from typing import Any, Callable, TYPE_CHECKING
 
 import numpy as np
 
+from repro.core import shapes as shp
+
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.dfg import DFG, Node
 
@@ -256,8 +258,7 @@ def _make_elementwise(
         shapes = dfg.in_shapes(node.id)
         if binary:
             other = node.params["vec"].shape if "vec" in node.params else shapes[1]
-            if tuple(other) != tuple(shapes[0]):
-                raise ValueError(f"{name}: shape mismatch {shapes[0]} vs {tuple(other)}")
+            return shp.elementwise_out(shapes[0], tuple(other))
         return shapes[0]
 
     def jax_fn(inputs: list[Any], params: dict[str, Any], dims: dict[str, int]) -> Any:
@@ -549,11 +550,9 @@ def _gemv_spec() -> OpSpec:
 
     def out_shape(dfg, node):
         (xs,) = dfg.in_shapes(node.id)
-        w = node.params["matrix"]
-        if _numel(xs) != w.shape[1]:
-            raise ValueError(f"gemv: matrix {w.shape} vs input {xs}")
+        out = shp.matvec_out(tuple(node.params["matrix"].shape), xs, op="gemv")
         _matvec_bias(dfg, node)
-        return (int(w.shape[0]),)
+        return out
 
     def jax_fn(inputs, params, dims):
         jnp = _jnp()
@@ -611,11 +610,10 @@ def _spmv_spec() -> OpSpec:
 
     def out_shape(dfg, node):
         (xs,) = dfg.in_shapes(node.id)
-        w = node.params["matrix"]
-        if _numel(xs) != w.shape[1]:
-            raise ValueError(f"spmv: matrix {w.shape} vs input {xs}")
+        out = shp.matvec_out(tuple(np.shape(node.params["matrix"])), xs,
+                             op="spmv")
         _matvec_bias(dfg, node)
-        return (int(w.shape[0]),)
+        return out
 
     def jax_fn(inputs, params, dims):
         jnp = _jnp()
@@ -663,9 +661,7 @@ def _matmul_spec() -> OpSpec:
 
     def out_shape(dfg, node):
         a, b = dfg.in_shapes(node.id)
-        if len(a) != 2 or len(b) != 2 or a[1] != b[0]:
-            raise ValueError(f"matmul: {a} @ {b}")
-        return (a[0], b[1])
+        return shp.matmul_out(a, b)
 
     def jax_fn(inputs, params, dims):
         return inputs[0] @ inputs[1]
@@ -769,6 +765,395 @@ def _sq_l2_spec() -> OpSpec:
 
 
 _sq_l2_spec()
+
+
+# ============================================== rank-polymorphic tensor ops
+# The MLPerf-Tiny workload class (KWS MLPs, small image-classification
+# CNNs): conv/pool/normalization templates whose ``out_shape`` rules carry
+# full tensors through :mod:`repro.core.shapes` — the same helper every
+# frontend uses — instead of the paper's implicit ``(1, n)`` vectors.
+# Integer variants keep the SeeDot discipline: narrow inputs, int32
+# accumulation, one static requantizing shift on write-back (per output
+# channel for conv when calibrated ``per_channel`` — the same per-row
+# machinery the matvec templates use).
+
+
+def _conv_attrs(params: dict[str, Any]) -> tuple[tuple[int, int], tuple[int, int]]:
+    return (shp.normalize_2d(params.get("stride", (1, 1)), "stride"),
+            shp.normalize_2d(params.get("padding", (0, 0)), "padding"))
+
+
+def _window_slices(x, kh: int, kw: int, sh: int, sw: int,
+                   ph: int, pw: int, pad_value):
+    """(C, H, W) -> (Kh*Kw, C, Hout, Wout) stack of strided window slices.
+    Static Python loop over the (small) window — each slice is one strided
+    view, so this jits to pure data movement (the FPGA template's line
+    buffers)."""
+    jnp = _jnp()
+    c, h, w = x.shape
+    hout = shp.window_out(h, kh, sh, ph)
+    wout = shp.window_out(w, kw, sw, pw)
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw)), constant_values=pad_value)
+    cols = [
+        x[:, i:i + (hout - 1) * sh + 1:sh, j:j + (wout - 1) * sw + 1:sw]
+        for i in range(kh) for j in range(kw)
+    ]
+    return jnp.stack(cols)
+
+
+def _im2col(x, kh: int, kw: int, sh: int, sw: int, ph: int, pw: int,
+            pad_value=0):
+    """(Cin, H, W) -> (Cin*Kh*Kw, Hout*Wout) patch matrix whose row order
+    matches ``kernel.reshape(Cout, -1)``'s (Cin, Kh, Kw) layout, so conv is
+    one matmul over patches — the same MAC array dataflow as the matvec
+    templates, which is what lets the integer variant reuse their
+    requantize-on-write machinery."""
+    pat = _window_slices(x, kh, kw, sh, sw, ph, pw, pad_value)
+    cin = pat.shape[1]
+    # (Kh*Kw, Cin, Hout, Wout) -> (Cin, Kh*Kw, Hout, Wout) -> flat
+    return pat.transpose(1, 0, 2, 3).reshape(cin * kh * kw, -1)
+
+
+def _q_conv2d(inputs, params, dims, nq):
+    """Integer conv2d: int8×int8 MACs accumulated in int32 over the im2col
+    matmul, optional bias on the accumulator, one requantizing shift per
+    output channel (per-channel scales) or per tensor on write-back."""
+    jnp = _jnp()
+    kq = jnp.asarray(nq.params_q["kernel"], jnp.int32)
+    cout, cin, kh, kw = kq.shape
+    (sh, sw), (ph, pw) = _conv_attrs(params)
+    cols = _im2col(jnp.asarray(inputs[0], jnp.int32), kh, kw, sh, sw, ph, pw)
+    acc = kq.reshape(cout, -1) @ cols            # (Cout, Hout*Wout) int32
+    if "bias" in nq.params_q:
+        acc = acc + jnp.asarray(nq.params_q["bias"], jnp.int32)[:, None]
+    hout = shp.window_out(inputs[0].shape[1], kh, sh, ph)
+    wout = shp.window_out(inputs[0].shape[2], kw, sw, pw)
+    e_k = nq.param_exps["kernel"]
+    if np.ndim(e_k):                             # per-channel row scales
+        from repro.core.quantize import requantize_rows
+
+        shifts = np.asarray(e_k, np.int64) + nq.in_exps[0] - nq.out_exp
+        out = requantize_rows(acc, shifts[:, None], nq.bits)
+    else:
+        out = _requantize(acc, int(e_k) + nq.in_exps[0] - nq.out_exp, nq.bits)
+    return out.reshape(cout, hout, wout)
+
+
+def _conv2d_spec() -> OpSpec:
+    """2-D convolution, NCHW per-sample: input (Cin, H, W), static
+    ``kernel`` (Cout, Cin, Kh, Kw), optional ``bias`` (Cout,), ``stride``/
+    ``padding`` int-or-pair attrs.  Lowered as a MAC array over im2col
+    patches — cost-wise a gemv of (Cout, Cin·Kh·Kw) against Hout·Wout
+    patch columns."""
+
+    def infer_dims(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        k = np.shape(node.params["kernel"])
+        stride, padding = _conv_attrs(node.params)
+        cout, hout, wout = shp.conv2d_out(xs, k, stride, padding)
+        d = {"cout": int(k[0]), "cin": int(k[1]), "kh": int(k[2]),
+             "kw": int(k[3]), "h": int(xs[1]), "w": int(xs[2]),
+             "hout": hout, "wout": wout}
+        if "bias" in node.params:
+            d["bias"] = 1
+        return d
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        stride, padding = _conv_attrs(node.params)
+        out = shp.conv2d_out(xs, np.shape(node.params["kernel"]),
+                             stride, padding)
+        if "bias" in node.params:
+            b = np.shape(node.params["bias"])
+            if b != (out[0],):
+                raise ValueError(f"conv2d: bias {b} vs ({out[0]},) channels")
+        return out
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        k = jnp.asarray(params["kernel"])
+        cout, cin, kh, kw = k.shape
+        (sh, sw), (ph, pw) = _conv_attrs(params)
+        cols = _im2col(inputs[0], kh, kw, sh, sw, ph, pw, pad_value=0.0)
+        out = k.reshape(cout, -1) @ cols
+        if "bias" in params:
+            out = out + jnp.asarray(params["bias"])[:, None]
+        hout = shp.window_out(inputs[0].shape[1], kh, sh, ph)
+        wout = shp.window_out(inputs[0].shape[2], kw, sw, pw)
+        return out.reshape(cout, hout, wout)
+
+    def work(d):
+        return d["cout"] * d["hout"] * d["wout"] * d["cin"] * d["kh"] * d["kw"]
+
+    def cycles(d, pf):
+        return math.ceil(work(d) / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
+
+    def lut(d, pf):
+        return 180 + _LUT_MAC * pf + _shuffle_lut(pf) + (
+            _LUT_ADD * pf if d.get("bias") else 0)
+
+    return register(
+        OpSpec(
+            name="conv2d",
+            linear_time=False,
+            dsp_per_pe=1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 2.0 * work(d) + (
+                d["cout"] * d["hout"] * d["wout"] if d.get("bias") else 0),
+            mem_bytes=lambda d: (
+                d["cout"] * d["cin"] * d["kh"] * d["kw"]
+                + d["cin"] * d["h"] * d["w"]
+                + d["cout"] * d["hout"] * d["wout"]
+                + (d["cout"] if d.get("bias") else 0)) * _BYTES,
+            cycles=cycles,
+            lut=lut,
+            max_pf=lambda d: max(1, work(d) // 4),
+            jax_fn_q=_q_conv2d,
+            scale_param="kernel",   # pow2·conv(x, K) ≡ conv(x, pow2·K)
+        )
+    )
+
+
+_conv2d_spec()
+
+
+def _pool_attrs(params: dict[str, Any]):
+    k = shp.normalize_2d(params["ksize"], "ksize")
+    s = shp.normalize_2d(params.get("stride", k), "stride")
+    p = shp.normalize_2d(params.get("padding", (0, 0)), "padding")
+    return k, s, p
+
+
+def _q_maxpool2d(inputs, params, dims, nq):
+    """Integer maxpool: max over the window directly on the narrow carrier
+    (dequantize is a monotone pow2 scale, so the winner matches the float
+    window max bitwise), one requantizing shift on write-back."""
+    jnp = _jnp()
+    (kh, kw), (sh, sw), (ph, pw) = _pool_attrs(params)
+    pat = _window_slices(jnp.asarray(inputs[0], jnp.int32), kh, kw, sh, sw,
+                         ph, pw, pad_value=-(2**31 - 1))
+    return _requantize(pat.max(axis=0), nq.in_exps[0] - nq.out_exp, nq.bits)
+
+
+def _q_avgpool2d(inputs, params, dims, nq):
+    """Integer avgpool: int32 window sum, then a fixed-point reciprocal
+    multiply (``round(2^s / k)`` — exact for power-of-two windows, the
+    common case) folded into the requantizing shift: SeeDot's
+    constant-division idiom, no integer divide in the datapath."""
+    jnp = _jnp()
+    (kh, kw), (sh, sw), (ph, pw) = _pool_attrs(params)
+    pat = _window_slices(jnp.asarray(inputs[0], jnp.int32), kh, kw, sh, sw,
+                         ph, pw, pad_value=0)
+    acc = pat.sum(axis=0)
+    k = kh * kw
+    s = 30 - nq.bits                 # keeps |acc·recip| ≤ q_max·2^s < 2^31
+    recip = int(round((1 << s) / k))
+    return _requantize(acc * recip, nq.in_exps[0] + s - nq.out_exp, nq.bits)
+
+
+def _make_pool(name: str, q_fn) -> OpSpec:
+    is_max = name == "maxpool2d"
+
+    def infer_dims(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        (kh, kw), stride, padding = _pool_attrs(node.params)
+        c, hout, wout = shp.pool2d_out(xs, (kh, kw), stride, padding)
+        return {"c": c, "h": int(xs[1]), "w": int(xs[2]),
+                "hout": hout, "wout": wout, "kh": kh, "kw": kw}
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        (kh, kw), stride, padding = _pool_attrs(node.params)
+        return shp.pool2d_out(xs, (kh, kw), stride, padding)
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        (kh, kw), (sh, sw), (ph, pw) = _pool_attrs(params)
+        pad = -jnp.inf if is_max else 0.0
+        pat = _window_slices(inputs[0], kh, kw, sh, sw, ph, pw, pad_value=pad)
+        return pat.max(axis=0) if is_max else pat.sum(axis=0) / (kh * kw)
+
+    def work(d):
+        return d["c"] * d["hout"] * d["wout"] * d["kh"] * d["kw"]
+
+    def cycles(d, pf):
+        return math.ceil(work(d) / pf) + 2 * _log2c(pf) + _ARB * pf + _FILL
+
+    return register(
+        OpSpec(
+            name=name,
+            linear_time=False,
+            dsp_per_pe=0 if is_max else 1,
+            infer_dims=infer_dims,
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: float(work(d)),
+            mem_bytes=lambda d: (d["c"] * d["h"] * d["w"]
+                                 + d["c"] * d["hout"] * d["wout"]) * _BYTES,
+            cycles=cycles,
+            lut=lambda d, pf: 120 + (_LUT_CMP if is_max else _LUT_ADD) * pf
+            + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, work(d) // 2),
+            jax_fn_q=q_fn,
+        )
+    )
+
+
+_make_pool("maxpool2d", _q_maxpool2d)
+_make_pool("avgpool2d", _q_avgpool2d)
+
+
+def _q_relu6(inputs, params, dims, nq):
+    """Integer relu6: clamp the carrier to [0, round(6·2^e_in)] (both bounds
+    static), one requantizing shift on write-back."""
+    jnp = _jnp()
+    q = jnp.asarray(inputs[0], jnp.int32)
+    six = int(round(6.0 * 2.0 ** nq.in_exps[0]))
+    return _requantize(jnp.clip(q, 0, six), nq.in_exps[0] - nq.out_exp,
+                       nq.bits)
+
+
+_make_elementwise(
+    "relu6",
+    lambda: (lambda a: _jnp().clip(a, 0.0, 6.0)),
+    binary=False, lut_per_pe=_LUT_CMP, jax_fn_q=_q_relu6,
+)
+
+
+def _softmax_spec() -> OpSpec:
+    """Numerically-stable softmax over the last axis.  A normalizer, not a
+    streaming op: two reductions (max, sum) bracket the exp lane, so the
+    template is non-linear-time (shufflers around the reduction trees).
+    No integer variant — like exp/sigmoid/tanh it runs the dq path
+    (fixed-point in, table-based float core, fixed-point out)."""
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        x = inputs[0]
+        e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
+        return e / jnp.sum(e, axis=-1, keepdims=True)
+
+    return register(
+        OpSpec(
+            name="softmax",
+            linear_time=False,
+            has_reduction=True,
+            dsp_per_pe=1,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=lambda dfg, node: dfg.in_shapes(node.id)[0],
+            jax_fn=jax_fn,
+            flops=lambda d: 12.0 * d["n"],
+            mem_bytes=lambda d: 2.0 * d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(6 * d["n"] / pf)
+            + 4 * _log2c(pf) + _ARB * pf + _FILL,
+            lut=lambda d, pf: 160 + _LUT_NONLIN * pf + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_softmax_spec()
+
+
+def _layernorm_spec() -> OpSpec:
+    """Layer normalization over the last axis with static affine params
+    ``gamma``/``beta`` (shape = last axis) and ``eps``.  Like softmax: a
+    reduction-bracketed normalizer, dq on the fixed-point lanes."""
+
+    def _affine(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        for p in ("gamma", "beta"):
+            if p in node.params and np.shape(node.params[p]) != (int(xs[-1]),):
+                raise ValueError(
+                    f"layernorm: {p} {np.shape(node.params[p])} vs "
+                    f"({int(xs[-1])},)")
+        return xs
+
+    def jax_fn(inputs, params, dims):
+        jnp = _jnp()
+        x = inputs[0]
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        y = (x - mu) / jnp.sqrt(var + float(params.get("eps", 1e-5)))
+        if "gamma" in params:
+            y = y * jnp.asarray(params["gamma"])
+        if "beta" in params:
+            y = y + jnp.asarray(params["beta"])
+        return y
+
+    return register(
+        OpSpec(
+            name="layernorm",
+            linear_time=False,
+            has_reduction=True,
+            dsp_per_pe=1,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=_affine,
+            jax_fn=jax_fn,
+            flops=lambda d: 9.0 * d["n"],
+            mem_bytes=lambda d: 4.0 * d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(5 * d["n"] / pf)
+            + 4 * _log2c(pf) + _ARB * pf + _FILL,
+            lut=lambda d, pf: 170 + (_LUT_NONLIN + _LUT_MAC) * pf
+            + _shuffle_lut(pf),
+            max_pf=lambda d: max(1, d["n"] // 2),
+        )
+    )
+
+
+_layernorm_spec()
+
+
+def _q_reshape(inputs, params, dims, nq):
+    """Integer flatten/reshape: pure data movement on the carrier plus the
+    (normally zero — max-abs is reshape-invariant) requantizing shift."""
+    jnp = _jnp()
+    q = jnp.asarray(inputs[0], jnp.int32)
+    shape = (tuple(int(x) for x in params["shape"]) if "shape" in params
+             else (-1,))
+    return _requantize(q.reshape(shape), nq.in_exps[0] - nq.out_exp, nq.bits)
+
+
+def _make_view(name: str) -> OpSpec:
+    """flatten / reshape: zero-FLOP layout views.  Costed as a streaming
+    copy (the FPGA template re-addresses BRAM; the TPU lane is free), kept
+    linear-time — a view never reorders the element stream."""
+    is_flatten = name == "flatten"
+
+    def out_shape(dfg, node):
+        (xs,) = dfg.in_shapes(node.id)
+        if is_flatten:
+            return shp.flatten_out(xs)
+        return shp.reshape_out(xs, tuple(int(x) for x in node.params["shape"]))
+
+    def jax_fn(inputs, params, dims):
+        if is_flatten:
+            return inputs[0].reshape(-1)
+        return inputs[0].reshape(tuple(int(x) for x in params["shape"]))
+
+    return register(
+        OpSpec(
+            name=name,
+            linear_time=True,
+            dsp_per_pe=0,
+            infer_dims=lambda dfg, node: {"n": _numel(dfg.in_shapes(node.id)[0])},
+            out_shape=out_shape,
+            jax_fn=jax_fn,
+            flops=lambda d: 0.0,
+            mem_bytes=lambda d: 2.0 * d["n"] * _BYTES,
+            cycles=lambda d, pf: math.ceil(d["n"] / pf) + _FILL,
+            lut=lambda d, pf: 60 + 2 * pf,
+            max_pf=lambda d: max(1, d["n"]),
+            jax_fn_q=_q_reshape,
+        )
+    )
+
+
+_make_view("flatten")
+_make_view("reshape")
 
 
 LINEAR_TIME_OPS = frozenset(n for n, s in _REGISTRY.items() if s.linear_time)

@@ -204,6 +204,31 @@ def calibration_inputs(dfg: DFG, n: int = 64, seed: int = 0) -> dict[str, np.nda
     }
 
 
+def _acc_rowmax(node, spec, env, pname: str, arr: np.ndarray) -> np.ndarray:
+    """Per-output-row bound on the int32 MAC accumulator, observed on the
+    calibration batch: max over samples (and spatial positions, for conv) of
+    ``Σ_j |W_ij · x_j|`` plus the folded ``|bias|`` riding the same carrier.
+    For matvec weights this is ``|x| @ |W|.T``; for conv kernels the same
+    bound is ``conv(|x|, |K|)`` (zero padding contributes nothing), reduced
+    to one value per output channel."""
+    import jax
+
+    xb = np.abs(np.asarray(env[node.inputs[0]], np.float64))
+    a = np.abs(arr)
+    if pname == "matrix":
+        xb = xb.reshape(xb.shape[0], -1)
+        b1 = (xb @ a.T).max(axis=0) if xb.size and a.size else np.zeros(a.shape[0])
+    else:                                  # conv2d kernel
+        p = dict(node.params, kernel=a.astype(np.float32))
+        p.pop("bias", None)
+        out = jax.vmap(lambda x: spec.jax_fn([x], p, node.dims))(
+            xb.astype(np.float32))
+        b1 = np.asarray(out, np.float64).max(axis=(0, 2, 3))
+    if "bias" in node.params:
+        b1 = b1 + np.abs(np.asarray(node.params["bias"], np.float64))
+    return b1
+
+
 def calibrate(
     dfg: DFG,
     calib: Mapping[str, Any] | np.ndarray | None = None,
@@ -310,42 +335,40 @@ def calibrate(
                 e = pow2_exp(abs(s), bits)
                 params_q["scalar"] = int(np.clip(round(s * 2.0**e), -qm, qm))
                 param_exps["scalar"] = e
-            for pname in ("matrix", "vec", "value"):
+            for pname in ("matrix", "kernel", "vec", "value"):
                 if pname not in node.params:
                     continue
                 arr = np.asarray(node.params[pname])
                 if pname == "value" and not np.issubdtype(arr.dtype, np.floating):
                     continue            # integer constants pass through
-                bias = (np.abs(np.asarray(node.params["bias"], np.float64))
-                        if pname == "matrix" and "bias" in node.params
-                        else None)
-                if (pname == "matrix" and per_channel
-                        and node.op in ("gemv", "spmv")):
-                    # per-channel: one exponent per output row, each capped by
-                    # the same static accumulator analysis, row-locally.
-                    row_max = np.max(np.abs(arr), axis=1) if arr.size else np.zeros(arr.shape[0])
+                is_weight = pname in ("matrix", "kernel")
+                if (is_weight and per_channel
+                        and node.op in ("gemv", "spmv", "conv2d")):
+                    # per-channel: one exponent per output row (conv: per
+                    # output channel), each capped by the same static
+                    # accumulator analysis, row-locally.
+                    a2 = arr.reshape(arr.shape[0], -1) if arr.size else arr
+                    row_max = np.max(np.abs(a2), axis=1) if arr.size else np.zeros(arr.shape[0])
                     e_rows = np.array([pow2_exp(float(m), bits) for m in row_max],
                                       np.int64)
                     e_in = exps.get(node.inputs[0]) if node.inputs else None
                     if e_in is not None:
-                        xb = np.abs(np.asarray(env[node.inputs[0]], np.float64))
-                        xb = xb.reshape(xb.shape[0], -1)
-                        b1 = (xb @ np.abs(arr).T).max(axis=0)
-                        if bias is not None:
-                            # the folded bias rides the same accumulator:
-                            # bound it together with the partial sums
-                            b1 = b1 + bias
+                        # the folded bias rides the same accumulator:
+                        # _acc_rowmax bounds it together with the partial sums
+                        b1 = _acc_rowmax(node, spec, env, pname, arr)
                         cap_rows = b1 > 0.0
                         caps = np.full_like(e_rows, _EXP_CLAMP)
                         caps[cap_rows] = (29 - e_in - np.ceil(
                             np.log2(b1[cap_rows])).astype(np.int64))
                         e_rows = np.maximum(np.minimum(e_rows, caps), -_EXP_CLAMP)
-                    params_q[pname] = quantize_np(arr, e_rows, bits)
+                    params_q[pname] = quantize_np(
+                        arr.reshape(arr.shape[0], -1), e_rows, bits
+                    ).reshape(arr.shape)
                     param_exps[pname] = e_rows
                     continue
                 e = pow2_exp(float(np.max(np.abs(arr))) if arr.size else 0.0,
                              bits)
-                if pname == "matrix" and node.inputs:
+                if is_weight and node.inputs:
                     # overflow-aware scale capping (SeeDot's static
                     # accumulator analysis): the int32 MAC accumulator
                     # holds partial sums bounded by Σ_j |W_ij·x_j| (plus
@@ -356,19 +379,16 @@ def calibrate(
                     # the int16 lane's wide reductions.
                     e_in = exps.get(node.inputs[0])
                     if e_in is not None:
-                        xb = np.abs(np.asarray(env[node.inputs[0]],
-                                               np.float64))
-                        xb = xb.reshape(xb.shape[0], -1)
-                        prods = xb @ np.abs(arr).T
-                        if bias is not None:
-                            prods = prods + bias
-                        b1 = float(prods.max()) if prods.size else 0.0
+                        b1v = _acc_rowmax(node, spec, env, pname, arr)
+                        b1 = float(b1v.max()) if b1v.size else 0.0
                         if b1 > 0.0:
                             e = min(e, 29 - e_in - math.ceil(math.log2(b1)))
                             e = max(e, -_EXP_CLAMP)
                 params_q[pname] = quantize_np(arr, e, bits)
                 param_exps[pname] = e
-            if "bias" in node.params and "matrix" in param_exps and node.inputs:
+            w_name = next((p for p in ("matrix", "kernel") if p in param_exps),
+                          None)
+            if "bias" in node.params and w_name is not None and node.inputs:
                 # folded add-of-const (algebraic rewrite): the bias is added
                 # to the int32 accumulator *before* the requantizing shift,
                 # so it is quantized at the accumulator scale 2^-(e_w+e_in)
@@ -378,7 +398,7 @@ def calibrate(
                 e_in = exps.get(node.inputs[0])
                 if e_in is not None:
                     bvec = np.asarray(node.params["bias"], np.float64)
-                    e_acc = np.asarray(param_exps["matrix"], np.int64) + int(e_in)
+                    e_acc = np.asarray(param_exps[w_name], np.int64) + int(e_in)
                     q = np.round(bvec * np.power(2.0, e_acc.astype(np.float64)))
                     params_q["bias"] = np.clip(
                         q, -(2**31 - 1), 2**31 - 1).astype(np.int32)

@@ -34,6 +34,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.core import shapes as shp
 from repro.core.dfg import DFG
 
 __all__ = ["parse", "SeeDotError"]
@@ -175,6 +176,22 @@ class _Parser:
         raise SeeDotError(f"unknown name {v!r}")
 
     # -------------------------------------------------------------- lowering
+    def _shape_of(self, ref: str) -> tuple[int, ...]:
+        """Shape of a data ref — a graph input's declared shape or a node's
+        inferred output shape (both ultimately derived through
+        :mod:`repro.core.shapes`)."""
+        if ref in self.g.graph_inputs:
+            return tuple(self.g.graph_inputs[ref].shape)
+        return tuple(self.g.out_shape(ref))
+
+    def _check(self, derive, *args, context: str):
+        """Run one shared shape-inference rule, rewording its
+        :class:`~repro.core.shapes.ShapeError` as a frontend error."""
+        try:
+            return derive(*args)
+        except shp.ShapeError as exc:
+            raise SeeDotError(f"{context}: {exc}") from None
+
     def _as_ref(self, v: _Val) -> str:
         if v.kind == "ref":
             assert v.ref is not None
@@ -208,12 +225,18 @@ class _Parser:
             w = np.asarray(a.param, dtype=np.float32)
             if w.ndim != 2:
                 raise SeeDotError(f"matrix param {a.param_name!r} must be 2-D")
-            nid = self.g.add(op, self._as_ref(b), matrix=w)
+            xr = self._as_ref(b)
+            self._check(shp.matvec_out, w.shape, self._shape_of(xr),
+                        context=f"{a.param_name} * ...")
+            nid = self.g.add(op, xr, matrix=w)
             return _Val("ref", ref=nid)
         if b.kind == "param":
             raise SeeDotError("write 'W * x', not 'x * W' (row-major matvec)")
         # both data values: dense matmul (2-D each)
-        nid = self.g.add("matmul", self._as_ref(a), self._as_ref(b))
+        ar, br = self._as_ref(a), self._as_ref(b)
+        self._check(shp.matmul_out, self._shape_of(ar), self._shape_of(br),
+                    context="'*' of two data values")
+        nid = self.g.add("matmul", ar, br)
         return _Val("ref", ref=nid)
 
     def _scalar_mul(self, a: _Val, b: _Val) -> _Val:
@@ -228,15 +251,25 @@ class _Parser:
 
     def _binary(self, op: str, a: _Val, b: _Val) -> _Val:
         if b.kind == "param":  # constant vector folded into the template
-            nid = self.g.add(op, self._as_ref(a),
-                             vec=np.asarray(b.param, dtype=np.float32))
+            ar = self._as_ref(a)
+            vec = np.asarray(b.param, dtype=np.float32)
+            self._check(shp.elementwise_out, self._shape_of(ar), vec.shape,
+                        context=f"'{op}' with param {b.param_name}")
+            nid = self.g.add(op, ar, vec=vec)
             return _Val("ref", ref=nid)
         if a.kind == "param":
             if op == "sub":
                 raise SeeDotError("'param - x' unsupported; rewrite as (x .* -1) + param")
-            nid = self.g.add(op, self._as_ref(b), vec=np.asarray(a.param, dtype=np.float32))
+            br = self._as_ref(b)
+            vec = np.asarray(a.param, dtype=np.float32)
+            self._check(shp.elementwise_out, self._shape_of(br), vec.shape,
+                        context=f"'{op}' with param {a.param_name}")
+            nid = self.g.add(op, br, vec=vec)
             return _Val("ref", ref=nid)
-        nid = self.g.add(op, self._as_ref(a), self._as_ref(b))
+        ar, br = self._as_ref(a), self._as_ref(b)
+        self._check(shp.elementwise_out, self._shape_of(ar),
+                    self._shape_of(br), context=f"'{op}'")
+        nid = self.g.add(op, ar, br)
         return _Val("ref", ref=nid)
 
 

@@ -26,6 +26,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.core import shapes as shp
 from repro.core.dfg import DFG
 from repro.frontends import seedot
 
@@ -92,12 +93,24 @@ def _emit(expr: str) -> Sym:
     return Sym(name)
 
 
+def _check_matrix(arr: Any, fn: str) -> None:
+    """Trace-time operand check through the shared shape vocabulary: a
+    malformed weight array fails here, at the call site, with the same
+    :class:`~repro.core.shapes.ShapeError` the op layer would raise —
+    not three hops later inside the emitted SeeDot program."""
+    shape = np.asarray(arr).shape
+    if len(shape) != 2:
+        raise shp.ShapeError(f"{fn}: weights must be 2-D, got {shape}")
+
+
 # ------------------------------------------------------------------ op surface
 def matmul_vec(w: Any, x: Sym) -> Sym:
+    _check_matrix(w, "matmul_vec")
     return _emit(f"{_param_name(w)} * {_ref(x)}")
 
 
 def sparse_matmul_vec(w: Any, x: Sym) -> Sym:
+    _check_matrix(w, "sparse_matmul_vec")
     return _emit(f"{_param_name(w)} |*| {_ref(x)}")
 
 
@@ -150,6 +163,7 @@ def outer(a: Sym, b: Sym) -> Sym:
 
 
 def squared_distance(x: Sym, points: Any) -> Sym:
+    _check_matrix(points, "squared_distance")
     return _emit(f"sq_l2({_ref(x)}, {_param_name(points)})")
 
 

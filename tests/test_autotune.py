@@ -235,3 +235,47 @@ def test_tuned_tiles_bitwise_neutral():
     from repro.kernels.linear_pipeline import DEFAULT_BB, DEFAULT_BN
 
     assert tuned_tiles() == (DEFAULT_BB, DEFAULT_BN)
+
+
+# ------------------------------------------------------- staleness gating
+def test_calibration_table_stamped_and_round_trips(table, tmp_path):
+    assert table.created_at > 0
+    path = tmp_path / "c.mafia-calib"
+    artifacts.save_calibration(table, path)
+    back = artifacts.load_calibration(path)
+    assert back.created_at == table.created_at
+    # the stamp is metadata, not measurement: digest must not depend on it
+    restamped = dataclasses.replace(
+        table, meta={**table.meta, "created_at": 1.0})
+    assert restamped.digest() == table.digest()
+
+
+def test_stale_calibration_falls_back_to_analytic(table):
+    import time as time_mod
+
+    stale = dataclasses.replace(
+        table, meta={**table.meta,
+                     "created_at": time_mod.time() - 90 * 86400})
+    with pytest.warns(UserWarning, match="90.0 days old"):
+        comp = MafiaCompiler(use_pallas=True, cost_source="measured",
+                             calibration=stale, max_age_days=30)
+    assert comp.cost_source == "analytic"
+    assert comp.calibrated is None
+    # warn-once: a second compiler over the same table stays silent
+    import warnings as warnings_mod
+
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")
+        again = MafiaCompiler(use_pallas=True, cost_source="measured",
+                              calibration=stale, max_age_days=30)
+    assert again.cost_source == "analytic"
+    # None disables the age gate entirely
+    off = MafiaCompiler(use_pallas=True, cost_source="measured",
+                        calibration=stale, max_age_days=None)
+    assert off.cost_source == "measured"
+
+
+def test_fresh_calibration_passes_default_age_gate(model):
+    comp = MafiaCompiler(use_pallas=True, cost_source="measured",
+                         calibration=model)
+    assert comp.cost_source == "measured" and comp.calibrated is model

@@ -1,0 +1,246 @@
+"""Rank-polymorphic tensor ops (conv/pool/normalizers/views): float
+templates against jax.lax references, fixed-point variants against their
+dequantized float oracle, the plan-time shape audit, the rank guards on
+chain fusion and the megakernel encoder, and the rewrite-neutrality fuzz
+over mixed vector+tensor DAGs."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import node_types
+from repro.core import shapes as shp
+from repro.core.compiler import MafiaCompiler
+from repro.core.dfg import DFG
+from repro.core.executor import build_callable, execute
+from repro.core.lowering import ChainStep, NodeStep, lower
+
+RNG = np.random.default_rng(20107)
+
+
+def _f32(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------------ float semantics
+def test_conv2d_matches_lax_reference():
+    x, k, b = _f32(3, 12, 12), _f32(5, 3, 3, 3), _f32(5)
+    g = DFG("c")
+    g.add_input("x", x.shape)
+    nid = g.add("conv2d", "x", kernel=k, bias=b, stride=2, padding=1)
+    g.mark_output(nid)
+    out = np.asarray(execute(g, x=x)[nid])
+    ref = jax.lax.conv_general_dilated(
+        x[None], k, window_strides=(2, 2), padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0] + b[:, None, None]
+    assert out.shape == shp.conv2d_out(x.shape, k.shape, (2, 2), (1, 1))
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("op,red", [("maxpool2d", np.max),
+                                    ("avgpool2d", np.mean)])
+def test_pool2d_matches_window_reference(op, red):
+    x = _f32(4, 8, 10)
+    g = DFG("p")
+    g.add_input("x", x.shape)
+    nid = g.add(op, "x", ksize=(2, 2))
+    g.mark_output(nid)
+    out = np.asarray(execute(g, x=x)[nid])
+    ref = red(x.reshape(4, 4, 2, 5, 2), axis=(2, 4))
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_softmax_layernorm_relu6_match_references():
+    x = _f32(6, 10)
+    gamma, beta = _f32(10), _f32(10)
+    g = DFG("n")
+    g.add_input("x", x.shape)
+    sm = g.add("softmax", "x")
+    ln = g.add("layernorm", "x", gamma=gamma, beta=beta, eps=1e-5)
+    r6 = g.add("relu6", "x")
+    g.mark_output(sm, ln, r6)
+    out = execute(g, x=x)
+    e = np.exp(x - x.max(-1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(out[sm]),
+                               e / e.sum(-1, keepdims=True), rtol=1e-5)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(out[ln]), (x - mu) / np.sqrt(var + 1e-5) * gamma + beta,
+        rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[r6]), np.clip(x, 0.0, 6.0))
+
+
+def test_flatten_reshape_are_views():
+    x = _f32(3, 4, 5)
+    g = DFG("v")
+    g.add_input("x", x.shape)
+    fl = g.add("flatten", "x")
+    rs = g.add("reshape", fl, shape=(12, 5))
+    g.mark_output(fl, rs)
+    out = execute(g, x=x)
+    np.testing.assert_array_equal(np.asarray(out[fl]), x.reshape(-1))
+    np.testing.assert_array_equal(np.asarray(out[rs]), x.reshape(12, 5))
+
+
+# ----------------------------------------------------------- int8 templates
+def _cnn_dfg():
+    g = DFG("q")
+    g.add_input("x", (3, 10, 10))
+    c = g.add("conv2d", "x", kernel=_f32(6, 3, 3, 3), bias=_f32(6), padding=1)
+    r = g.add("relu6", c)
+    p = g.add("maxpool2d", r, ksize=(2, 2))
+    a = g.add("avgpool2d", r, ksize=(2, 2))
+    f = g.add("flatten", p)
+    g.mark_output(f, a)
+    return g
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_int8_tensor_pipeline_tracks_float(per_channel):
+    g = _cnn_dfg()
+    calib = RNG.standard_normal((32, 3, 10, 10)).astype(np.float32)
+    x = calib[0]
+    pf = MafiaCompiler(use_pallas=True).compile(g)
+    p8 = MafiaCompiler(use_pallas=True, precision="int8",
+                       per_channel=per_channel).compile(g, calib={"x": calib})
+    of, o8 = pf(x=x), p8(x=x)
+    for k in of:
+        ref = np.asarray(of[k])
+        err = np.abs(np.asarray(o8[k]) - ref).max()
+        scale = max(1.0, np.abs(ref).max())
+        assert err / scale < 0.1, f"{k}: int8 err {err} vs scale {scale}"
+
+
+# ------------------------------------------------------- plan-time shape audit
+def test_plan_verify_names_node_on_shape_rule_mismatch(monkeypatch):
+    g = DFG("audit")
+    g.add_input("x", (8,))
+    g.add("relu", "x", id="r")
+    g.mark_output("r")
+    broken = dataclasses.replace(node_types.get("relu"),
+                                 out_shape=lambda dfg, node: (7,))
+    monkeypatch.setitem(node_types._REGISTRY, "relu", broken)
+    with pytest.raises(ValueError, match=r"node 'r' \(relu\).*declared"):
+        lower(g).verify()
+
+
+# ----------------------------------------------------------- rank guards
+def test_tensor_elementwise_not_fused_into_chains():
+    """A stageable op over a rank-3 value must execute as a standalone step
+    even when the scheduler hands it to the chain decomposer inside a fused
+    cluster: the pipeline kernel streams flat vectors only."""
+    g = DFG("t")
+    g.add_input("img", (2, 6, 6))
+    c = g.add("conv2d", "img", kernel=_f32(2, 2, 3, 3), padding=1)
+    r = g.add("relu", c)           # stageable op, but over a rank-3 value
+    g.mark_output(r)
+    plan = lower(g, fused_clusters=[[c, r]], use_pallas=True)
+    chained = {m for s in plan.steps if isinstance(s, ChainStep)
+               for m in s.members}
+    assert r not in chained
+    assert any(isinstance(s, NodeStep) and s.nid == r for s in plan.steps)
+    # the vector path still fuses: the same shape of cluster over flat
+    # vectors comes out as a two-stage chain
+    g2 = DFG("vec")
+    g2.add_input("x", (64,))
+    r1 = g2.add("relu", "x")
+    r2 = g2.add("scalar_mul", r1, scalar=0.5)
+    g2.mark_output(r2)
+    plan2 = lower(g2, fused_clusters=[[r1, r2]], use_pallas=True)
+    assert any(isinstance(s, ChainStep) and len(s.members) == 2
+               for s in plan2.steps)
+
+
+def test_tensor_graph_bitwise_across_exec_modes():
+    """Tensor steps the megakernel ISA cannot encode island into
+    interpreted steps — so the megakernel program must match the interpret
+    program bitwise, and both track the unjitted oracle."""
+    g = _cnn_dfg()
+    x = _f32(3, 10, 10)
+    pi = MafiaCompiler(use_pallas=True).compile(g)
+    pm = MafiaCompiler(use_pallas=True, exec_mode="megakernel").compile(g)
+    oi, om = pi(x=x), pm(x=x)
+    ref = execute(g, x=x)
+    assert set(oi) == set(om) == set(ref)
+    for k in oi:
+        np.testing.assert_array_equal(np.asarray(oi[k]), np.asarray(om[k]))
+        np.testing.assert_allclose(np.asarray(oi[k]), np.asarray(ref[k]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- rewrite-neutrality fuzz
+def _shape(g, ref):
+    if ref in g.graph_inputs:
+        return tuple(g.graph_inputs[ref].shape)
+    return tuple(g.out_shape(ref))
+
+
+def _random_mixed_dag(rng):
+    """A random DAG mixing vector and tensor ops, with deliberate const
+    subgraphs and duplicate subexpressions so prune/fold/cse all fire."""
+    g = DFG("fuzz")
+    g.add_input("x", (16,))
+    g.add_input("img", (2, 6, 6))
+    vecs = ["x"]
+    imgs = ["img"]
+    c = g.add("const", value=rng.standard_normal(16).astype(np.float32))
+    vecs.append(g.add("add", "x", c))
+    for _ in range(rng.integers(4, 9)):
+        roll = rng.random()
+        if roll < 0.35 and imgs:
+            src = imgs[rng.integers(len(imgs))]
+            ch = int(_shape(g, src)[0])
+            choice = rng.integers(3)
+            if choice == 0:
+                k = rng.standard_normal((3, ch, 3, 3)).astype(np.float32)
+                imgs.append(g.add("conv2d", src, kernel=k, padding=1))
+            elif choice == 1 and min(_shape(g, src)[1:]) >= 2:
+                op = "maxpool2d" if rng.random() < 0.5 else "avgpool2d"
+                imgs.append(g.add(op, src, ksize=(2, 2)))
+            else:
+                imgs.append(g.add("relu6", src))
+        elif roll < 0.55:
+            src = imgs[rng.integers(len(imgs))]
+            w = rng.standard_normal(
+                (8, shp.numel(_shape(g, src)))).astype(np.float32)
+            flat = g.add("flatten", src)
+            vecs.append(g.add("gemv", flat, matrix=w))
+        else:
+            a = vecs[rng.integers(len(vecs))]
+            sa = _shape(g, a)
+            peers = [v for v in vecs if _shape(g, v) == sa]
+            op = ["relu", "tanh", "softmax", "add", "hadamard"][
+                rng.integers(5)]
+            if op in ("add", "hadamard"):
+                b = peers[rng.integers(len(peers))]
+                vecs.append(g.add(op, a, b))
+            else:
+                vecs.append(g.add(op, a))
+    if imgs[-1] not in g.nodes:   # seed never drew a tensor op
+        imgs.append(g.add("relu6", "img"))
+    # duplicate subexpression for CSE to collapse
+    dup_src = vecs[-1]
+    d1 = g.add("relu", dup_src)
+    d2 = g.add("relu", dup_src)
+    m = g.add("hadamard", d1, d2)
+    g.mark_output(m, imgs[-1])
+    return g
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rewrite_pipeline_bitwise_neutral_on_mixed_dags(seed):
+    rng = np.random.default_rng(seed)
+    g = _random_mixed_dag(rng)
+    x = rng.standard_normal(16).astype(np.float32)
+    img = rng.standard_normal((2, 6, 6)).astype(np.float32)
+    oracle = execute(g, x=x, img=img)
+    plan = lower(g)
+    plan.verify()
+    out = build_callable(g, plan=plan, jit=False)(x=x, img=img)
+    assert set(out) == set(oracle)
+    for k in oracle:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(oracle[k]))
