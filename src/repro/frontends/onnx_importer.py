@@ -58,17 +58,19 @@ def _sym(v: Any) -> bool:
     return not isinstance(v, int)
 
 
-def _per_sample(shape: tuple[Any, ...], name: str) -> tuple[int, ...]:
+def _per_sample(shape: tuple[Any, ...], name: str) -> tuple[tuple[int, ...], bool]:
     """Strip the batch axis: leading symbolic or size-1 dim goes; everything
-    left must be concrete."""
-    if shape and (_sym(shape[0]) or shape[0] in (0, 1)):
+    left must be concrete.  Returns (per-sample shape, batch-axis stripped?)
+    — axis attributes on downstream nodes count the stripped axis."""
+    stripped = bool(shape) and (_sym(shape[0]) or shape[0] in (0, 1))
+    if stripped:
         shape = shape[1:]
     if any(_sym(d) or int(d) <= 0 for d in shape):
         raise OnnxImportError(
             f"graph input {name!r}: per-sample shape {shape} has "
             f"symbolic/invalid dims (only the leading batch axis may be "
             f"symbolic)")
-    return tuple(int(d) for d in shape)
+    return tuple(int(d) for d in shape), stripped
 
 
 def _pair(node: op_.NodeP, attr: str, default: tuple[int, int]) -> tuple[int, int]:
@@ -103,6 +105,7 @@ class _Importer:
         self.consts: dict[str, np.ndarray] = dict(self.g.initializers)
         self.refs: dict[str, str] = {}        # ONNX value name → DFG ref
         self.producer: dict[str, op_.NodeP] = {}  # value name → producing node
+        self.batch_offsets: set[int] = set()  # 1 per input that lost a batch axis
 
     # ------------------------------------------------------------- plumbing
     def shape_of(self, ref: str) -> tuple[int, ...]:
@@ -140,8 +143,9 @@ class _Importer:
         for name, shape in self.g.inputs.items():
             if name in self.consts:
                 continue                       # initializer listed as input
-            self.refs[name] = self.dfg.add_input(
-                name, _per_sample(shape, name))
+            ps, stripped = _per_sample(shape, name)
+            self.batch_offsets.add(1 if stripped else 0)
+            self.refs[name] = self.dfg.add_input(name, ps)
         for node in self.g.nodes:
             fn = getattr(self, f"op_{node.op_type}", None)
             if fn is None:
@@ -248,6 +252,8 @@ class _Importer:
         ksize = _pair(node, "kernel_shape", (0, 0))
         if ksize == (0, 0):
             raise UnsupportedOnnxOp(node, "kernel_shape is required")
+        if int(node.attrs.get("ceil_mode", 0)):
+            raise UnsupportedOnnxOp(node, "ceil_mode=1 (floor windows only)")
         padding = _sym_pads(node)
         if (op == "avgpool2d" and padding != (0, 0)
                 and not int(node.attrs.get("count_include_pad", 0))):
@@ -258,6 +264,13 @@ class _Importer:
                   stride=_pair(node, "strides", ksize), padding=padding)
 
     def op_MaxPool(self, node: op_.NodeP) -> None:
+        if tuple(int(d) for d in node.attrs.get("dilations", (1, 1))) != (1, 1):
+            raise UnsupportedOnnxOp(
+                node, f"dilations={tuple(node.attrs['dilations'])}")
+        if int(node.attrs.get("storage_order", 0)):
+            raise UnsupportedOnnxOp(node, "storage_order=1")
+        if len(node.outputs) > 1 and node.outputs[1]:
+            raise UnsupportedOnnxOp(node, "Indices output")
         self._pool(node, "maxpool2d")
 
     def op_AveragePool(self, node: op_.NodeP) -> None:
@@ -280,8 +293,16 @@ class _Importer:
         x = self.dyn(node, node.inputs[0])
         rank = len(self.shape_of(x))
         axis = int(node.attrs.get("axis", -1))
-        # the ONNX axis counts the batch dim; accept any spelling of "last"
-        if axis not in (-1, rank, rank - 1 if rank else -1):
+        # ONNX axes count the stripped batch dim: the full-rank tensor has
+        # rank + batch_offset axes, so "last" is spelled -1 or
+        # rank - 1 + batch_offset.  Anything else (e.g. axis=rank-1 on a
+        # batched rank>=2 per-sample tensor, or axis=0 naming the batch
+        # axis itself) is NOT the last axis and must not silently lower.
+        accepted = {-1}
+        if len(self.batch_offsets) == 1:
+            (off,) = self.batch_offsets
+            accepted.add(rank - 1 + off)
+        if axis not in accepted:
             raise UnsupportedOnnxOp(node, f"axis={axis} (last axis only)")
         self.emit(node, "softmax", [x])
 
@@ -341,7 +362,14 @@ class _Importer:
         c = b - mean * a
         prod = self.producer.get(x_name)
         ref = self.refs.get(x_name)
+        # Folding rewrites the conv in place, so it is only legal when this
+        # BatchNorm is the SOLE consumer of the conv output.  ONNX nodes are
+        # topologically sorted, so later consumers (e.g. a residual Add) are
+        # not in the DFG yet — count consumers across the whole graph, not
+        # just already-imported successors.
+        n_consumers = sum(n.inputs.count(x_name) for n in self.g.nodes)
         if (prod is not None and prod.op_type == "Conv" and ref is not None
+                and n_consumers == 1
                 and not self.dfg.successors(ref)
                 and x_name not in self.g.outputs):
             # fold into the producing conv (the standard inference-time

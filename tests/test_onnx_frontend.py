@@ -87,6 +87,47 @@ def test_unsupported_attr_names_node():
         import_onnx(data)
 
 
+def test_softmax_batch_counted_axis_rejected():
+    """ONNX softmax axes count the stripped batch dim: for a (N, 2, 8)
+    input the last axis is 2 (or -1); axis=1 is a middle axis and must
+    not silently lower as last-axis softmax."""
+    def mk(axis, in_shape):
+        return op_.build_model(
+            graph_name="sm",
+            nodes=[op_.make_node("Softmax", ["input"], ["y"], name="s0",
+                                 axis=axis)],
+            inputs=[op_.value_info("input", ("N",) + in_shape)],
+            outputs=[op_.value_info("y", ("N",) + in_shape)],
+            initializers=[])
+
+    import_onnx(mk(-1, (2, 8)))
+    import_onnx(mk(2, (2, 8)))               # full-rank last axis
+    with pytest.raises(UnsupportedOnnxOp, match="axis=1"):
+        import_onnx(mk(1, (2, 8)))           # per-sample rank-1, not last
+    # rank-1 per-sample tensor: ONNX axis 0 names the batch axis
+    import_onnx(mk(1, (8,)))
+    with pytest.raises(UnsupportedOnnxOp, match="axis=0"):
+        import_onnx(mk(0, (8,)))
+
+
+@pytest.mark.parametrize("op,attrs,detail", [
+    ("MaxPool", {"ceil_mode": 1}, "ceil_mode"),
+    ("AveragePool", {"ceil_mode": 1}, "ceil_mode"),
+    ("MaxPool", {"dilations": (2, 2)}, "dilations"),
+    ("MaxPool", {"storage_order": 1}, "storage_order"),
+])
+def test_pool_unsupported_attrs_rejected(op, attrs, detail):
+    data = op_.build_model(
+        graph_name="pool",
+        nodes=[op_.make_node(op, ["input"], ["y"], name="p0",
+                             kernel_shape=(2, 2), **attrs)],
+        inputs=[op_.value_info("input", ("N", 3, 8, 8))],
+        outputs=[op_.value_info("y", ("N", 3, 4, 4))],
+        initializers=[])
+    with pytest.raises(UnsupportedOnnxOp, match=detail):
+        import_onnx(data)
+
+
 def test_symbolic_inner_dim_rejected():
     data = _one_node_model(op_.make_node("Relu", ["input"], ["y"], name="r"))
     bad = op_.build_model(
@@ -116,6 +157,78 @@ def test_tiny_cnn_batchnorm_folds_into_conv():
     assert not any(n.op in ("hadamard", "sub") for n in dfg.nodes.values())
     ops = {n.op for n in dfg.nodes.values()}
     assert {"maxpool2d", "avgpool2d", "reshape", "gemv", "softmax"} <= ops
+
+
+def test_batchnorm_not_folded_when_conv_has_other_consumers():
+    """Residual pattern Conv→{BN, Add(bn, conv)}: the Add consumes the raw
+    conv output, so folding BN into the conv would hand it BN-scaled
+    values.  ONNX nodes are topologically sorted — the Add appears AFTER
+    the BatchNorm — so the guard must scan the whole graph, not just
+    already-imported DFG successors."""
+    from repro.core.executor import execute
+
+    rng = np.random.default_rng(0)
+    cin, cout, hw = 3, 4, 5
+    x = rng.standard_normal((cin, hw, hw)).astype(np.float32)
+    k = rng.standard_normal((cout, cin, 1, 1)).astype(np.float32)
+    scale = rng.uniform(0.5, 2.0, cout).astype(np.float32)
+    bias = rng.standard_normal(cout).astype(np.float32)
+    mean = rng.standard_normal(cout).astype(np.float32)
+    var = rng.uniform(0.5, 2.0, cout).astype(np.float32)
+    data = op_.build_model(
+        graph_name="resid",
+        nodes=[
+            op_.make_node("Conv", ["input", "k"], ["c"], name="conv0",
+                          kernel_shape=(1, 1)),
+            op_.make_node("BatchNormalization",
+                          ["c", "scale", "bias", "mean", "var"], ["bn"],
+                          name="bn0", epsilon=1e-5),
+            op_.make_node("Add", ["bn", "c"], ["y"], name="add0"),
+        ],
+        inputs=[op_.value_info("input", ("N", cin, hw, hw))],
+        outputs=[op_.value_info("y", ("N", cout, hw, hw))],
+        initializers=[op_.np_to_tensor("k", k),
+                      op_.np_to_tensor("scale", scale),
+                      op_.np_to_tensor("bias", bias),
+                      op_.np_to_tensor("mean", mean),
+                      op_.np_to_tensor("var", var)])
+    dfg = import_onnx(data)
+    # BN took the standalone-affine path; the conv kernel is untouched
+    conv = next(n for n in dfg.nodes.values() if n.op == "conv2d")
+    np.testing.assert_array_equal(np.asarray(conv.params["kernel"]), k)
+    assert any(n.op == "hadamard" for n in dfg.nodes.values())
+    # numeric oracle: y = BN(conv(x)) + conv(x), 1×1 conv = channel mix
+    c_ref = np.einsum("oi,ihw->ohw", k[:, :, 0, 0], x)
+    a = scale / np.sqrt(var + 1e-5)
+    bn_ref = a[:, None, None] * c_ref + (bias - mean * a)[:, None, None]
+    out = np.asarray(list(execute(dfg, input=x).values())[0])
+    np.testing.assert_allclose(out, bn_ref + c_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_batchnorm_not_folded_when_conv_is_graph_output():
+    """If the conv output is itself a graph output, folding would corrupt
+    it even with a single consumer node."""
+    k = np.ones((2, 2, 1, 1), np.float32)
+    data = op_.build_model(
+        graph_name="convout",
+        nodes=[
+            op_.make_node("Conv", ["input", "k"], ["c"], name="conv0",
+                          kernel_shape=(1, 1)),
+            op_.make_node("BatchNormalization",
+                          ["c", "scale", "bias", "mean", "var"], ["bn"],
+                          name="bn0"),
+        ],
+        inputs=[op_.value_info("input", ("N", 2, 3, 3))],
+        outputs=[op_.value_info("bn", ("N", 2, 3, 3)),
+                 op_.value_info("c", ("N", 2, 3, 3))],
+        initializers=[op_.np_to_tensor("k", k),
+                      op_.np_to_tensor("scale", np.ones(2, np.float32)),
+                      op_.np_to_tensor("bias", np.zeros(2, np.float32)),
+                      op_.np_to_tensor("mean", np.zeros(2, np.float32)),
+                      op_.np_to_tensor("var", np.ones(2, np.float32))])
+    dfg = import_onnx(data)
+    conv = next(n for n in dfg.nodes.values() if n.op == "conv2d")
+    np.testing.assert_array_equal(np.asarray(conv.params["kernel"]), k)
 
 
 # --------------------------------------------------------- end-to-end gates
